@@ -1,0 +1,50 @@
+"""Simulator-engine performance: cycles/second of the jitted lax.scan
+engine vs the scalar python oracle, and vmap DSE scaling (the TPU-native
+payoff claimed in DESIGN.md §2)."""
+from __future__ import annotations
+
+import time
+
+
+def run(report, n_cycles: int = 20_000):
+    import jax
+    from repro.core import DeviceUnderTest, Simulator
+    from repro.core import device as D
+    from repro.core.frontend import FrontendConfig
+
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+
+    # jitted engine, steady-state rate (exclude compile)
+    sim.run(512)  # warm
+    t0 = time.perf_counter()
+    sim.run(n_cycles)
+    dt = time.perf_counter() - t0
+    rate = n_cycles / dt
+    report("engine_cycles_per_sec", int(rate), f"{n_cycles} cycles in {dt:.2f}s")
+
+    # scalar oracle rate (issue/probe loop)
+    dut = DeviceUnderTest("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    addr = dut.addr_vec(Rank=0, BankGroup=0, Bank=0, Row=1, Column=0)
+    n_oracle = 2_000
+    t0 = time.perf_counter()
+    clk = 0
+    for i in range(n_oracle):
+        r = dut.probe("RD", addr, clk=clk)
+        if r.ready:
+            dut.issue("RD", addr, clk=clk)
+        elif dut.probe(r.preq, addr, clk=clk).timing_OK:
+            dut.issue(r.preq, addr, clk=clk)
+        clk += 2
+    dt_o = time.perf_counter() - t0
+    report("oracle_cycles_per_sec", int(2 * n_oracle / dt_o),
+           "scalar numpy reference")
+
+    # vmap DSE scaling: N configs in one compiled program
+    for n_pts in (1, 8, 32):
+        intervals = [1.0 + 0.5 * i for i in range(n_pts)]
+        t0 = time.perf_counter()
+        sim.run_batch(4_000, intervals, [1.0])
+        dt = time.perf_counter() - t0
+        report(f"dse_batch_{n_pts}_configs_s", round(dt, 2),
+               f"{n_pts * 4_000} simulated cycles total "
+               f"({n_pts * 4_000 / dt:,.0f} config-cycles/s)")

@@ -1,0 +1,72 @@
+"""Paper §2 feature ablations: dual C/A bus, split activation overhead,
+WCK sync overhead, BlockHammer/PRAC predicate cost."""
+from __future__ import annotations
+
+
+def run(report, n_cycles: int = 12_000):
+    from repro.core import (ControllerConfig, FrontendConfig, Simulator,
+                            avg_probe_latency_ns, throughput_gbps)
+    from repro.core.spec import register
+    import repro.core.standards.hbm3 as h3
+
+    # --- dual C/A vs single C/A under command-bus pressure ---
+    class HBM3_single(h3.HBM3):
+        name = "HBM3_single_bench"
+        dual_command_bus = False
+    try:
+        register(HBM3_single)
+    except Exception:
+        pass
+    overrides = {"nBL": 1, "nCCD_S": 1, "nCCD_L": 1}
+    lats = {}
+    for name in ("HBM3", "HBM3_single_bench"):
+        sim = Simulator(name, "HBM3_16Gb", "HBM3_5200",
+                        timing_overrides=overrides)
+        st = sim.run(n_cycles, interval=1.0, read_ratio=1.0)
+        lats[name] = avg_probe_latency_ns(sim.cspec, st)
+    gain = lats["HBM3_single_bench"] / lats["HBM3"]
+    report("dual_ca_probe_latency_gain", round(gain, 3),
+           f"dual={lats['HBM3']:.0f}ns single={lats['HBM3_single_bench']:.0f}ns")
+
+    # --- WCK sync overhead: sparse vs dense traffic CAS rate ---
+    sim = Simulator("LPDDR5", "LPDDR5_8Gb_x16", "LPDDR5_6400",
+                    frontend=FrontendConfig(probe_gap=64))
+    sparse = sim.run(n_cycles, interval=64.0, read_ratio=1.0)
+    dense = sim.run(n_cycles, interval=2.0, read_ratio=1.0)
+    names = sim.cspec.cmd_names
+
+    def cas_per_rd(st):
+        c = dict(zip(names, st.cmd_counts.tolist()))
+        return c["CAS_RD"] / max(c["RD"], 1)
+    report("wck_cas_per_rd_sparse", round(cas_per_rd(sparse), 3),
+           "clock expires between requests")
+    report("wck_cas_per_rd_dense", round(cas_per_rd(dense), 3),
+           "clock stays on under load")
+
+    # --- BlockHammer: deferral under hammer, neutrality under benign ---
+    ham = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    controller=ControllerConfig(blockhammer_threshold=8),
+                    frontend=FrontendConfig(pattern="random", probes=False))
+    ham.cspec.rows = 2
+    st = ham.run(n_cycles, interval=2.0, read_ratio=1.0)
+    report("blockhammer_deferrals", int(st.deferred), "hammer pattern, thr=8")
+
+    ben = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    controller=ControllerConfig(blockhammer_threshold=1024),
+                    frontend=FrontendConfig(probes=False))
+    plain = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      frontend=FrontendConfig(probes=False))
+    t1 = throughput_gbps(ben.cspec, ben.run(n_cycles, interval=2.0))
+    t2 = throughput_gbps(plain.cspec, plain.run(n_cycles, interval=2.0))
+    report("blockhammer_benign_tput_ratio", round(t1 / t2, 3),
+           "should be ~1.0")
+
+    # --- PRAC: recovery REFabs on a hot-row pattern ---
+    prac = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     controller=ControllerConfig(prac_threshold=16),
+                     frontend=FrontendConfig(pattern="random", probes=False))
+    prac.cspec.rows = 4
+    st = prac.run(n_cycles, interval=2.0, read_ratio=1.0)
+    c = dict(zip(prac.cspec.cmd_names, st.cmd_counts.tolist()))
+    report("prac_recovery_refabs", int(c["REFab"]),
+           f"vs time-based ~{n_cycles // prac.cspec.timings['nREFI']}")

@@ -1,0 +1,59 @@
+"""Paper Table 1: lines-of-source-code per DRAM standard.
+
+Counts non-blank, non-comment LOC of each Python standard in this repo and
+compares against the C++ LOC of Ramulator 2.0 as reported by the paper.
+The claim under reproduction: authoring standards in Python + codegen cuts
+LOC by ~2/3 (66.3% total in the paper).
+"""
+from __future__ import annotations
+
+import inspect
+
+# Ramulator 2.0 C++ LOC, from the paper's Table 1
+PAPER_V20_CPP = {
+    "DDR3": 325, "DDR4": 354, "DDR5": 402, "GDDR6": 327, "HBM1": 287,
+    "HBM2": 289, "LPDDR5": 395, "DDR4_VRR": 375, "DDR5_VRR": 445,
+}
+# paper's v2.1 Python LOC (for the comparison column)
+PAPER_V21_PY = {
+    "DDR3": 129, "DDR4": 161, "DDR5": 132, "GDDR6": 199, "HBM1": 133,
+    "HBM2": 146, "LPDDR5": 143, "DDR4_VRR": 18, "DDR5_VRR": 18,
+}
+
+
+def count_loc(obj) -> int:
+    src = inspect.getsource(obj)
+    return len([l for l in src.splitlines()
+                if l.strip() and not l.strip().startswith("#")
+                and not l.strip().startswith('"""')
+                and not l.strip().startswith("'''")])
+
+
+def table() -> list:
+    from repro.core import get_standard
+    from repro.core.standards import vrr
+
+    rows = []
+    for name in ("DDR3", "DDR4", "DDR5", "GDDR6", "HBM2", "LPDDR5"):
+        ours = count_loc(get_standard(name))
+        ref = PAPER_V20_CPP.get(name)
+        rows.append((name, ref, PAPER_V21_PY.get(name), ours))
+    # VRR variants: count only the extension body (_with_vrr), as the paper
+    # counts only the 18 added lines
+    vrr_loc = count_loc(vrr._with_vrr)
+    for name in ("DDR4_VRR", "DDR5_VRR"):
+        rows.append((name, PAPER_V20_CPP[name], PAPER_V21_PY[name], vrr_loc))
+    return rows
+
+
+def run(report):
+    rows = table()
+    tot_cpp = sum(r[1] for r in rows)
+    tot_ours = sum(r[3] for r in rows)
+    for name, cpp, paper_py, ours in rows:
+        red = 100.0 * (1 - ours / cpp)
+        report(f"loc_{name}", ours,
+               f"v2.0_cpp={cpp} paper_v2.1_py={paper_py} reduction={red:.1f}%")
+    report("loc_total_reduction_pct",
+           round(100.0 * (1 - tot_ours / tot_cpp), 1),
+           f"ours={tot_ours} vs v2.0_cpp={tot_cpp} (paper: 66.3%)")

@@ -1,0 +1,131 @@
+"""Roofline assembly (EXPERIMENTS.md §Roofline): read every dry-run JSON
+and derive the three terms per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+  memory     = HLO_bytes_per_device / HBM_bw                [s]
+  collective = collective_bytes_per_device / ICI_link_bw    [s]
+
+cost_analysis is per-SPMD-module, i.e. per device (verified in
+EXPERIMENTS.md §Dry-run); dry-runs are lowered with unrolled scans so loop
+bodies are fully counted (models/flags.py).  mLSTM/sLSTM token scans stay
+rolled; their per-step state FLOPs are added analytically here.
+
+MODEL_FLOPS uses the assignment convention 6·N·D (dense train) /
+6·N_active·D (MoE train) and 2·N(_active)·D for single-token decode.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D train / 2·N decode (N = active params, D = tokens)."""
+    n = rec["n_params_active"]
+    tokens = rec["global_batch"] * (rec["seq_len"]
+                                    if rec["kind"] != "decode" else 1)
+    per_tok = 6 * n if rec["kind"] == "train" else 2 * n
+    return float(per_tok) * tokens
+
+
+def _lstm_scan_correction(rec: dict) -> float:
+    """Analytic per-device FLOPs of the rolled mLSTM/sLSTM token scans."""
+    if not rec["arch"].startswith("xlstm"):
+        return 0.0
+    from repro.configs import get_arch
+    cfg = get_arch(rec["arch"])
+    H, hd = cfg.n_heads, cfg.head_dim
+    T = rec["seq_len"] if rec["kind"] != "decode" else 1
+    Bg = rec["global_batch"]
+    n_m = sum(1 for k in cfg.pattern_layers() if k == "mlstm")
+    n_s = sum(1 for k in cfg.pattern_layers() if k == "slstm")
+    # mLSTM step: C update + retrieval ~ 6·H·hd^2; sLSTM: recurrent R ~ 8·H·hd^2
+    per_tok = n_m * 6 * H * hd * hd + n_s * 8 * H * hd * hd
+    total = per_tok * T * Bg
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    mult = 3.0 if rec["kind"] == "train" else 1.0   # fwd+bwd
+    return mult * total / chips
+
+
+def derive(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops_dev = rec["cost"]["flops"] + _lstm_scan_correction(rec)
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    # the (B2-B1) probe extrapolation can go negative when GSPMD picks
+    # different strategies for the 1- vs 2-group probes; clamp to the
+    # rolled artifact's lower bound and flag (EXPERIMENTS.md §Perf)
+    rolled = rec.get("collectives_rolled", {}).get("total_bytes", 0)
+    if coll_dev < rolled:
+        coll_dev = rolled
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = flops_dev * chips
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else float("nan"),
+        "bound_step_s": max(terms.values()),
+        "roofline_frac": (terms["compute"] / max(terms.values())
+                          if max(terms.values()) > 0 else float("nan")),
+        "mem_gib_dev": (rec["memory"]["argument_bytes"]
+                        + rec["memory"]["temp_bytes"]) / 2**30,
+    }
+
+
+def load_all(results_dir: str = RESULTS_DIR) -> list:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        rec["derived"] = derive(rec)
+        out.append(rec)
+    return out
+
+
+def markdown_table(recs: list) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | useful ratio | mem GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        d = r["derived"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {d['t_compute_s']:.3e} | {d['t_memory_s']:.3e} "
+            f"| {d['t_collective_s']:.3e} | **{d['bottleneck']}** "
+            f"| {d['useful_ratio']:.2f} | {d['mem_gib_dev']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(report):
+    recs = load_all()
+    if not recs:
+        report("roofline_cells", 0, "no dry-run results yet — run "
+               "`python -m repro.launch.dryrun --all`")
+        return
+    for r in recs:
+        d = r["derived"]
+        report(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+               round(d["roofline_frac"], 3),
+               f"bottleneck={d['bottleneck']} useful={d['useful_ratio']:.2f}")
+    worst = min(recs, key=lambda r: r["derived"]["roofline_frac"])
+    report("roofline_worst_cell",
+           round(worst["derived"]["roofline_frac"], 3),
+           f"{worst['arch']} x {worst['shape']} x {worst['mesh']}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_all()))

@@ -1,0 +1,50 @@
+"""Paper Listing 1, verbatim spirit: extend DDR5 with a Victim-Row-Refresh
+(VRR) command + timing constraints in ~18 lines of user code, then verify
+the new command's timing behavior on the device under test.
+
+    PYTHONPATH=src python examples/extend_standard.py
+"""
+import math
+
+from repro.core.spec import Command, TimingConstraint, KIND_ROW, register
+from repro.core.standards.ddr5 import DDR5
+
+
+# ---- the user extension (the paper's Listing 1) --------------------------
+@register
+class DDR5_VRR_Example(DDR5):
+    name = "DDR5_VRR_Example"
+    command_meta = dict(DDR5.command_meta, VRR=Command("VRR", "bank", KIND_ROW))
+    commands = DDR5.commands + ["VRR"]
+    timing_params = DDR5.timing_params + ["nVRR"]
+    timing_constraints = DDR5.timing_constraints + [
+        TimingConstraint(level="bank", preceding=["VRR"], following=["ACT"],
+                         latency="nVRR"),
+        TimingConstraint(level="bank", preceding=["ACT"], following=["VRR"],
+                         latency="nRC"),
+        TimingConstraint(level="rank", preceding=["PRE", "PREab"],
+                         following=["VRR"], latency="nRP"),
+    ]
+    org_presets = DDR5.org_presets
+    timing_presets = {}
+
+
+for _name, _timings in DDR5.timing_presets.items():
+    _vrr = dict(_timings)
+    _vrr["nVRR"] = math.ceil(280_000 / _timings["tCK_ps"])
+    DDR5_VRR_Example.timing_presets[_name] = _vrr
+# ---- end extension --------------------------------------------------------
+
+
+from repro.core import DeviceUnderTest  # noqa: E402
+
+dut = DeviceUnderTest("DDR5_VRR_Example", "DDR5_16Gb_x8", "DDR5_4800B")
+addr = dut.addr_vec(Rank=0, BankGroup=0, Bank=0, Row=5, Column=0)
+print("nVRR =", dut.timings["nVRR"], "cycles")
+dut.issue("VRR", addr, clk=0)
+blocked = dut.probe("ACT", addr, clk=dut.timings["nVRR"] - 1)
+legal = dut.probe("ACT", addr, clk=dut.timings["nVRR"])
+print(f"ACT at nVRR-1: timing_OK={blocked.timing_OK}  (expect False)")
+print(f"ACT at nVRR:   timing_OK={legal.timing_OK}  (expect True)")
+assert not blocked.timing_OK and legal.timing_OK
+print("VRR extension behaves correctly.")

@@ -1,0 +1,9 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_launcher
+
+serve_launcher.main(["--arch", "llama3.2-1b", "--reduced",
+                     "--batch", "4", "--prompt-len", "32",
+                     "--max-new", "16"])

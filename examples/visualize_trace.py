@@ -1,0 +1,23 @@
+"""Paper §4.1 / Fig. 2: record a DRAM command trace and render the
+two-view HTML visualizer (bus utilization + command trace).
+
+    PYTHONPATH=src python examples/visualize_trace.py [standard]
+"""
+import sys
+
+from repro.core import Simulator, viz
+
+std, org, tim = {
+    "DDR5": ("DDR5", "DDR5_16Gb_x8", "DDR5_4800B"),
+    "HBM3": ("HBM3", "HBM3_16Gb", "HBM3_5200"),
+    "LPDDR5": ("LPDDR5", "LPDDR5_8Gb_x16", "LPDDR5_6400"),
+    "GDDR7": ("GDDR7", "GDDR7_16Gb_x32", "GDDR7_32"),
+}[sys.argv[1] if len(sys.argv) > 1 else "LPDDR5"]
+
+sim = Simulator(std, org, tim)
+stats, trace = sim.run(3_000, interval=2.0, read_ratio=0.75, trace=True)
+recs = viz.trace_to_records(sim.cspec, trace)
+path = viz.write_html(f"results/{std.lower()}_trace.html", sim.cspec, trace,
+                      title=f"{std} command trace ({tim})")
+print(f"{len(recs)} commands rendered -> {path}")
+print("open in a browser: zoom/offset sliders, hover for per-command info")

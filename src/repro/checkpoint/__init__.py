@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
+                                         reshard_state, save_checkpoint)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "reshard_state"]

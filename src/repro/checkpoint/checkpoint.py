@@ -1,0 +1,157 @@
+"""Mesh-agnostic checkpointing with atomic writes and elastic restore.
+
+Checkpoints store *logical* arrays (host numpy) plus a manifest
+(step, arch, mesh shape, sharding-rule hash).  Restoring onto a different
+mesh re-shards via the divisibility-aware rule chooser — the elastic-
+scaling path: a job restarted on fewer/more healthy pods resumes from the
+same checkpoint with new shardings (DESIGN.md §5).
+
+On a real multi-host deployment the np.savez writer below is replaced by a
+per-host shard writer (same manifest format); the restore path is
+unchanged because it is already logical-array based.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+
+
+def _encode(a: np.ndarray):
+    for name, (dt, view) in _EXOTIC.items():
+        if a.dtype == dt:
+            return a.view(view), name
+    return a, str(a.dtype)
+
+
+def _decode(a: np.ndarray, dtype_name: str):
+    if dtype_name in _EXOTIC:
+        return a.view(_EXOTIC[dtype_name][0])
+    return a
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten(v, f"{prefix}{k}/")
+    elif isinstance(tree, (tuple, list)) or hasattr(tree, "_fields"):
+        items = tree._asdict().items() if hasattr(tree, "_fields") else \
+            enumerate(tree)
+        for k, v in items:
+            yield from _flatten(v, f"{prefix}{k}/")
+    else:
+        yield prefix.rstrip("/"), tree
+
+
+def tree_paths(tree) -> dict:
+    return dict(_flatten(tree))
+
+
+def rules_hash(rules) -> str:
+    return hashlib.sha1(repr(rules).encode()).hexdigest()[:12]
+
+
+def save_checkpoint(path: str, step: int, state, meta: dict | None = None):
+    """Atomic: write to tmp dir, fsync, rename."""
+    flat, dtypes = {}, {}
+    for k, v in tree_paths(state).items():
+        arr, dt = _encode(np.asarray(v))
+        flat[k] = arr
+        dtypes[k] = dt
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(os.path.abspath(path)) or ".")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {"step": int(step), "keys": sorted(flat),
+                    "dtypes": dtypes, "format": 1, **(meta or {})}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return path
+
+
+def load_checkpoint(path: str, like=None):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = manifest.get("dtypes", {})
+    flat = {k: _decode(arrays[k], dtypes.get(k, str(arrays[k].dtype)))
+            for k in manifest["keys"]}
+    if like is None:
+        return flat, manifest
+    return _unflatten_like(like, flat), manifest
+
+
+def _unflatten_like(like, flat, prefix=""):
+    if isinstance(like, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/")
+                for k, v in like.items()}
+    if hasattr(like, "_fields"):
+        return type(like)(**{k: _unflatten_like(v, flat, f"{prefix}{k}/")
+                             for k, v in like._asdict().items()})
+    if isinstance(like, (tuple, list)):
+        return type(like)(_unflatten_like(v, flat, f"{prefix}{i}/")
+                          for i, v in enumerate(like))
+    key = prefix.rstrip("/")
+    arr = flat[key]
+    return arr
+
+
+def reshard_state(state, shardings):
+    """Place a (host or differently-sharded) state onto new shardings —
+    the elastic-restore step."""
+    return jax.device_put(state, shardings)
+
+
+class CheckpointManager:
+    """Rolling checkpoints: save every `interval` steps, keep `keep`."""
+
+    def __init__(self, directory: str, interval: int = 100, keep: int = 3):
+        self.directory = directory
+        self.interval = interval
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:010d}")
+
+    def maybe_save(self, step: int, state, meta=None) -> str | None:
+        if step % self.interval != 0:
+            return None
+        p = save_checkpoint(self._path(step), step, state, meta)
+        self._gc()
+        return p
+
+    def _gc(self):
+        ckpts = self.all_steps()
+        for s in ckpts[:-self.keep]:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    def all_steps(self) -> list:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("ckpt_") and os.path.exists(
+                    os.path.join(self.directory, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def restore_latest(self, like=None):
+        steps = self.all_steps()
+        if not steps:
+            return None, None
+        return load_checkpoint(self._path(steps[-1]), like)

@@ -1,0 +1,17 @@
+"""Assigned architecture configs (public-literature, see each module)."""
+from repro.configs.base import (ModelConfig, MoEConfig, ShapeConfig, SHAPES,
+                                all_archs, get_arch, register_arch,
+                                valid_cells)
+from repro.configs.recurrentgemma_2b import RECURRENTGEMMA_2B
+from repro.configs.qwen3_4b import QWEN3_4B
+from repro.configs.llama3_2_1b import LLAMA32_1B
+from repro.configs.qwen3_14b import QWEN3_14B
+from repro.configs.glm4_9b import GLM4_9B
+from repro.configs.phi3_5_moe import PHI35_MOE
+from repro.configs.llama4_maverick import LLAMA4_MAVERICK
+from repro.configs.qwen2_vl_72b import QWEN2_VL_72B
+from repro.configs.xlstm_350m import XLSTM_350M
+from repro.configs.musicgen_medium import MUSICGEN_MEDIUM
+
+__all__ = ["ModelConfig", "MoEConfig", "ShapeConfig", "SHAPES", "all_archs",
+           "get_arch", "register_arch", "valid_cells"]

@@ -1,0 +1,25 @@
+"""Ramulator-2.1-in-JAX: composable, vectorized DRAM memory-system simulator.
+
+Public surface:
+  * ``repro.core.standards`` — the modeled DRAM standards (extend per
+    Listing 1 of the paper, see ``examples/extend_standard.py``)
+  * ``Simulator`` — cycle-level engine (lax.scan) with vmap DSE batching
+  * ``DeviceUnderTest`` — fine-grained probe API (paper Listing 2)
+  * ``ControllerConfig`` / filtering predicates — paper §2
+"""
+from repro.core import standards  # noqa: F401  (populates the registry)
+from repro.core.compile import CompiledSpec, compile_spec
+from repro.core.controller import ControllerConfig
+from repro.core.dut import DeviceUnderTest
+from repro.core.engine import (Simulator, avg_probe_latency_ns, peak_gbps,
+                               throughput_gbps)
+from repro.core.frontend import FrontendConfig
+from repro.core.spec import (Command, DRAMSpec, Organization,
+                             TimingConstraint, all_standards, get_standard)
+
+__all__ = [
+    "CompiledSpec", "compile_spec", "ControllerConfig", "DeviceUnderTest",
+    "Simulator", "FrontendConfig", "Command", "DRAMSpec", "Organization",
+    "TimingConstraint", "all_standards", "get_standard", "standards",
+    "throughput_gbps", "peak_gbps", "avg_probe_latency_ns",
+]

@@ -1,0 +1,74 @@
+"""Address mappers: physical address -> DRAM address vector.
+
+Used by the trace-driven frontend and examples.  Mapper names follow
+Ramulator convention: ordering of Row / Bank(+group) / Rank / Column /
+Channel fields from MSB to LSB.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.compile import CompiledSpec
+
+
+def _field_bits(n: int) -> int:
+    return max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+def split_fields(addr: np.ndarray, widths: list) -> list:
+    """Split a linear address into fields, LSB-first widths list."""
+    out = []
+    a = np.asarray(addr, np.int64)
+    for w in widths:
+        out.append(a & ((1 << w) - 1))
+        a = a >> w
+    return out
+
+
+class AddressMapper:
+    """order: field names LSB->MSB, e.g. RoBaRaCoCh reads MSB->LSB as
+    Row | Bank | Rank | Column | Channel."""
+
+    def __init__(self, cspec: CompiledSpec, order: str = "RoBaRaCoCh",
+                 tx_bytes: int | None = None):
+        self.cspec = cspec
+        self.order = order
+        self.tx_bits = _field_bits(tx_bytes or cspec.access_bytes)
+        sub_levels = cspec.levels[1:]
+        bank_like = [lv for lv in sub_levels if lv in ("bankgroup", "bank")]
+        rank_like = [lv for lv in sub_levels if lv not in ("bankgroup", "bank")]
+        counts = {lv: int(cspec.level_counts[i + 1])
+                  for i, lv in enumerate(sub_levels)}
+        field_defs = {
+            "Ch": [("channel", 1)],
+            "Ra": [(lv, counts[lv]) for lv in rank_like],
+            "Ba": [(lv, counts[lv]) for lv in bank_like],
+            "Ro": [("row", cspec.rows)],
+            "Co": [("col", cspec.columns)],
+        }
+        # parse the order string into 2-char tokens, MSB -> LSB
+        toks = [order[i:i + 2] for i in range(0, len(order), 2)]
+        lsb_first = []
+        for tok in reversed(toks):
+            lsb_first.extend(field_defs[tok])
+        self.layout = lsb_first   # [(name, count), ...] LSB-first
+
+    def map(self, addr):
+        """addr (bytes) -> dict of address fields (vectorized)."""
+        a = np.asarray(addr, np.int64) >> self.tx_bits
+        out = {}
+        for name, count in self.layout:
+            bits = _field_bits(count)
+            out[name] = (a & ((1 << bits) - 1)).astype(np.int32)
+            a = a >> bits
+        return out
+
+    def to_sub_row_col(self, addr):
+        """addr -> (sub[levels-1], row, col) arrays for the engine/DUT."""
+        f = self.map(addr)
+        sub = np.stack([f.get(lv, np.zeros_like(f["row"]))
+                        for lv in self.cspec.levels[1:]], axis=-1)
+        return sub, f["row"], f["col"]
+
+
+MAPPERS = ["RoBaRaCoCh", "RoRaBaCoCh", "RoCoBaRaCh"]

@@ -1,0 +1,174 @@
+"""Spec "code generation": lower a Python DRAM spec to dense numpy tables.
+
+This is the analogue of Ramulator 2.1's generator that turns Python DRAM
+specifications into low-level C++ — here the low-level target is the array
+program consumed by the cycle-level JAX engine:
+
+  * a constraint table  (prev_cmd, next_cmd, level, latency, window)
+  * per-command metadata vectors (kind, scope level, effect bitmask)
+  * hierarchy-node indexing (flattened channel/rank/bankgroup/bank tree)
+  * resolved timing preset (latency *expressions* -> cycles)
+
+Everything here is plain numpy; the engine wraps these in jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.core import spec as S
+
+_TOKEN = re.compile(r"([+-]?)\s*([A-Za-z_][A-Za-z_0-9]*|\d+)")
+
+
+def resolve_latency(expr, timings: dict) -> int:
+    """Resolve a latency expression ("nCWL+nBL+nWR", "nBL+2", 7) to cycles."""
+    if isinstance(expr, int):
+        return expr
+    total, matched = 0, 0
+    for sign, tok in _TOKEN.findall(expr):
+        matched += 1
+        val = int(tok) if tok.isdigit() else timings[tok]
+        total += -val if sign == "-" else val
+    if matched == 0:
+        raise ValueError(f"bad latency expression {expr!r}")
+    return total
+
+
+@dataclasses.dataclass
+class CompiledSpec:
+    """Dense-table form of one (standard, org preset, timing preset)."""
+    name: str
+    levels: list                    # level names, levels[0] == "channel"
+    level_counts: np.ndarray        # per-level fan-out (channel count == 1)
+    level_offsets: np.ndarray       # node-index base per level
+    num_nodes: int
+    n_banks: int
+    n_refresh_units: int            # ranks / pseudochannels
+    rows: int
+    columns: int
+
+    cmd_names: list
+    n_cmds: int
+    cmd_kind: np.ndarray            # KIND_* per command
+    cmd_scope: np.ndarray           # level index per command
+    cmd_fx: np.ndarray              # FX_* bitmask per command
+
+    # constraint table
+    ct_prev: np.ndarray
+    ct_next: np.ndarray
+    ct_level: np.ndarray
+    ct_lat: np.ndarray
+    ct_win: np.ndarray
+    max_window: int
+
+    timings: dict                   # resolved preset (cycles)
+    tCK_ps: int
+    read_latency: int               # RD issue -> data completion
+    access_bytes: int
+    peak_bytes_per_cycle: float
+
+    # feature flags + special command ids (-1 when absent)
+    split_activation: bool
+    data_clock_sync: bool
+    dual_command_bus: bool
+    id_ACT: int; id_ACT1: int; id_ACT2: int
+    id_PRE: int; id_PREab: int; id_RD: int; id_WR: int; id_REFab: int
+    id_CAS_RD: int; id_CAS_WR: int; id_RCKSTRT: int
+    nAAD: int                       # ACT2 deadline (0 if n/a)
+    clock_idle: int                 # WCK/RCK idle expiry (0 if n/a)
+
+    # provenance for proxies / checkpointing
+    standard: str = ""
+    org_preset: str = ""
+    timing_preset: str = ""
+
+    def cmd_id(self, name: str) -> int:
+        return self.cmd_names.index(name)
+
+    def addr_strides(self) -> np.ndarray:
+        """Strides to flatten per-level indices into a flat bank id."""
+        counts = self.level_counts[1:]          # below channel
+        strides = np.ones(len(counts), dtype=np.int64)
+        for i in range(len(counts) - 2, -1, -1):
+            strides[i] = strides[i + 1] * counts[i + 1]
+        return strides
+
+
+def compile_spec(standard, org_preset: str, timing_preset: str,
+                 timing_overrides: dict | None = None) -> CompiledSpec:
+    if isinstance(standard, str):
+        standard = S.get_standard(standard)
+    org: S.Organization = standard.org_presets[org_preset]
+    timings = dict(standard.timing_presets[timing_preset])
+    if timing_overrides:
+        timings.update(timing_overrides)
+
+    levels = list(standard.levels)
+    counts = [1] + [org.counts[lv] for lv in levels[1:]]
+    # cumulative node counts per level: channel=1, rank=R, bankgroup=R*BG, ...
+    sizes, acc = [], 1
+    for c in counts:
+        acc *= c
+        sizes.append(acc)
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    num_nodes = int(np.sum(sizes))
+    n_banks = sizes[-1]
+    n_refresh_units = sizes[1] if len(sizes) > 1 else 1
+
+    cmd_names = list(standard.commands)
+    n_cmds = len(cmd_names)
+    meta = standard.command_meta
+    kind = np.array([meta[c].kind for c in cmd_names], dtype=np.int32)
+    scope = np.array([levels.index(meta[c].scope) for c in cmd_names], dtype=np.int32)
+    fx = np.array([meta[c].effects for c in cmd_names], dtype=np.int32)
+
+    prev, nxt, lvl, lat, win = [], [], [], [], []
+    for tc in standard.timing_constraints:
+        latency = resolve_latency(tc.latency, timings)
+        for p in tc.preceding:
+            for f in tc.following:
+                prev.append(cmd_names.index(p))
+                nxt.append(cmd_names.index(f))
+                lvl.append(levels.index(tc.level))
+                lat.append(latency)
+                win.append(tc.window)
+    ct_prev = np.array(prev, dtype=np.int32)
+    ct_next = np.array(nxt, dtype=np.int32)
+    ct_level = np.array(lvl, dtype=np.int32)
+    ct_lat = np.array(lat, dtype=np.int32)
+    ct_win = np.array(win, dtype=np.int32)
+    max_window = int(ct_win.max()) if len(win) else 1
+
+    def cid(name):
+        return cmd_names.index(name) if name in cmd_names else -1
+
+    access_bytes = org.dq * standard.burst_beats // 8
+    nBL = timings["nBL"]
+    read_latency = timings["nCL"] + nBL
+
+    return CompiledSpec(
+        name=standard.name, levels=levels,
+        level_counts=np.array(counts, dtype=np.int64),
+        level_offsets=offsets, num_nodes=num_nodes, n_banks=n_banks,
+        n_refresh_units=n_refresh_units, rows=org.rows, columns=org.columns,
+        cmd_names=cmd_names, n_cmds=n_cmds, cmd_kind=kind, cmd_scope=scope,
+        cmd_fx=fx, ct_prev=ct_prev, ct_next=ct_next, ct_level=ct_level,
+        ct_lat=ct_lat, ct_win=ct_win, max_window=max_window,
+        timings=timings, tCK_ps=timings["tCK_ps"], read_latency=read_latency,
+        access_bytes=access_bytes,
+        peak_bytes_per_cycle=access_bytes / nBL,
+        split_activation=standard.split_activation,
+        data_clock_sync=standard.data_clock_sync,
+        dual_command_bus=standard.dual_command_bus,
+        id_ACT=cid("ACT"), id_ACT1=cid("ACT1"), id_ACT2=cid("ACT2"),
+        id_PRE=cid("PRE"), id_PREab=cid("PREab"), id_RD=cid("RD"),
+        id_WR=cid("WR"), id_REFab=cid("REFab"), id_CAS_RD=cid("CAS_RD"),
+        id_CAS_WR=cid("CAS_WR"), id_RCKSTRT=cid("RCKSTRT"),
+        nAAD=timings.get("nAAD", 0),
+        clock_idle=timings.get("nWCKIDLE", timings.get("nRCKIDLE", 0)),
+        standard=standard.name, org_preset=org_preset,
+        timing_preset=timing_preset,
+    )

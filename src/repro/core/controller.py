@@ -1,0 +1,418 @@
+"""Memory-controller base scheduling workflow + filtering predicates.
+
+This is the paper's central software-architecture contribution (§2): one
+*common* command-selection pipeline that every controller specializes by
+injecting *filtering predicates* — composable functions producing boolean
+masks over the request queue:
+
+  * HBM3/4, GDDR7 dual C/A bus  -> run the pipeline twice per cycle with a
+    column-command mask then a row-command mask;
+  * LPDDR5/6 split activation   -> predicates that (a) let only requests
+    that already issued ACT-1 proceed to ACT-2 and (b) prioritize a pending
+    ACT-2 as its tAAD deadline approaches;
+  * WCK/RCK data-clock sync     -> the prerequisite decoder injects
+    CAS_RD/CAS_WR/RCKSTRT before column commands when the clock is off;
+  * BlockHammer                 -> defer ACTs to blacklisted (hammered) rows;
+  * PRAC                        -> alert-driven recovery (RFM) that ordinary
+    requests must not interfere with.
+
+All of it is vectorized: a predicate is `(PredCtx) -> bool[Q]`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import device as D
+from repro.core import spec as S
+from repro.core.compile import CompiledSpec
+from repro.core.scheduler import SCHEDULERS
+
+# --------------------------------------------------------------------------
+# Queue / controller state
+# --------------------------------------------------------------------------
+
+
+class Queue(NamedTuple):
+    valid: jnp.ndarray      # (Q,) bool
+    is_write: jnp.ndarray   # (Q,) bool
+    is_probe: jnp.ndarray   # (Q,) bool
+    sub: jnp.ndarray        # (Q, L-1) per-level indices below channel
+    row: jnp.ndarray        # (Q,)
+    col: jnp.ndarray        # (Q,)
+    arrive: jnp.ndarray     # (Q,)
+
+
+def empty_queue(cspec: CompiledSpec, depth: int) -> Queue:
+    nsub = len(cspec.levels) - 1
+    z = lambda *sh: jnp.zeros(sh, jnp.int32)
+    return Queue(valid=jnp.zeros((depth,), bool),
+                 is_write=jnp.zeros((depth,), bool),
+                 is_probe=jnp.zeros((depth,), bool),
+                 sub=z(depth, nsub), row=z(depth), col=z(depth),
+                 arrive=z(depth))
+
+
+def queue_insert(q: Queue, is_write, is_probe, sub, row, col, arrive, want):
+    """Insert one request into the first free slot (returns (q', ok))."""
+    free = ~q.valid
+    ok = want & jnp.any(free)
+    slot = jnp.argmax(free)          # first free slot
+    def put(a, v):
+        return a.at[slot].set(jnp.where(ok, v, a[slot]))
+    return Queue(valid=put(q.valid, ok | q.valid[slot]),
+                 is_write=put(q.is_write, is_write),
+                 is_probe=put(q.is_probe, is_probe),
+                 sub=q.sub.at[slot].set(jnp.where(ok, sub, q.sub[slot])),
+                 row=put(q.row, row), col=put(q.col, col),
+                 arrive=put(q.arrive, arrive)), ok
+
+
+class CtrlState(NamedTuple):
+    dev: D.DeviceState
+    queue: Queue
+    hit_streak: jnp.ndarray   # (n_banks,) consecutive row-hit services
+    bh_sketch: jnp.ndarray    # (2, SKETCH) BlockHammer count-min sketch
+    prac_count: jnp.ndarray   # (n_banks,) ACT counter since last recovery
+
+
+SKETCH = 1024
+
+
+def init_ctrl_state(cspec: CompiledSpec, depth: int) -> CtrlState:
+    return CtrlState(dev=D.init_state(cspec),
+                     queue=empty_queue(cspec, depth),
+                     hit_streak=jnp.zeros((cspec.n_banks,), jnp.int32),
+                     bh_sketch=jnp.zeros((2, SKETCH), jnp.int32),
+                     prac_count=jnp.zeros((cspec.n_banks,), jnp.int32))
+
+
+class PredCtx(NamedTuple):
+    """Everything a filtering predicate may look at."""
+    dp: D.DynParams
+    cs: CtrlState
+    clk: jnp.ndarray
+    cand_cmd: jnp.ndarray     # (Q,) candidate command per slot
+    cand_row: jnp.ndarray     # (Q,)
+    open_hit: jnp.ndarray     # (Q,) request's row is open
+    bank: jnp.ndarray         # (Q,) flat bank ids
+    ru: jnp.ndarray           # (Q,) refresh-unit ids
+    ref_urgent: jnp.ndarray   # (n_refresh_units,) refresh must go first
+
+
+Predicate = Callable[..., jnp.ndarray]   # (cspec, ctx) -> bool[Q]
+
+# --------------------------------------------------------------------------
+# Built-in filtering predicates (paper §2)
+# --------------------------------------------------------------------------
+
+
+def pred_refresh_urgency(cspec, ctx):
+    """Block requests to a refresh unit whose refresh is overdue-urgent."""
+    return ~ctx.ref_urgent[ctx.ru]
+
+
+def pred_act2_exclusive(cspec, ctx):
+    """LPDDR5/6: when a pending ACT-2 approaches its tAAD deadline, only
+    ACT-2 candidates may issue (nothing may interrupt it)."""
+    if not cspec.split_activation:
+        return jnp.ones_like(ctx.cand_cmd, bool)
+    pending = ctx.cs.dev.row_state[ctx.bank] == D.ROW_ACTIVATING
+    deadline = ctx.cs.dev.act1_clk[ctx.bank] + ctx.dp.nAAD
+    urgent = pending & (ctx.clk + 2 >= deadline)       # slack of one slot
+    is_act2 = ctx.cand_cmd == jnp.int32(cspec.id_ACT2)
+    return jnp.where(jnp.any(urgent), is_act2 & urgent, True)
+
+
+def pred_act2_follows_act1(cspec, ctx):
+    """LPDDR5/6: only a request whose bank is Activating may issue ACT-2
+    (the prerequisite decoder guarantees it targets the pending row)."""
+    if not cspec.split_activation:
+        return jnp.ones_like(ctx.cand_cmd, bool)
+    is_act2 = ctx.cand_cmd == jnp.int32(cspec.id_ACT2)
+    activating = ctx.cs.dev.row_state[ctx.bank] == D.ROW_ACTIVATING
+    return ~is_act2 | activating
+
+
+def _bh_hashes(bank, row):
+    k = (bank.astype(jnp.uint32) * jnp.uint32(1_000_003)
+         + row.astype(jnp.uint32))
+    h0 = ((k * jnp.uint32(2654435761)) >> jnp.uint32(5)) % jnp.uint32(SKETCH)
+    h1 = (k * jnp.uint32(40503) + jnp.uint32(2057)) % jnp.uint32(SKETCH)
+    return h0.astype(jnp.int32), h1.astype(jnp.int32)
+
+
+def make_pred_blockhammer(threshold: int):
+    """BlockHammer [65]: defer ACTs to rows whose estimated activation count
+    exceeds the blacklist threshold."""
+    def pred(cspec, ctx):
+        opener = cspec.id_ACT1 if cspec.split_activation else cspec.id_ACT
+        is_open_cmd = ctx.cand_cmd == jnp.int32(opener)
+        h0, h1 = _bh_hashes(ctx.bank, ctx.cand_row)
+        est = jnp.minimum(ctx.cs.bh_sketch[0, h0], ctx.cs.bh_sketch[1, h1])
+        return ~(is_open_cmd & (est >= threshold))
+    return pred
+
+
+def make_pred_prac(threshold: int):
+    """PRAC [66-68]: once a bank's activation counter crosses the alert
+    threshold, ordinary requests to its refresh unit are blocked until the
+    recovery (RFM, modeled as a priority REFab) completes."""
+    def pred(cspec, ctx):
+        banks_per_ru = cspec.n_banks // cspec.n_refresh_units
+        per_bank_alert = ctx.cs.prac_count >= threshold
+        ru_alert = jnp.max(per_bank_alert.reshape(cspec.n_refresh_units,
+                                                  banks_per_ru), axis=1)
+        return ~ru_alert[ctx.ru]
+    return pred
+
+
+PREDICATES = {
+    "refresh_urgency": lambda cspec, ctx: pred_refresh_urgency(cspec, ctx),
+    "act2_exclusive": pred_act2_exclusive,
+    "act2_follows_act1": pred_act2_follows_act1,
+}
+
+# --------------------------------------------------------------------------
+# Controller configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    scheduler: str = "FRFCFS"
+    queue_depth: int = 32
+    refresh_enabled: bool = True
+    # urgency margin: refresh becomes *blocking* this many cycles past due
+    refresh_urgent_margin: int = 4
+    blockhammer_threshold: int = 0     # 0 = disabled
+    prac_threshold: int = 0            # 0 = disabled
+    extra_predicates: tuple = ()       # user predicates (cspec, ctx)->bool[Q]
+
+    def predicates(self) -> tuple:
+        preds = [pred_refresh_urgency, pred_act2_follows_act1,
+                 pred_act2_exclusive]
+        if self.blockhammer_threshold:
+            preds.append(make_pred_blockhammer(self.blockhammer_threshold))
+        if self.prac_threshold:
+            preds.append(make_pred_prac(self.prac_threshold))
+        return tuple(preds) + tuple(self.extra_predicates)
+
+
+class StepEvents(NamedTuple):
+    """What happened this cycle (static shape; -1 == nothing)."""
+    cmd: jnp.ndarray          # (2,) issued command per bus slot [col, row]
+    bank: jnp.ndarray         # (2,)
+    row: jnp.ndarray          # (2,)
+    served_read: jnp.ndarray      # bool — a read's final RD issued
+    served_write: jnp.ndarray     # bool
+    served_probe: jnp.ndarray     # bool — the read served was a probe
+    probe_latency: jnp.ndarray    # i32 completion - arrival (valid if probe)
+    probe_completion: jnp.ndarray  # i32 absolute completion clock
+    deferred: jnp.ndarray         # i32 candidates masked by predicates
+
+
+# --------------------------------------------------------------------------
+# The base scheduling workflow (paper §2) — one pipeline, many controllers
+# --------------------------------------------------------------------------
+
+
+def _candidates(cspec, dp, cs, clk):
+    q = cs.queue
+    pre = jax.vmap(partial(D.prereq, cspec, dp, cs.dev),
+                   in_axes=(0, 0, 0, None))
+    cand_cmd, cand_row, open_hit = pre(q.is_write, q.sub, q.row, clk)
+    earliest = jax.vmap(partial(D.earliest_ready, cspec, dp, cs.dev))(
+        cand_cmd, q.sub)
+    timing_ready = clk >= earliest
+    return cand_cmd, cand_row, open_hit, timing_ready
+
+
+def _refresh_plan(cspec, dp, cs, clk, cfg: ControllerConfig):
+    """Per-refresh-unit refresh state: due / urgent / candidate command."""
+    dev = cs.dev
+    due_time = (clk - dev.last_ref) >= dp.nREFI
+    # PRAC recovery requests ride the refresh engine (priority REFab)
+    if cfg.prac_threshold:
+        banks_per_ru = cspec.n_banks // cspec.n_refresh_units
+        alert = jnp.max((cs.prac_count >= cfg.prac_threshold).reshape(
+            cspec.n_refresh_units, banks_per_ru), axis=1)
+        due = due_time | alert
+    else:
+        due = due_time
+    urgent = (clk - dev.last_ref) >= (dp.nREFI + cfg.refresh_urgent_margin)
+    if cfg.prac_threshold:
+        urgent = urgent | (due & ~due_time)    # PRAC alerts are always urgent
+    urgent = urgent & due
+    if not cfg.refresh_enabled:
+        due = jnp.zeros_like(due)
+        urgent = jnp.zeros_like(urgent)
+    banks_per_ru = cspec.n_banks // cspec.n_refresh_units
+    any_open = jnp.any(
+        dev.row_state.reshape(cspec.n_refresh_units, banks_per_ru)
+        != D.ROW_CLOSED, axis=1)
+    ref_cmd = jnp.where(any_open, jnp.int32(cspec.id_PREab),
+                        jnp.int32(cspec.id_REFab))
+    return due, urgent, ref_cmd
+
+
+def _ru_addr(cspec, ru):
+    """Address-vector stand-in for a refresh-unit-scoped command."""
+    nsub = len(cspec.levels) - 1
+    sub = jnp.zeros((nsub,), jnp.int32).at[0].set(ru)
+    return sub
+
+
+def _try_issue_refresh(cspec, dp, cs, clk, due, urgent, ref_cmd,
+                       kind_mask_ok):
+    """Issue the refresh-engine command of the most-overdue due unit.
+
+    Refresh is *opportunistic* until urgent: a merely-due refresh yields to
+    pending requests targeting the same unit; an urgent one preempts (the
+    ``refresh_urgency`` predicate blocks those requests at the same time).
+    """
+    score = jnp.where(due, clk - cs.dev.last_ref, -1)
+    ru = jnp.argmax(score)
+    cmd = ref_cmd[ru]
+    sub = _ru_addr(cspec, ru)
+    ok_kind = kind_mask_ok[cmd]
+    ready = D.timing_ok(cspec, dp, cs.dev, cmd, sub, clk)
+    q = cs.queue
+    pending_here = jnp.any(q.valid & (q.sub[:, 0] == ru))
+    may_go = urgent[ru] | ~pending_here
+    do = jnp.any(due) & ready & ok_kind & may_go
+    dev = D.issue(cspec, dp, cs.dev, cmd, sub, jnp.int32(0), clk, do)
+    # PRAC: recovery resets the unit's activation counters
+    banks_per_ru = cspec.n_banks // cspec.n_refresh_units
+    bank_ru = jnp.arange(cspec.n_banks, dtype=jnp.int32) // banks_per_ru
+    is_ref = do & (cmd == jnp.int32(cspec.id_REFab))
+    prac = jnp.where(is_ref & (bank_ru == ru), 0, cs.prac_count)
+    return cs._replace(dev=dev, prac_count=prac), do, cmd
+
+
+def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
+    """One pass of the base pipeline restricted to commands with
+    kind_ok[kind] == True (dual C/A runs this twice, paper §2)."""
+    q = cs.queue
+    cand_cmd, cand_row, open_hit, timing_ready = _candidates(cspec, dp, cs, clk)
+    bank = jax.vmap(partial(D.flat_bank, cspec))(q.sub)
+    ru = q.sub[:, 0]
+
+    due, urgent, ref_cmd = _refresh_plan(cspec, dp, cs, clk, cfg)
+    ctx = PredCtx(dp=dp, cs=cs, clk=clk, cand_cmd=cand_cmd,
+                  cand_row=cand_row, open_hit=open_hit, bank=bank, ru=ru,
+                  ref_urgent=urgent)
+
+    kind_mask = jnp.asarray(cspec.cmd_kind)
+    cand_kind_ok = kind_ok[kind_mask[cand_cmd]]
+
+    mask = q.valid & timing_ready & cand_kind_ok
+    pre_pred = mask
+    for p in preds:
+        mask = mask & p(cspec, ctx)
+    deferred = jnp.sum(pre_pred & ~mask)
+
+    # refresh engine first (its commands obey the same kind restriction)
+    ref_kind_ok = kind_ok[kind_mask]
+    cs, ref_issued, ref_cmd_done = _try_issue_refresh(
+        cspec, dp, cs, clk, due, urgent, ref_cmd, ref_kind_ok)
+
+    slot, ok = sched_fn(mask & ~ref_issued, open_hit, q.arrive)
+    do = ok & ~ref_issued
+
+    cmd = cand_cmd[slot]
+    sub = q.sub[slot]
+    rowv = cand_row[slot]
+    dev = D.issue(cspec, dp, cs.dev, cmd, sub, rowv, clk, do)
+
+    fx = jnp.asarray(cspec.cmd_fx)[cmd]
+    fin_rd = do & ((fx & S.FX_FINAL_RD) != 0)
+    fin_wr = do & ((fx & S.FX_FINAL_WR) != 0)
+    served = fin_rd | fin_wr
+    valid = q.valid.at[slot].set(jnp.where(served, False, q.valid[slot]))
+
+    # row-hit streak bookkeeping (FRFCFS-Cap support)
+    b = bank[slot]
+    streak = cs.hit_streak
+    streak = jnp.where(served, streak.at[b].add(1), streak)
+    opener = cspec.id_ACT1 if cspec.split_activation else cspec.id_ACT
+    streak = jnp.where(do & (cmd == jnp.int32(opener)),
+                       streak.at[b].set(0), streak)
+
+    # BlockHammer sketch update on row-open
+    sk = cs.bh_sketch
+    if cfg.blockhammer_threshold:
+        h0, h1 = _bh_hashes(b, rowv)
+        is_open_cmd = do & (cmd == jnp.int32(opener))
+        sk = jnp.where(is_open_cmd,
+                       sk.at[0, h0].add(1).at[1, h1].add(1), sk)
+        sk = jnp.where(clk % jnp.int32(dp.nREFI) == 0, sk // 2, sk)
+    prac = cs.prac_count
+    if cfg.prac_threshold:
+        is_open_cmd = do & (cmd == jnp.int32(opener))
+        prac = jnp.where(is_open_cmd, prac.at[b].add(1), prac)
+
+    probe = fin_rd & q.is_probe[slot]
+    completion = clk + dp.read_latency
+    ev = dict(
+        cmd=jnp.where(do, cmd,
+                      jnp.where(ref_issued, ref_cmd_done, jnp.int32(-1))),
+        bank=jnp.where(do, b, jnp.int32(-1)),
+        row=jnp.where(do, rowv, jnp.int32(-1)),
+        served_read=fin_rd, served_write=fin_wr, served_probe=probe,
+        probe_latency=jnp.where(probe, completion - q.arrive[slot], 0),
+        probe_completion=jnp.where(probe, completion, 0),
+        deferred=deferred,
+    )
+    cs = cs._replace(dev=dev, queue=q._replace(valid=valid),
+                     hit_streak=streak, bh_sketch=sk, prac_count=prac)
+    return cs, ev
+
+
+def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
+                    cs: CtrlState, clk) -> tuple:
+    """One controller cycle.  Dual-C/A standards run the selection pipeline
+    twice — a column pass and a row pass (paper §2); others run it once."""
+    preds = cfg.predicates()
+    sched_fn = SCHEDULERS[cfg.scheduler]
+    n_kinds = 4
+
+    if cspec.dual_command_bus:
+        col_ok = jnp.asarray(
+            [k in (S.KIND_COL, S.KIND_SYNC) for k in range(n_kinds)])
+        row_ok = jnp.asarray(
+            [k in (S.KIND_ROW, S.KIND_REF) for k in range(n_kinds)])
+        cs, ev_col = _select_and_issue(cspec, dp, cs, clk, cfg, preds,
+                                       col_ok, sched_fn)
+        cs, ev_row = _select_and_issue(cspec, dp, cs, clk, cfg, preds,
+                                       row_ok, sched_fn)
+        events = StepEvents(
+            cmd=jnp.stack([ev_col["cmd"], ev_row["cmd"]]),
+            bank=jnp.stack([ev_col["bank"], ev_row["bank"]]),
+            row=jnp.stack([ev_col["row"], ev_row["row"]]),
+            served_read=ev_col["served_read"] | ev_row["served_read"],
+            served_write=ev_col["served_write"] | ev_row["served_write"],
+            served_probe=ev_col["served_probe"] | ev_row["served_probe"],
+            probe_latency=ev_col["probe_latency"] + ev_row["probe_latency"],
+            probe_completion=ev_col["probe_completion"] + ev_row["probe_completion"],
+            deferred=ev_col["deferred"] + ev_row["deferred"],
+        )
+    else:
+        all_ok = jnp.ones((n_kinds,), bool)
+        cs, ev = _select_and_issue(cspec, dp, cs, clk, cfg, preds, all_ok,
+                                   sched_fn)
+        events = StepEvents(
+            cmd=jnp.stack([ev["cmd"], jnp.int32(-1)]),
+            bank=jnp.stack([ev["bank"], jnp.int32(-1)]),
+            row=jnp.stack([ev["row"], jnp.int32(-1)]),
+            served_read=ev["served_read"], served_write=ev["served_write"],
+            served_probe=ev["served_probe"],
+            probe_latency=ev["probe_latency"],
+            probe_completion=ev["probe_completion"],
+            deferred=ev["deferred"],
+        )
+    return cs, events

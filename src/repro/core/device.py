@@ -1,0 +1,226 @@
+"""Cycle-level DRAM device model as a pure-JAX state machine.
+
+All mutable device state is a pytree of dense int32 arrays; every operation
+(prerequisite decode, timing-readiness check, command issue) is a pure
+function `(tables, state, ...) -> ...` suitable for `jax.jit`, `jax.vmap`
+(DSE batching) and `jax.lax.scan` (the cycle loop).
+
+State encoding
+--------------
+row_state[bank]  : -1 closed, -2 activating (split ACT-1 issued), else open row
+last_issue[node, cmd, w] : ring buffer (most recent first) of issue clocks
+clock_until[ru]  : WCK/RCK data clock active until this cycle (exclusive)
+last_ref[ru]     : last REFab issue clock per refresh unit
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spec as S
+from repro.core.compile import CompiledSpec
+
+NEG = jnp.int32(-(1 << 28))     # "never issued"
+ROW_CLOSED = -1
+ROW_ACTIVATING = -2
+
+
+class DynParams(NamedTuple):
+    """Preset-dependent scalars/vectors — the *vmappable* axis for DSE."""
+    ct_lat: jnp.ndarray          # (C,) resolved constraint latencies
+    nREFI: jnp.ndarray
+    nRFC: jnp.ndarray
+    nAAD: jnp.ndarray            # ACT-2 deadline (0 = n/a)
+    clock_idle: jnp.ndarray      # WCK/RCK idle window (0 = n/a)
+    read_latency: jnp.ndarray    # RD issue -> data valid
+
+
+def dyn_params(cspec: CompiledSpec) -> DynParams:
+    t = cspec.timings
+    return DynParams(
+        ct_lat=jnp.asarray(cspec.ct_lat, jnp.int32),
+        nREFI=jnp.int32(t["nREFI"]), nRFC=jnp.int32(t["nRFC"]),
+        nAAD=jnp.int32(cspec.nAAD), clock_idle=jnp.int32(cspec.clock_idle),
+        read_latency=jnp.int32(cspec.read_latency),
+    )
+
+
+class DeviceState(NamedTuple):
+    last_issue: jnp.ndarray      # (num_nodes, n_cmds, W) int32
+    row_state: jnp.ndarray       # (n_banks,) int32
+    act1_row: jnp.ndarray        # (n_banks,) int32
+    act1_clk: jnp.ndarray        # (n_banks,) int32
+    clock_until: jnp.ndarray     # (n_refresh_units,) int32
+    last_ref: jnp.ndarray        # (n_refresh_units,) int32
+
+
+def init_state(cspec: CompiledSpec) -> DeviceState:
+    return DeviceState(
+        last_issue=jnp.full((cspec.num_nodes, cspec.n_cmds, cspec.max_window),
+                            NEG, jnp.int32),
+        row_state=jnp.full((cspec.n_banks,), ROW_CLOSED, jnp.int32),
+        act1_row=jnp.zeros((cspec.n_banks,), jnp.int32),
+        act1_clk=jnp.full((cspec.n_banks,), NEG, jnp.int32),
+        clock_until=jnp.zeros((cspec.n_refresh_units,), jnp.int32),
+        last_ref=jnp.zeros((cspec.n_refresh_units,), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Addressing helpers (static org => plain python loops unroll at trace time)
+# --------------------------------------------------------------------------
+
+def node_per_level(cspec: CompiledSpec, addr_sub: jnp.ndarray) -> jnp.ndarray:
+    """Node index at each hierarchy level for an address.
+
+    addr_sub holds the per-level indices below channel, e.g. DDR4:
+    (rank, bankgroup, bank).  Returns (L,) node ids; level 0 is channel 0.
+    """
+    counts = cspec.level_counts        # numpy, static
+    offs = cspec.level_offsets
+    nodes = [jnp.int32(0)]
+    flat = jnp.int32(0)
+    for i in range(1, len(counts)):
+        flat = flat * jnp.int32(int(counts[i])) + addr_sub[i - 1]
+        nodes.append(jnp.int32(int(offs[i])) + flat)
+    return jnp.stack(nodes)
+
+
+def flat_bank(cspec: CompiledSpec, addr_sub: jnp.ndarray) -> jnp.ndarray:
+    counts = cspec.level_counts
+    flat = jnp.int32(0)
+    for i in range(1, len(counts)):
+        flat = flat * jnp.int32(int(counts[i])) + addr_sub[i - 1]
+    return flat
+
+
+def refresh_unit(cspec: CompiledSpec, addr_sub: jnp.ndarray) -> jnp.ndarray:
+    return addr_sub[0]
+
+
+# --------------------------------------------------------------------------
+# Timing-readiness check (XLA reference path; Pallas kernel in kernels/)
+# --------------------------------------------------------------------------
+
+def earliest_ready(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
+                   cmd: jnp.ndarray, addr_sub: jnp.ndarray) -> jnp.ndarray:
+    """Earliest cycle at which `cmd` may issue at `addr` (timing only)."""
+    nodes = node_per_level(cspec, addr_sub)          # (L,)
+    ct_prev = jnp.asarray(cspec.ct_prev)             # (C,)
+    ct_next = jnp.asarray(cspec.ct_next)
+    ct_level = jnp.asarray(cspec.ct_level)
+    ct_win = jnp.asarray(cspec.ct_win)
+    node = nodes[ct_level]                           # (C,)
+    t_prev = state.last_issue[node, ct_prev, ct_win - 1]
+    allowed = jnp.where((ct_next == cmd) & (t_prev > NEG),
+                        t_prev + dp.ct_lat, NEG)
+    return jnp.max(allowed, initial=NEG)
+
+
+def timing_ok(cspec, dp, state, cmd, addr_sub, clk) -> jnp.ndarray:
+    return clk >= earliest_ready(cspec, dp, state, cmd, addr_sub)
+
+
+# --------------------------------------------------------------------------
+# Prerequisite decode (paper §2: per-standard request -> next command)
+# --------------------------------------------------------------------------
+
+def prereq(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
+           is_write: jnp.ndarray, addr_sub: jnp.ndarray, row: jnp.ndarray,
+           clk: jnp.ndarray):
+    """Next command needed to advance a request.
+
+    Returns (cmd, cmd_row): cmd_row is the row the command actually targets
+    (ACT-2 completes the *pending* activation row, not the request's row).
+    """
+    bank = flat_bank(cspec, addr_sub)
+    ru = refresh_unit(cspec, addr_sub)
+    rs = state.row_state[bank]
+    open_hit = rs == row
+    closed = rs == ROW_CLOSED
+    activating = rs == ROW_ACTIVATING
+
+    final = jnp.where(is_write, jnp.int32(cspec.id_WR), jnp.int32(cspec.id_RD))
+    col_cmd = final
+    if cspec.data_clock_sync:
+        clock_on = clk < state.clock_until[ru]
+        sync = jnp.where(is_write,
+                         jnp.int32(cspec.id_CAS_WR if cspec.id_CAS_WR >= 0 else cspec.id_RCKSTRT),
+                         jnp.int32(cspec.id_CAS_RD if cspec.id_CAS_RD >= 0 else cspec.id_RCKSTRT))
+        col_cmd = jnp.where(clock_on, final, sync)
+
+    if cspec.split_activation:
+        opener = jnp.int32(cspec.id_ACT1)
+        cmd = jnp.where(closed, opener,
+              jnp.where(activating, jnp.int32(cspec.id_ACT2),
+              jnp.where(open_hit, col_cmd, jnp.int32(cspec.id_PRE))))
+    else:
+        opener = jnp.int32(cspec.id_ACT)
+        cmd = jnp.where(closed, opener,
+              jnp.where(open_hit, col_cmd, jnp.int32(cspec.id_PRE)))
+
+    cmd_row = jnp.where(cmd == jnp.int32(cspec.id_ACT2),
+                        state.act1_row[bank], row) if cspec.split_activation else row
+    return cmd, cmd_row, open_hit
+
+
+# --------------------------------------------------------------------------
+# Command issue: timestamp rings + state effects
+# --------------------------------------------------------------------------
+
+def issue(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
+          cmd: jnp.ndarray, addr_sub: jnp.ndarray, row: jnp.ndarray,
+          clk: jnp.ndarray, enable: jnp.ndarray) -> DeviceState:
+    """Issue `cmd` at `addr` on cycle `clk` (no-op when ``enable`` is False)."""
+    nodes = node_per_level(cspec, addr_sub)                    # (L,)
+    scope = jnp.asarray(cspec.cmd_scope)[cmd]
+    lvl_idx = jnp.arange(len(cspec.levels), dtype=jnp.int32)
+    upd_mask = (lvl_idx <= scope) & enable                     # ancestors+self
+
+    li = state.last_issue
+    # ring shift at each ancestor node for this command
+    rows_sel = li[nodes, cmd]                                  # (L, W)
+    shifted = jnp.concatenate(
+        [jnp.full((rows_sel.shape[0], 1), clk, jnp.int32), rows_sel[:, :-1]],
+        axis=1)
+    new_rows = jnp.where(upd_mask[:, None], shifted, rows_sel)
+    li = li.at[nodes, cmd].set(new_rows)
+
+    fx = jnp.asarray(cspec.cmd_fx)[cmd]
+    bank = flat_bank(cspec, addr_sub)
+    ru = refresh_unit(cspec, addr_sub)
+
+    def has(bit):
+        return ((fx & bit) != 0) & enable
+
+    rs = state.row_state
+    rs = jnp.where(has(S.FX_OPEN), rs.at[bank].set(row), rs)
+    rs = jnp.where(has(S.FX_CLOSE), rs.at[bank].set(ROW_CLOSED), rs)
+    # FX_CLOSE_ALL: close every bank in this refresh unit
+    banks_per_ru = cspec.n_banks // cspec.n_refresh_units
+    bank_ru = jnp.arange(cspec.n_banks, dtype=jnp.int32) // banks_per_ru
+    rs = jnp.where(has(S.FX_CLOSE_ALL) & (bank_ru == ru), ROW_CLOSED, rs)
+    rs = jnp.where(has(S.FX_ACT1), rs.at[bank].set(ROW_ACTIVATING), rs)
+
+    a1r = jnp.where(has(S.FX_ACT1), state.act1_row.at[bank].set(row), state.act1_row)
+    a1c = jnp.where(has(S.FX_ACT1), state.act1_clk.at[bank].set(clk), state.act1_clk)
+
+    cu = state.clock_until
+    turn_on = has(S.FX_CLOCK_ON)
+    cu = jnp.where(turn_on, cu.at[ru].set(clk + dp.clock_idle), cu)
+    # data transfer keeps the data clock alive
+    is_data = has(S.FX_FINAL_RD) | has(S.FX_FINAL_WR)
+    if cspec.data_clock_sync:
+        cu = jnp.where(is_data,
+                       cu.at[ru].set(jnp.maximum(cu[ru], clk + dp.clock_idle)),
+                       cu)
+
+    lr = state.last_ref
+    lr = jnp.where((cmd == jnp.int32(cspec.id_REFab)) & enable,
+                   lr.at[ru].set(clk), lr)
+
+    return DeviceState(last_issue=li, row_state=rs, act1_row=a1r,
+                       act1_clk=a1c, clock_until=cu, last_ref=lr)

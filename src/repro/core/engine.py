@@ -1,0 +1,172 @@
+"""Cycle-level simulation engine: `lax.scan` over cycles, `vmap` over configs.
+
+The engine composes (frontend -> controller -> device) into one pure cycle
+function and runs it under `jax.lax.scan`.  Because every load knob and
+every timing latency is a traced array (`FrontParams`, `DynParams`), a
+*batched* engine falls out of `jax.vmap` — hundreds of design-space points
+(timing presets x scheduler loads x read ratios) simulate in one compiled
+program.  This is the TPU-native analogue of Ramulator's DSE workflows
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as C
+from repro.core import device as D
+from repro.core import frontend as F
+from repro.core.compile import CompiledSpec, compile_spec
+
+
+class Stats(NamedTuple):
+    cycles: jnp.ndarray
+    reads_done: jnp.ndarray
+    writes_done: jnp.ndarray
+    probe_lat_sum: jnp.ndarray
+    probe_cnt: jnp.ndarray
+    data_bus_busy: jnp.ndarray      # cycles the data bus carried data
+    cmd_counts: jnp.ndarray         # (n_cmds,)
+    deferred: jnp.ndarray           # predicate-masked candidate count
+
+
+def _zero_stats(cspec: CompiledSpec) -> Stats:
+    z = jnp.int32(0)
+    return Stats(z, z, z, z, z, z, jnp.zeros((cspec.n_cmds,), jnp.int32), z)
+
+
+class SimState(NamedTuple):
+    cs: C.CtrlState
+    fs: F.FrontState
+    stats: Stats
+    clk: jnp.ndarray
+
+
+@dataclasses.dataclass
+class Simulator:
+    """User-facing simulator handle for one (standard, org, timing) triple.
+
+    >>> sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    >>> stats = sim.run(100_000, interval=4.0, read_ratio=1.0)
+    """
+    standard: str
+    org_preset: str
+    timing_preset: str
+    controller: C.ControllerConfig = dataclasses.field(
+        default_factory=C.ControllerConfig)
+    frontend: F.FrontendConfig = dataclasses.field(
+        default_factory=F.FrontendConfig)
+    timing_overrides: dict | None = None
+
+    def __post_init__(self):
+        self.cspec = compile_spec(self.standard, self.org_preset,
+                                  self.timing_preset, self.timing_overrides)
+
+    # -- single-config run ------------------------------------------------
+    def run(self, n_cycles: int, interval: float | None = None,
+            read_ratio: float | None = None, trace: bool = False,
+            seed: int = 0x1234):
+        fcfg = self.frontend
+        if interval is not None or read_ratio is not None:
+            fcfg = dataclasses.replace(
+                fcfg,
+                interval=interval if interval is not None else fcfg.interval,
+                read_ratio=(read_ratio if read_ratio is not None
+                            else fcfg.read_ratio))
+        dp = D.dyn_params(self.cspec)
+        fp = fcfg.params()
+        run_fn = make_run(self.cspec, self.controller, fcfg, n_cycles, trace)
+        out = jax.jit(run_fn)(dp, fp, jnp.uint32(seed))
+        return jax.tree.map(np.asarray, out)
+
+    # -- batched DSE run ---------------------------------------------------
+    def run_batch(self, n_cycles: int, intervals, read_ratios,
+                  seed: int = 0x1234):
+        """Simulate the outer product of load points in one vmapped program."""
+        dp = D.dyn_params(self.cspec)
+        pts = [(i, r) for i in intervals for r in read_ratios]
+        fp = F.FrontParams(
+            interval_fp=jnp.asarray([max(int(i * 256), 1) for i, _ in pts],
+                                    jnp.int32),
+            read_ratio_fp=jnp.asarray([int(r * 256) for _, r in pts],
+                                      jnp.int32),
+            probe_gap=jnp.full((len(pts),), self.frontend.probe_gap,
+                               jnp.int32))
+        run_fn = make_run(self.cspec, self.controller, self.frontend,
+                          n_cycles, trace=False)
+        batched = jax.jit(jax.vmap(run_fn, in_axes=(None, 0, None)))
+        out = batched(dp, fp, jnp.uint32(seed))
+        return pts, jax.tree.map(np.asarray, out)
+
+
+def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
+             fcfg: F.FrontendConfig, n_cycles: int, trace: bool):
+    """Build the pure run function (dp, fp, seed) -> Stats [, trace]."""
+
+    def cycle(sim: SimState, _, dp, fp):
+        queue, fs = F.frontend_step(cspec, fcfg, fp, sim.fs, sim.cs.queue,
+                                    sim.clk)
+        cs = sim.cs._replace(queue=queue)
+        cs, ev = C.controller_step(cspec, dp, ccfg, cs, sim.clk)
+        fs = F.frontend_absorb(fs, fp, ev)
+
+        st = sim.stats
+        nBL = jnp.int32(cspec.timings["nBL"])
+        issued = ev.cmd >= 0
+        counts = st.cmd_counts
+        for i in range(2):
+            counts = jnp.where(issued[i], counts.at[ev.cmd[i]].add(1), counts)
+        st = Stats(
+            cycles=st.cycles + 1,
+            reads_done=st.reads_done + ev.served_read.astype(jnp.int32),
+            writes_done=st.writes_done + ev.served_write.astype(jnp.int32),
+            probe_lat_sum=st.probe_lat_sum + ev.probe_latency,
+            probe_cnt=st.probe_cnt + ev.served_probe.astype(jnp.int32),
+            data_bus_busy=st.data_bus_busy + nBL * (
+                ev.served_read.astype(jnp.int32)
+                + ev.served_write.astype(jnp.int32)),
+            cmd_counts=counts,
+            deferred=st.deferred + ev.deferred,
+        )
+        out = SimState(cs=cs, fs=fs, stats=st, clk=sim.clk + 1)
+        ys = (ev.cmd, ev.bank, ev.row) if trace else None
+        return out, ys
+
+    def run(dp, fp, seed):
+        init = SimState(cs=C.init_ctrl_state(cspec, ccfg.queue_depth),
+                        fs=F.init_front(),
+                        stats=_zero_stats(cspec), clk=jnp.int32(0))
+        init = init._replace(fs=init.fs._replace(rng=seed | jnp.uint32(1)))
+        final, ys = jax.lax.scan(partial(cycle, dp=dp, fp=fp), init, None,
+                                 length=n_cycles)
+        if trace:
+            return final.stats, ys
+        return final.stats
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Derived metrics
+# --------------------------------------------------------------------------
+
+def throughput_gbps(cspec: CompiledSpec, stats) -> float:
+    bytes_moved = float(stats.reads_done + stats.writes_done) * cspec.access_bytes
+    seconds = float(stats.cycles) * cspec.tCK_ps * 1e-12
+    return bytes_moved / seconds / 1e9 if seconds else 0.0
+
+
+def peak_gbps(cspec: CompiledSpec) -> float:
+    return cspec.peak_bytes_per_cycle / (cspec.tCK_ps * 1e-12) / 1e9
+
+
+def avg_probe_latency_ns(cspec: CompiledSpec, stats) -> float:
+    if int(stats.probe_cnt) == 0:
+        return float("nan")
+    cycles = float(stats.probe_lat_sum) / float(stats.probe_cnt)
+    return cycles * cspec.tCK_ps * 1e-3

@@ -1,0 +1,156 @@
+"""Traffic-generator frontends (paper §4, improved version of [5]).
+
+Two request sources drive the latency-throughput evaluation:
+
+  1. *streaming* requests at a configurable inter-arrival interval — the
+     load (throughput) axis, with a configurable read ratio;
+  2. *serialized random-access probe* requests — the latency axis: a probe
+     is only issued after the previous probe's data returned.
+
+Both are implemented as pure state-machines over int32 arrays so the whole
+(frontend + controller + device) cycle is one `lax.scan` body, and the
+load/read-ratio knobs are vmappable for design-space sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import controller as C
+from repro.core.compile import CompiledSpec
+
+
+class FrontParams(NamedTuple):
+    """vmappable load knobs (fixed-point by 256)."""
+    interval_fp: jnp.ndarray    # inter-arrival interval in cycles * 256
+    read_ratio_fp: jnp.ndarray  # P(read) * 256
+    probe_gap: jnp.ndarray      # idle cycles between probes
+
+
+class FrontState(NamedTuple):
+    accum_fp: jnp.ndarray        # arrival accumulator (x256)
+    rng: jnp.ndarray             # uint32 LCG state
+    seq: jnp.ndarray             # sequential-stream position counter
+    probe_busy: jnp.ndarray      # bool — a probe is in flight
+    probe_next: jnp.ndarray      # earliest clock for the next probe
+    sent: jnp.ndarray            # streaming requests injected
+    dropped_backpressure: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    interval: float = 4.0        # cycles between streaming arrivals
+    read_ratio: float = 1.0
+    probe_gap: int = 16
+    probes: bool = True
+    stream: bool = True
+    pattern: str = "sequential"  # streaming address pattern: sequential|random
+    max_backlog_fp: int = 256 * 64   # accumulator cap: ≤64 queued arrivals
+
+    def params(self) -> FrontParams:
+        return FrontParams(
+            interval_fp=jnp.int32(max(int(self.interval * 256), 1)),
+            read_ratio_fp=jnp.int32(int(self.read_ratio * 256)),
+            probe_gap=jnp.int32(self.probe_gap))
+
+
+def init_front(seed: int = 0x1234) -> FrontState:
+    return FrontState(accum_fp=jnp.int32(0), rng=jnp.uint32(seed | 1),
+                      seq=jnp.int32(0), probe_busy=jnp.asarray(False),
+                      probe_next=jnp.int32(0), sent=jnp.int32(0),
+                      dropped_backpressure=jnp.int32(0))
+
+
+def _lcg(rng):
+    return rng * jnp.uint32(1664525) + jnp.uint32(1013904223)
+
+
+def _rand_addr(cspec: CompiledSpec, rng):
+    """Split one 32-bit random draw into (sub-levels, row, col)."""
+    counts = cspec.level_counts
+    subs = []
+    r = rng
+    for i in range(1, len(counts)):
+        r = _lcg(r)
+        subs.append((r >> jnp.uint32(8)).astype(jnp.int32)
+                    % jnp.int32(int(counts[i])))
+    r = _lcg(r)
+    row = (r >> jnp.uint32(8)).astype(jnp.int32) % jnp.int32(cspec.rows)
+    r = _lcg(r)
+    col = (r >> jnp.uint32(8)).astype(jnp.int32) % jnp.int32(cspec.columns)
+    return jnp.stack(subs), row, col, r
+
+
+def _seq_addr(cspec: CompiledSpec, seq):
+    """Bank-interleaved sequential walk: successive requests rotate across
+    banks; within a bank, columns advance before the row does — the
+    row-buffer-friendly streaming pattern of the paper's traffic generator."""
+    counts = cspec.level_counts
+    subs = []
+    q = seq
+    for i in range(len(counts) - 1, 0, -1):
+        subs.append(q % jnp.int32(int(counts[i])))
+        q = q // jnp.int32(int(counts[i]))
+    subs = subs[::-1]          # back to (rank, ..., bank) order
+    col = q % jnp.int32(cspec.columns)
+    row = (q // jnp.int32(cspec.columns)) % jnp.int32(cspec.rows)
+    return jnp.stack(subs), row, col
+
+
+def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
+                  fs: FrontState, queue: C.Queue, clk):
+    """Inject up to one probe and one streaming request this cycle.
+
+    Probes insert first so a saturated streaming load cannot starve the
+    latency measurement out of the queue entirely.
+    """
+    rng = fs.rng
+    accum = fs.accum_fp
+    sent = fs.sent
+    seq = fs.seq
+    dropped = fs.dropped_backpressure
+
+    if cfg.probes:
+        want_p = (~fs.probe_busy) & (clk >= fs.probe_next)
+        sub, row, col, rng = _rand_addr(cspec, rng)
+        queue, okp = C.queue_insert(queue, jnp.asarray(False),
+                                    jnp.asarray(True), sub, row, col, clk,
+                                    want_p)
+        probe_busy = fs.probe_busy | okp
+    else:
+        probe_busy = fs.probe_busy
+
+    if cfg.stream:
+        accum = jnp.minimum(accum + jnp.int32(256),
+                            jnp.int32(cfg.max_backlog_fp))
+        want = accum >= fp.interval_fp
+        if cfg.pattern == "sequential":
+            sub, row, col = _seq_addr(cspec, seq)
+        else:
+            sub, row, col, rng = _rand_addr(cspec, rng)
+        rng = _lcg(rng)
+        is_write = ((rng >> jnp.uint32(9)).astype(jnp.int32) % 256
+                    ) >= fp.read_ratio_fp
+        queue, ok = C.queue_insert(queue, is_write, jnp.asarray(False),
+                                   sub, row, col, clk, want)
+        accum = jnp.where(ok, accum - fp.interval_fp, accum)
+        seq = seq + ok.astype(jnp.int32)
+        sent = sent + ok.astype(jnp.int32)
+        dropped = dropped + (want & ~ok).astype(jnp.int32)
+
+    return queue, FrontState(accum_fp=accum, rng=rng, seq=seq,
+                             probe_busy=probe_busy,
+                             probe_next=fs.probe_next, sent=sent,
+                             dropped_backpressure=dropped)
+
+
+def frontend_absorb(fs: FrontState, fp: FrontParams,
+                    events: C.StepEvents) -> FrontState:
+    """Consume completion events (closes the probe loop)."""
+    done = events.served_probe
+    return fs._replace(
+        probe_busy=jnp.where(done, False, fs.probe_busy),
+        probe_next=jnp.where(done, events.probe_completion + fp.probe_gap,
+                             fs.probe_next))

@@ -1,0 +1,32 @@
+"""Request schedulers: masked-priority selection over the request queue.
+
+A scheduler is a pure function `(mask, row_hit, arrive) -> (slot, ok)` that
+picks at most one queue slot among those allowed by `mask`.  The paper's
+base workflow runs the *same* selection pipeline for every controller; the
+controllers differ only in the predicate masks they inject (paper §2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I32_MAX = jnp.int32(2**31 - 1)
+
+
+def _oldest(mask, arrive):
+    key = jnp.where(mask, arrive, I32_MAX)
+    return jnp.argmin(key), jnp.any(mask)
+
+
+def frfcfs(mask, row_hit, arrive):
+    """First-Ready FCFS: ready row hits first, then oldest ready."""
+    hit_mask = mask & row_hit
+    use_hits = jnp.any(hit_mask)
+    m = jnp.where(use_hits, hit_mask, mask)
+    return _oldest(m, arrive)
+
+
+def fcfs(mask, row_hit, arrive):
+    return _oldest(mask, arrive)
+
+
+SCHEDULERS = {"FRFCFS": frfcfs, "FCFS": fcfs}

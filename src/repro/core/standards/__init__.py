@@ -1,0 +1,17 @@
+"""DRAM standards modeled by the simulator (paper Fig. 1 set + VRR variants)."""
+from repro.core.standards.ddr3 import DDR3
+from repro.core.standards.ddr4 import DDR4
+from repro.core.standards.ddr5 import DDR5
+from repro.core.standards.lpddr5 import LPDDR5
+from repro.core.standards.lpddr6 import LPDDR6
+from repro.core.standards.gddr6 import GDDR6
+from repro.core.standards.gddr7 import GDDR7
+from repro.core.standards.hbm2 import HBM2
+from repro.core.standards.hbm3 import HBM3
+from repro.core.standards.hbm4 import HBM4
+from repro.core.standards.vrr import DDR4_VRR, DDR5_VRR
+
+ALL = [DDR3, DDR4, DDR5, LPDDR5, LPDDR6, GDDR6, GDDR7, HBM2, HBM3, HBM4,
+       DDR4_VRR, DDR5_VRR]
+
+__all__ = [s.__name__ for s in ALL] + ["ALL"]

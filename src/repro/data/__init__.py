@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, make_batch, synthetic_stream
+
+__all__ = ["DataConfig", "make_batch", "synthetic_stream"]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: flash attention forward (online softmax, causal/full).
+
+The LM workload substrate's compute hot spot.  Grid = (batch*heads,
+q_blocks, kv_blocks); the kv axis is innermost, so on TPU the sequential
+grid walk lets the kernel carry the online-softmax running state (m, l,
+acc) in VMEM scratch across kv steps — the canonical TPU flash schedule
+(MaxText/splash style).  Causal blocks strictly above the diagonal are
+skipped with @pl.when (no FLOPs, no VMEM traffic).
+
+Blocks are MXU-aligned (128): q/k/v tiles (bq, d) / (bk, d) hit the
+128x128 systolic array; d is kept whole per block (head_dim <= 256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30   # python float: jnp scalars would be captured consts in-kernel
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, sm_scale: float, bq: int, bk: int,
+                  kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip kv blocks strictly in the future of this q block
+    run = (qi * bq + bq - 1 >= ki * bk) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # (bq, d)
+        k = k_ref[0].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0].astype(jnp.float32)             # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                             # (bq, bk)
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        s = jnp.where(cols < kv_len, s, NEG_INF)     # mask padded kv tail
+
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "sm_scale", "bq", "bk",
+                                    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q, k, v: (B, H, T, D) with equal head counts (expand GQA upstream)."""
+    B, H, Tq, Dh = q.shape
+    Tk = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / (Dh ** 0.5)
+    bq = min(bq, _rup(Tq, 8))
+    bk = min(bk, _rup(Tk, 8))
+    Tqp, Tkp = _rup(Tq, bq), _rup(Tk, bk)
+
+    qp = jnp.zeros((B * H, Tqp, Dh), q.dtype).at[:, :Tq].set(
+        q.reshape(B * H, Tq, Dh))
+    kp = jnp.zeros((B * H, Tkp, Dh), k.dtype).at[:, :Tk].set(
+        k.reshape(B * H, Tk, Dh))
+    vp = jnp.zeros((B * H, Tkp, Dh), v.dtype).at[:, :Tk].set(
+        v.reshape(B * H, Tk, Dh))
+    grid = (B * H, Tqp // bq, Tkp // bk)
+
+    kernel = functools.partial(_flash_kernel, causal=causal,
+                               sm_scale=float(sm_scale), bq=bq, bk=bk,
+                               kv_len=Tk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tqp, Dh), q.dtype),
+        scratch_shapes=[
+            # (bq, 1) scratch: widen the lane dim to 128 for real-TPU
+            # lowering; interpret mode accepts the minimal shape.
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Tq].reshape(B, H, Tq, Dh)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,120 @@
+"""jit'd wrappers binding the Pallas kernels to the simulator and models.
+
+``readiness_matrix`` is the kernel-accelerated drop-in for the engine's
+per-slot ``earliest_ready`` loop: it computes the earliest-issue cycle for
+*every* command x *every* queue slot in one (max,+) matmul, from
+  * T — gathered last-issue timestamps (queue-slot x timing-key), and
+  * A — the spec-compiled constraint matrix (timing-key x command).
+The timing-key set (level, command, window) is another product of the
+spec "codegen" step: only keys actually referenced by constraints exist.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device as D
+from repro.core.compile import CompiledSpec
+from repro.kernels import ref
+from repro.kernels.timing_check import maxplus_matmul
+
+NEG = -(1 << 28)
+
+
+class TimingKeys(NamedTuple):
+    """Static (spec-compile-time) key table."""
+    key_level: np.ndarray    # (K,)
+    key_cmd: np.ndarray      # (K,)
+    key_win: np.ndarray      # (K,)
+    ct_key: np.ndarray       # (C,) constraint -> key index
+
+
+@functools.lru_cache(maxsize=None)
+def _keys_cache(spec_id):
+    raise KeyError   # only used via build_keys
+
+
+def build_keys(cspec: CompiledSpec) -> TimingKeys:
+    """Compress (level, prev_cmd, window) triples referenced by constraints
+    into a dense key set."""
+    triples = {}
+    ct_key = np.zeros(len(cspec.ct_prev), np.int32)
+    for i in range(len(cspec.ct_prev)):
+        t = (int(cspec.ct_level[i]), int(cspec.ct_prev[i]),
+             int(cspec.ct_win[i]))
+        ct_key[i] = triples.setdefault(t, len(triples))
+    keys = sorted(triples, key=triples.get)
+    return TimingKeys(
+        key_level=np.array([k[0] for k in keys], np.int32),
+        key_cmd=np.array([k[1] for k in keys], np.int32),
+        key_win=np.array([k[2] for k in keys], np.int32),
+        ct_key=ct_key)
+
+
+def build_A(cspec: CompiledSpec, keys: TimingKeys, ct_lat) -> jnp.ndarray:
+    """Constraint matrix A[k, c] = max latency of constraints with key k
+    targeting command c, else -inf.  ct_lat may be traced (DSE vmap)."""
+    K = len(keys.key_level)
+    A = jnp.full((K, cspec.n_cmds), jnp.float32(-3e38))
+    A = A.at[jnp.asarray(keys.ct_key), jnp.asarray(cspec.ct_next)].max(
+        ct_lat.astype(jnp.float32))
+    return A
+
+
+def gather_T(cspec: CompiledSpec, keys: TimingKeys, state: D.DeviceState,
+             subs: jnp.ndarray) -> jnp.ndarray:
+    """T[q, k] = last_issue[node(q, level_k), cmd_k, win_k-1] for all slots."""
+    nodes = jax.vmap(functools.partial(D.node_per_level, cspec))(subs)  # (Q, L)
+    kl = jnp.asarray(keys.key_level)
+    kc = jnp.asarray(keys.key_cmd)
+    kw = jnp.asarray(keys.key_win) - 1
+    T = state.last_issue[nodes[:, kl], kc[None, :], kw[None, :]]
+    # never-issued slots map to the max-plus identity so that `ts + lat`
+    # cannot surface as a bogus finite bound (matches engine semantics)
+    return jnp.where(T <= NEG, jnp.float32(-3e38), T.astype(jnp.float32))
+
+
+def readiness_matrix(cspec: CompiledSpec, keys: TimingKeys, ct_lat,
+                     state: D.DeviceState, subs: jnp.ndarray, *,
+                     use_pallas: bool = True,
+                     interpret: bool = True) -> jnp.ndarray:
+    """(Q, n_cmds) earliest-issue cycles for every slot x command."""
+    T = gather_T(cspec, keys, state, subs).astype(jnp.float32)
+    # never-issued sentinel: keep NEG so `clk >= earliest` is trivially true
+    A = build_A(cspec, keys, ct_lat)
+    if use_pallas:
+        out = maxplus_matmul(T, A, interpret=interpret)
+    else:
+        out = ref.maxplus_matmul(T, A)
+    return out
+
+
+def earliest_for(cspec, keys, ct_lat, state, subs, cand_cmds, **kw):
+    em = readiness_matrix(cspec, keys, ct_lat, state, subs, **kw)
+    return em[jnp.arange(em.shape[0]), cand_cmds]
+
+
+# ---------------------------------------------------------------------------
+# Attention wrapper (GQA-aware)
+# ---------------------------------------------------------------------------
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None,
+                        interpret: bool = True, use_pallas: bool = True):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, T, D) with Hq % Hkv == 0."""
+    B, Hq, T, Dh = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                               interpret=interpret)
+    return ref.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_TS = -(1 << 28)
+
+
+def maxplus_matmul(T: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    """(max,+) matrix product: out[q, c] = max_k (T[q, k] + A[k, c]).
+
+    The DRAM readiness check in tropical algebra: T is the gathered
+    last-issue timestamp matrix (queue-slot x timing-key), A the
+    spec-compiled constraint matrix (timing-key x command) holding the
+    constraint latency or -inf.  out[q, c] is the earliest cycle command c
+    may issue for slot q.
+    """
+    return jnp.max(T[:, :, None] + A[None, :, :], axis=1)
+
+
+def flash_attention(q, k, v, causal: bool = True, sm_scale: float | None = None):
+    """Reference attention: (B, H, Tq, D) x (B, H, Tk, D) -> (B, H, Tq, D)."""
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    if causal:
+        tq, tk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan(x, a_log, gate):
+    """Reference RG-LRU linear recurrence (recurrentgemma):
+       h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (g_t * x_t)
+    with a_t = exp(-softplus(a_log) * sigmoid(gate)) per channel.
+    Shapes: (B, T, D)."""
+    a = jnp.exp(-8.0 * jax.nn.softplus(a_log)[None, None, :]
+                * jax.nn.sigmoid(gate))
+    gated = x * jax.nn.sigmoid(gate)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9))
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h = a_t * h + u_t
+        return h, h
+
+    u = beta * gated
+    _, hs = jax.lax.scan(step, jnp.zeros_like(x[:, 0]),
+                         (a.transpose(1, 0, 2), u.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

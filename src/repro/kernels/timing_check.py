@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: (max,+) matmul — the DRAM timing-readiness hot loop.
+
+TPU adaptation of the paper's per-cycle scheduling workflow (DESIGN.md §2):
+instead of pointer-chasing per-constraint checks (the C++ inner loop),
+Ramulator-JAX lowers the readiness check to tropical linear algebra:
+
+    earliest[q, c] = max_k ( T[q, k] + A[k, c] )
+
+  T (Q x K): gathered last-issue timestamps per queue slot, one column per
+             (level, command, window) "timing key";
+  A (K x C): spec-compiled constraint matrix; A[k, c] = latency of the
+             constraint keyed k that targets command c, else -inf.
+
+The kernel tiles (Q, K) x (K, C) into VMEM blocks and runs the max-plus
+contraction on the VPU with K as the innermost sequential grid axis,
+accumulating into the output block (the classic matmul schedule with
+(+, *) replaced by (max, +)).  Block sizes default to the VPU/MXU-aligned
+128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3e38   # python float: jnp scalars would be captured consts in-kernel
+
+
+def _maxplus_kernel(t_ref, a_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG)
+
+    t = t_ref[...]            # (bq, bk)
+    a = a_ref[...]            # (bk, bc)
+    bk = t.shape[1]
+
+    # lane-by-lane (max,+) contraction: keeps the live intermediate at
+    # (bq, bc) instead of materializing (bq, bk, bc) in VMEM
+    def body(kk, acc):
+        return jnp.maximum(acc, t[:, kk][:, None] + a[kk, :][None, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, bk, body, o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "bc", "interpret"))
+def maxplus_matmul(T, A, *, bq: int = 128, bk: int = 128, bc: int = 128,
+                   interpret: bool = True):
+    """out[q, c] = max_k T[q, k] + A[k, c].  float32 in/out.
+
+    Pads every dim to its block multiple with -inf (identity of max-plus),
+    so arbitrary (Q, K, C) are accepted.
+    """
+    Q, K = T.shape
+    K2, C = A.shape
+    assert K == K2, (T.shape, A.shape)
+    bq, bk, bc = min(bq, _rup(Q, 8)), min(bk, _rup(K, 8)), min(bc, _rup(C, 8))
+    Qp, Kp, Cp = _rup(Q, bq), _rup(K, bk), _rup(C, bc)
+    Tp = jnp.full((Qp, Kp), NEG, jnp.float32).at[:Q, :K].set(
+        T.astype(jnp.float32))
+    Ap = jnp.full((Kp, Cp), NEG, jnp.float32).at[:K, :C].set(
+        A.astype(jnp.float32))
+
+    grid = (Qp // bq, Cp // bc, Kp // bk)
+    out = pl.pallas_call(
+        _maxplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bc), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Cp), jnp.float32),
+        interpret=interpret,
+    )(Tp, Ap)
+    return out[:Q, :C]
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,204 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(arch, shape)`` returns (avals, shardings) for the step being
+lowered — weak-type-correct, shardable, zero allocation.  Shardings come
+from the divisibility-aware rule chooser; cache/state pytrees are annotated
+by (field, rank) via `_STATE_AXES`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Batch, init_cache, param_defs
+from repro.models.model import VIS_FRAC
+from repro.optim import AdamWConfig, OptState
+from repro.sharding import DEFAULT_RULES, choose_spec
+from repro.sharding.rules import ShardingRules
+from repro.train.step import TrainState
+
+# extend the default rules with the decode-cache sequence axis: for batch=1
+# long-context cells the cache seq dim soaks up every idle mesh axis
+CELL_RULES = ShardingRules(rules=DEFAULT_RULES.rules + (
+    ("cache_seq", ("model", "data", "pod")),
+))
+
+# (state field name, rank) -> logical axes (leading G dim already included)
+_STATE_AXES = {
+    ("k", 5): (None, "batch", "cache_seq", "kv_heads", None),
+    ("v", 5): (None, "batch", "cache_seq", "kv_heads", None),
+    ("k", 4): ("batch", "cache_seq", "kv_heads", None),
+    ("v", 4): ("batch", "cache_seq", "kv_heads", None),
+    ("k_scale", 4): (None, "batch", "cache_seq", "kv_heads"),
+    ("v_scale", 4): (None, "batch", "cache_seq", "kv_heads"),
+    ("k_scale", 3): ("batch", "cache_seq", "kv_heads"),
+    ("v_scale", 3): ("batch", "cache_seq", "kv_heads"),
+    ("h", 3): (None, "batch", "embed_tp"),
+    ("h", 2): ("batch", "embed_tp"),
+    ("conv", 4): (None, "batch", None, "embed_tp"),
+    ("conv", 3): ("batch", None, "embed_tp"),
+    ("C", 5): (None, "batch", "heads", None, None),
+    ("C", 4): ("batch", "heads", None, None),
+    ("n", 4): (None, "batch", "heads", None),
+    ("n", 3): ("batch", "heads", None),
+    ("m", 3): (None, "batch", "heads"),
+    ("m", 2): ("batch", "heads"),
+    ("c", 4): (None, "batch", "heads", None),
+    ("c", 3): ("batch", "heads", None),
+}
+# sLSTM h collides with RG-LRU h on rank: disambiguate by rank 4
+_STATE_AXES[("h", 4)] = (None, "batch", "heads", None)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def param_avals_and_shardings(cfg: ModelConfig, mesh, rules=None):
+    defs = param_defs(cfg)
+    rules = rules or CELL_RULES
+
+    def walk(d):
+        avals, shs = {}, {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                avals[k], shs[k] = walk(v)
+            else:
+                avals[k] = _sds(v.shape, jnp.bfloat16)
+                shs[k] = _ns(mesh, choose_spec(v.shape, v.logical_axes, mesh,
+                                               rules))
+        return avals, shs
+
+    return walk(defs)
+
+
+def opt_avals_and_shardings(cfg: ModelConfig, mesh, moment_dtype=jnp.bfloat16,
+                            rules=None):
+    pav, psh = param_avals_and_shardings(cfg, mesh, rules)
+    mom = jax.tree.map(lambda a: _sds(a.shape, moment_dtype), pav)
+    return (OptState(step=_sds((), jnp.int32), m=mom, v=mom),
+            OptState(step=_ns(mesh, P()), m=psh, v=psh))
+
+
+def batch_avals_and_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                              *, with_labels: bool, decode: bool):
+    B = shape.global_batch
+    T = 1 if decode else shape.seq_len
+    bspec = choose_spec((B,), ("batch",), mesh, CELL_RULES)
+    bax = bspec[0]
+
+    def bsh(*extra):
+        return _ns(mesh, P(bax, *extra))
+
+    if cfg.frontend == "audio_stub":
+        tokens = _sds((B, T, cfg.n_codebooks), jnp.int32)
+        tsh = bsh(None, None)
+    else:
+        tokens = _sds((B, T), jnp.int32)
+        tsh = bsh(None)
+    if cfg.rope == "mrope":
+        positions = _sds((B, T, 3), jnp.int32)
+        psh = bsh(None, None)
+    else:
+        positions = _sds((B, T), jnp.int32)
+        psh = bsh(None)
+
+    labels = lsh = vis = vsh = None
+    if with_labels:
+        labels, lsh = tokens, tsh
+    if cfg.frontend == "vision_stub" and not decode:
+        vis = _sds((B, T // VIS_FRAC, cfg.d_model), jnp.bfloat16)
+        vsh = bsh(None, None)
+
+    ci = _sds((), jnp.int32) if decode else None
+    cish = _ns(mesh, P()) if decode else None
+    avals = Batch(tokens=tokens, positions=positions, labels=labels,
+                  vis_embeds=vis, cache_index=ci, cache_len=ci)
+    shs = Batch(tokens=tsh, positions=psh, labels=lsh, vis_embeds=vsh,
+                cache_index=cish, cache_len=cish)
+    return avals, shs
+
+
+def _path_leaf_name(path):
+    for p in reversed(path):
+        if hasattr(p, "name"):
+            return p.name
+        if hasattr(p, "key"):
+            return p.key
+    return ""
+
+
+def cache_avals_and_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B = shape.global_batch
+    S = shape.seq_len
+    cache_shape = jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+    def spec_of(path, aval):
+        name = _path_leaf_name(path)
+        axes = _STATE_AXES.get((name, len(aval.shape)))
+        if axes is None:
+            axes = (None,) * len(aval.shape)
+        return _ns(mesh, choose_spec(aval.shape, axes, mesh, CELL_RULES))
+
+    avals = jax.tree.map(lambda a: _sds(a.shape, a.dtype), cache_shape)
+    shs = jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+    return avals, shs
+
+
+class CellSpec(NamedTuple):
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    kind: str
+    args_avals: tuple
+    args_shardings: tuple
+    donate: tuple
+
+
+def cell_spec(arch, shape_name: str, mesh, rules=None) -> CellSpec:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        pav, psh = param_avals_and_shardings(cfg, mesh, rules)
+        oav, osh = opt_avals_and_shardings(cfg, mesh, rules=rules)
+        bav, bsh = batch_avals_and_shardings(cfg, shape, mesh,
+                                             with_labels=True, decode=False)
+        return CellSpec("train",
+                        (TrainState(params=pav, opt=oav), bav),
+                        (TrainState(params=psh, opt=osh), bsh),
+                        donate=(0,))
+    if shape.kind == "prefill":
+        pav, psh = param_avals_and_shardings(cfg, mesh, rules)
+        bav, bsh = batch_avals_and_shardings(cfg, shape, mesh,
+                                             with_labels=False, decode=False)
+        return CellSpec("prefill", (pav, bav), (psh, bsh), donate=())
+    if shape.kind == "decode":
+        pav, psh = param_avals_and_shardings(cfg, mesh, rules)
+        cav, csh = cache_avals_and_shardings(cfg, shape, mesh)
+        bav, bsh = batch_avals_and_shardings(cfg, shape, mesh,
+                                             with_labels=False, decode=True)
+        return CellSpec("decode", (pav, cav, bav), (psh, csh, bsh),
+                        donate=(1,))
+    raise KeyError(shape.kind)
+
+
+def step_fn_for(arch, shape_name: str, microbatch: int = 1):
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        from repro.optim import AdamWConfig
+        from repro.train import make_train_step
+        return make_train_step(cfg, AdamWConfig(), microbatch=microbatch)
+    if shape.kind == "prefill":
+        from repro.serve import make_prefill_step
+        return make_prefill_step(cfg, cache_len=shape.seq_len)
+    from repro.serve import make_decode_step
+    return make_decode_step(cfg)

@@ -1,0 +1,6 @@
+from repro.models.model import (Batch, count_params, decode_step, forward,
+                                init_cache, init_params, logits_and_loss,
+                                param_defs)
+
+__all__ = ["Batch", "count_params", "decode_step", "forward", "init_cache",
+           "init_params", "logits_and_loss", "param_defs"]

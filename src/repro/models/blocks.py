@@ -1,0 +1,671 @@
+"""Residual blocks: GQA attention, MoE, RG-LRU (recurrentgemma), mLSTM and
+sLSTM (xLSTM).  Each block kind provides
+
+    <kind>_defs(cfg)                          -> ParamDef tree
+    <kind>_apply(cfg, p, x, ctx)              -> x'           (train/prefill)
+    <kind>_decode(cfg, p, x, state, ctx)      -> (x', state') (one token)
+    <kind>_init_state(cfg, batch, cache_len)  -> state pytree
+
+ctx carries positions / cache-write index.  State pytrees have static
+shapes so the whole model decodes under jit with a ring-buffer cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (NEG_INF, ParamDef, apply_mrope, apply_rope,
+                                 decode_attention, ffn_apply, ffn_defs,
+                                 flash_attention_xla, rmsnorm)
+
+
+class Ctx(NamedTuple):
+    positions: jnp.ndarray            # (B, T) or (B, T, 3) for mrope
+    cache_index: jnp.ndarray          # () write position for decode
+    cache_len: jnp.ndarray            # () valid cache length (after write)
+
+
+# ===========================================================================
+# Attention (global or local-window), with optional qk-norm and GQA
+# ===========================================================================
+
+def attn_defs(cfg) -> dict:
+    d, dq, dkv = cfg.d_model, cfg.d_qkv, cfg.d_kv
+    defs = {
+        "norm": ParamDef((d,), (None,), init="zeros"),
+        "wq": ParamDef((d, dq), ("embed_tp", "qkv")),
+        "wk": ParamDef((d, dkv), ("embed_tp", "kv_heads")),
+        "wv": ParamDef((d, dkv), ("embed_tp", "kv_heads")),
+        "wo": ParamDef((dq, d), ("qkv", "embed_tp")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((cfg.head_dim,), (None,), init="zeros")
+        defs["k_norm"] = ParamDef((cfg.head_dim,), (None,), init="zeros")
+    ff = cfg.d_ff_dense or cfg.d_ff
+    if ff:
+        defs["mlp"] = ffn_defs(d, ff)
+        defs["mlp_norm"] = ParamDef((d,), (None,), init="zeros")
+    return defs
+
+
+def _qkv(cfg, p, x, ctx, local: bool):
+    B, T, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope == "rope":
+        q = apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = apply_rope(k, ctx.positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, ctx.positions, cfg.rope_theta)
+        k = apply_mrope(k, ctx.positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_core(cfg, p, x, ctx, local: bool):
+    q, k, v = _qkv(cfg, p, x, ctx, local)
+    window = cfg.attn_window if local else None
+    o = flash_attention_xla(q, k, v, causal=True, window=window)
+    B, T = x.shape[:2]
+    return o.reshape(B, T, cfg.d_qkv) @ p["wo"]
+
+
+def _block(cfg, p, x, mixer_out):
+    x = x + mixer_out
+    if "mlp" in p:
+        x = x + ffn_apply(p["mlp"], rmsnorm(x, p["mlp_norm"], cfg.norm_eps))
+    return x
+
+
+def attn_apply(cfg, p, x, ctx, local: bool = False):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return _block(cfg, p, x, _attn_core(cfg, p, h, ctx, local))
+
+
+class AttnState(NamedTuple):
+    k: jnp.ndarray    # (B, S, Hkv, Dh) ring buffer (S = window for local)
+    v: jnp.ndarray
+
+
+class QuantAttnState(NamedTuple):
+    """int8 KV cache + per-(pos, head) f32 scales — halves decode HBM
+    footprint/traffic (the §Perf memory-term fix for big-cache decode)."""
+    k: jnp.ndarray        # int8 (B, S, Hkv, Dh)
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # f32 (B, S, Hkv)
+    v_scale: jnp.ndarray
+
+
+def kv_quantize(x):
+    s = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                    1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def kv_dequantize(q, s):
+    return (q.astype(jnp.float32) * s[..., None]).astype(jnp.bfloat16)
+
+
+def attn_init_state(cfg, batch: int, cache_len: int, local: bool = False):
+    S = min(cfg.attn_window, cache_len) if (local and cfg.attn_window) \
+        else cache_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        z = jnp.zeros(shape, jnp.int8)
+        zs = jnp.zeros(shape[:3], jnp.float32)
+        return QuantAttnState(k=z, v=z, k_scale=zs, v_scale=zs)
+    z = jnp.zeros(shape, jnp.bfloat16)
+    return AttnState(k=z, v=z)
+
+
+def _cache_update_attend(cfg, q, k, v, state, ctx, local: bool):
+    """Shared decode cache machinery (bf16 or int8-quantized ring)."""
+    S = state.k.shape[1]
+    slot = ctx.cache_index % S if local else ctx.cache_index
+    upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), slot, axis=1)
+    if cfg.kv_quant:
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+        state = QuantAttnState(k=upd(state.k, kq), v=upd(state.v, vq),
+                               k_scale=upd(state.k_scale, ks),
+                               v_scale=upd(state.v_scale, vs))
+        k_cache = kv_dequantize(state.k, state.k_scale)
+        v_cache = kv_dequantize(state.v, state.v_scale)
+    else:
+        state = AttnState(k=upd(state.k, k), v=upd(state.v, v))
+        k_cache, v_cache = state.k, state.v
+    clen = jnp.minimum(ctx.cache_len, S)
+    o = decode_attention(q, k_cache, v_cache, clen,
+                         window=cfg.attn_window if local else None)
+    return o, state
+
+
+def attn_decode(cfg, p, x, state, ctx, local: bool = False):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h, ctx, local)
+    o, state = _cache_update_attend(cfg, q, k, v, state, ctx, local)
+    B = x.shape[0]
+    out = o.reshape(B, 1, cfg.d_qkv) @ p["wo"]
+    return _block(cfg, p, x, out), state
+
+
+# ===========================================================================
+# Mixture of Experts (token-choice top-k, capacity, sort-based dispatch)
+# ===========================================================================
+
+def moe_defs(cfg) -> dict:
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    defs = {
+        "norm": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "router": ParamDef((d, E), ("embed_tp", None)),
+        "w_gate": ParamDef((E, d, ff), ("experts", None, "ffn"),
+                           fan_in_dims=(-2,)),
+        "w_up": ParamDef((E, d, ff), ("experts", None, "ffn"),
+                         fan_in_dims=(-2,)),
+        "w_down": ParamDef((E, ff, d), ("experts", "ffn", None),
+                           fan_in_dims=(-2,)),
+    }
+    if m.shared_expert:
+        defs["shared"] = ffn_defs(d, m.d_ff_expert)
+    return defs
+
+
+def _maybe_constraint(x, spec_axes):
+    """with_sharding_constraint against the ambient mesh, skipping axes the
+    mesh does not have and dims that do not divide (no-op outside pjit)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.shape:
+            return x
+        from jax.sharding import PartitionSpec as P
+        spec = []
+        for dim, want in zip(x.shape, spec_axes):
+            if want is None:
+                spec.append(None)
+                continue
+            axes = [a for a in (want if isinstance(want, tuple) else (want,))
+                    if a in mesh.shape]
+            prod = 1
+            keep = []
+            for a in axes:
+                if dim % (prod * mesh.shape[a]) == 0:
+                    keep.append(a)
+                    prod *= mesh.shape[a]
+            spec.append(tuple(keep) if len(keep) > 1 else
+                        (keep[0] if keep else None))
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:   # noqa: BLE001 — no mesh context (plain CPU tests)
+        return x
+
+
+MOE_GROUP_SIZE = 256     # tokens per dispatch group (GShard "S")
+
+
+def moe_ffn_grouped(cfg, p, x):
+    """GShard one-hot einsum dispatch over token groups.
+
+    x (B, T, d) is regrouped to (G, n, d) with n = MOE_GROUP_SIZE tokens;
+    each group routes independently with per-group capacity.  Dispatch and
+    combine are *einsums* against one-hot masks — unlike a scatter across
+    the expert-sharded buffer, einsums shard cleanly under GSPMD (groups
+    over data, experts over model), so expert compute shards 256-way and
+    dispatch lowers to data<->model collectives of activation size (the
+    §Perf fix for the MoE train cells; see EXPERIMENTS.md for the refuted
+    scatter-based attempt)."""
+    m = cfg.moe
+    Bs, T, d = x.shape
+    n = min(MOE_GROUP_SIZE, T)
+    while T % n:
+        n //= 2
+    G = Bs * (T // n)
+    xg = x.reshape(G, n, d)
+    E, k = m.num_experts, m.top_k
+
+    # bf16 inputs, f32 accumulation: never materializes an f32 copy of the
+    # full activation (that copy once dominated the §Perf collective term)
+    logits = jnp.einsum("gnd,de->gne", xg, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (G, n, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    C = int(m.capacity_factor * n * k / E + 0.999)
+    C = max(1, min(C, n * k))
+
+    # GShard position assignment: choice slots j = 0..k-1 in priority order
+    dispatch = jnp.zeros((G, n, E, C), xg.dtype)
+    combine = jnp.zeros((G, n, E, C), jnp.float32)
+    count = jnp.zeros((G, 1, E), jnp.float32)      # tokens already placed
+    for j in range(k):
+        mask = jax.nn.one_hot(expert_idx[..., j], E, dtype=jnp.float32)
+        pos = jnp.cumsum(mask, axis=1) - mask + count          # (G, n, E)
+        keep = (pos < C) * mask
+        count = count + jnp.sum(mask, axis=1, keepdims=True)
+        oh_c = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                              dtype=jnp.float32)               # (G, n, E, C)
+        d_j = keep[..., None] * oh_c
+        dispatch = dispatch + d_j.astype(xg.dtype)
+        combine = combine + d_j * gate_vals[..., j][..., None, None]
+
+    buf = jnp.einsum("gnec,gnd->gecd", dispatch, xg)           # (G, E, C, d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])           # (G, E, C, d)
+    out = jnp.einsum("gnec,gecd->gnd", combine.astype(xg.dtype), y)
+
+    out = out.reshape(Bs, T, d)
+    if m.shared_expert:
+        out = out + ffn_apply(p["shared"], x)
+    return out, probs.reshape(G * n, E)
+
+
+def moe_ffn(cfg, p, x_flat):
+    """x_flat: (N, d) -> (N, d) via top-k routed experts + optional shared."""
+    m = cfg.moe
+    N, d = x_flat.shape
+    E, k = m.num_experts, m.top_k
+    logits = jnp.einsum("nd,de->ne", x_flat, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    C = int(m.capacity_factor * N * k / E + 0.5)
+    C = max(8, min(C, N))
+
+    flat_expert = expert_idx.reshape(-1)                   # (N*k,)
+    flat_tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                       # stable
+    e_sorted = flat_expert[order]
+    t_sorted = flat_tok[order]
+    g_sorted = flat_gate[order]
+    # position within expert segment
+    counts = jnp.bincount(e_sorted, length=E)
+    seg_start = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(N * k, dtype=jnp.int32) - seg_start[e_sorted].astype(jnp.int32)
+    keep = pos < C                                         # capacity drop
+    slot_e = jnp.where(keep, e_sorted, E - 1)
+    slot_c = jnp.where(keep, pos, C - 1)
+
+    buf = jnp.zeros((E, C, d), x_flat.dtype)
+    buf = buf.at[slot_e, slot_c].set(
+        jnp.where(keep[:, None], x_flat[t_sorted], 0.0))
+    # expert MLPs, batched over E (sharded over "model" via w_* specs)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])         # (E, C, d)
+
+    gathered = y[slot_e, slot_c]                           # (N*k, d)
+    contrib = jnp.where(keep[:, None], gathered * g_sorted[:, None], 0.0)
+    out = jnp.zeros_like(x_flat).at[t_sorted].add(
+        contrib.astype(x_flat.dtype))
+    if m.shared_expert:
+        out = out + ffn_apply(p["shared"], x_flat)
+    return out, probs
+
+
+def moe_aux_loss(probs, cfg):
+    """Switch-style load-balancing loss over the last router probs."""
+    E = cfg.moe.num_experts
+    me = jnp.mean(probs, axis=0)                        # mean prob per expert
+    ce = jnp.mean(jax.nn.one_hot(jnp.argmax(probs, -1), E, dtype=probs.dtype),
+                  axis=0)                               # fraction routed
+    return E * jnp.sum(me * ce)
+
+
+def moe_apply(cfg, p, x, ctx):
+    B, T, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    if cfg.moe.grouped:
+        out, _ = moe_ffn_grouped(cfg, p, h)
+        return x + out.reshape(B, T, d)
+    out, _ = moe_ffn(cfg, p, h.reshape(B * T, d))
+    return x + out.reshape(B, T, d)
+
+
+# ===========================================================================
+# RG-LRU (recurrentgemma): conv1d(4) + gated linear recurrence
+# ===========================================================================
+
+def rglru_defs(cfg) -> dict:
+    d = cfg.d_model
+    defs = {
+        "norm": ParamDef((d,), (None,), init="zeros"),
+        "w_in": ParamDef((d, 2 * d), ("embed_tp", "ffn")),   # [branch, gate]
+        "conv_w": ParamDef((4, d), (None, None)),
+        "a_log": ParamDef((d,), (None,), init="ones"),
+        "w_gate_a": ParamDef((d, d), ("embed_tp", "ffn")),
+        "w_gate_x": ParamDef((d, d), ("embed_tp", "ffn")),
+        "w_out": ParamDef((d, d), ("ffn", "embed_tp")),
+    }
+    if cfg.d_ff:
+        defs["mlp"] = ffn_defs(d, cfg.d_ff)
+        defs["mlp_norm"] = ParamDef((d,), (None,), init="zeros")
+    return defs
+
+
+def _causal_conv4(x, w, carry=None):
+    """Depthwise causal conv, window 4.  x: (B, T, D), w: (4, D).
+    carry: (B, 3, D) previous inputs for decode continuity."""
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, T+3, D)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(4))
+    new_carry = xp[:, -3:]
+    return out, new_carry
+
+
+def _rglru_coeffs(cfg, p, u):
+    """Per-step gates: a (decay in (0,1)) and gated input, both (B, T, D)."""
+    c = 8.0
+    r = jax.nn.sigmoid((u @ p["w_gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_gate_x"]).astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    gated = beta * i * u.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_apply(cfg, p, x, ctx, with_state: bool = False):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    uw = h @ p["w_in"]
+    branch, u_pre = jnp.split(uw, 2, axis=-1)
+    u, _ = _causal_conv4(u_pre, p["conv_w"])
+    a, gated = _rglru_coeffs(cfg, p, u)
+
+    def combine(l, r):
+        a1, u1 = l
+        a2, u2 = r
+        return a1 * a2, u1 * a2 + u2
+
+    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = hs.astype(x.dtype) * jax.nn.gelu(branch)
+    out = y @ p["w_out"]
+    xo = _block(cfg, p, x, out)
+    if not with_state:
+        return xo, None
+    T = x.shape[1]
+    conv = jnp.pad(u_pre, ((0, 0), (max(3 - T, 0), 0), (0, 0)))[:, -3:]
+    return xo, RGLRUState(h=hs[:, -1], conv=conv.astype(jnp.bfloat16))
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray       # (B, D) recurrent state (f32)
+    conv: jnp.ndarray    # (B, 3, D)
+
+
+def rglru_init_state(cfg, batch: int, cache_len: int):
+    d = cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, d), jnp.float32),
+                      conv=jnp.zeros((batch, 3, d), jnp.bfloat16))
+
+
+def rglru_decode(cfg, p, x, state: RGLRUState, ctx):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    uw = h @ p["w_in"]
+    branch, u = jnp.split(uw, 2, axis=-1)
+    u, conv = _causal_conv4(u, p["conv_w"], carry=state.conv)
+    a, gated = _rglru_coeffs(cfg, p, u)
+    hnew = a[:, 0] * state.h + gated[:, 0]           # (B, D)
+    y = hnew[:, None, :].astype(x.dtype) * jax.nn.gelu(branch)
+    out = y @ p["w_out"]
+    return _block(cfg, p, x, out), RGLRUState(h=hnew, conv=conv)
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ===========================================================================
+
+def mlstm_defs(cfg) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "norm": ParamDef((d,), (None,), init="zeros"),
+        "wq": ParamDef((d, H * hd), ("embed_tp", "qkv")),
+        "wk": ParamDef((d, H * hd), ("embed_tp", "qkv")),
+        "wv": ParamDef((d, H * hd), ("embed_tp", "qkv")),
+        "w_if": ParamDef((d, 2 * H), ("embed_tp", None)),   # i/f gate logits
+        "w_o": ParamDef((d, H * hd), ("embed_tp", "qkv")),  # output gate
+        "w_out": ParamDef((H * hd, d), ("qkv", "embed_tp")),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray    # (B, H, hd, hd)
+    n: jnp.ndarray    # (B, H, hd)
+    m: jnp.ndarray    # (B, H)
+
+
+def mlstm_init_state(cfg, batch: int, cache_len: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32),
+                      m=jnp.full((batch, H), -30.0, jnp.float32))
+
+
+def _mlstm_cell(state: MLSTMState, q, k, v, i_log, f_log):
+    """One stabilized mLSTM step.  q/k/v: (B, H, hd); gates: (B, H)."""
+    m_new = jnp.maximum(f_log + state.m, i_log)
+    f_ = jnp.exp(f_log + state.m - m_new)[..., None]
+    i_ = jnp.exp(i_log - m_new)[..., None]
+    C = f_[..., None] * state.C + i_[..., None] * (v[..., :, None] *
+                                                   k[..., None, :])
+    n = f_ * state.n + i_ * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))[..., None]
+    h = jnp.einsum("bhij,bhj->bhi", C, q) / denom
+    return MLSTMState(C=C, n=n, m=m_new), h
+
+
+def _mlstm_qkvg(cfg, p, x):
+    B, T, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, H, hd).astype(jnp.float32) / np.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32) / np.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    if_log = (x @ p["w_if"]).reshape(B, T, 2, H).astype(jnp.float32)
+    i_log = if_log[:, :, 0]
+    f_log = jax.nn.log_sigmoid(if_log[:, :, 1] + 1.0)
+    o = jax.nn.sigmoid((x @ p["w_o"]).astype(jnp.float32)).reshape(B, T, H, hd)
+    return q, k, v, i_log, f_log, o
+
+
+def mlstm_apply(cfg, p, x, ctx, with_state: bool = False):
+    h0 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, i_log, f_log, o = _mlstm_qkvg(cfg, p, h0)
+    B = x.shape[0]
+    state = mlstm_init_state(cfg, B, 0)
+
+    def step(s, inp):
+        qt, kt, vt, it, ft = inp
+        s, h = _mlstm_cell(s, qt, kt, vt, it, ft)
+        return s, h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_log.swapaxes(0, 1), f_log.swapaxes(0, 1))
+    final, hs = jax.lax.scan(step, state, xs)
+    h = hs.swapaxes(0, 1) * o                        # (B, T, H, hd)
+    out = h.reshape(*x.shape[:2], cfg.d_qkv).astype(x.dtype) @ p["w_out"]
+    return _block(cfg, p, x, out), (final if with_state else None)
+
+
+def mlstm_decode(cfg, p, x, state: MLSTMState, ctx):
+    h0 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, i_log, f_log, o = _mlstm_qkvg(cfg, p, h0)
+    state, h = _mlstm_cell(state, q[:, 0], k[:, 0], v[:, 0], i_log[:, 0],
+                           f_log[:, 0])
+    h = h[:, None] * o
+    out = h.reshape(x.shape[0], 1, cfg.d_qkv).astype(x.dtype) @ p["w_out"]
+    return _block(cfg, p, x, out), state
+
+
+def slstm_defs(cfg) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "norm": ParamDef((d,), (None,), init="zeros"),
+        "w_zifo": ParamDef((d, 4 * H * hd), ("embed_tp", "qkv")),
+        "r_zifo": ParamDef((H, hd, 4 * hd), (None, None, None)),
+        "w_out": ParamDef((H * hd, d), ("qkv", "embed_tp")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, H, hd)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray
+
+
+def slstm_init_state(cfg, batch: int, cache_len: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, H, hd), -30.0,
+                                                jnp.float32))
+
+
+def _slstm_cell(state: SLSTMState, zifo_x, r):
+    """zifo_x: (B, H, 4*hd) input contribution; r: (H, hd, 4*hd)."""
+    rec = jnp.einsum("bhd,hdk->bhk", state.h, r.astype(jnp.float32))
+    z, i_log, f_log, o = jnp.split(zifo_x.astype(jnp.float32) + rec, 4,
+                                   axis=-1)
+    f_log = jax.nn.log_sigmoid(f_log + 1.0)
+    m_new = jnp.maximum(f_log + state.m, i_log)
+    f_ = jnp.exp(f_log + state.m - m_new)
+    i_ = jnp.exp(i_log - m_new)
+    c = f_ * state.c + i_ * jnp.tanh(z)
+    n = f_ * state.n + i_
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new), h
+
+
+def slstm_apply(cfg, p, x, ctx, with_state: bool = False):
+    h0 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    B, T, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    zifo = (h0 @ p["w_zifo"]).reshape(B, T, H, 4 * hd)
+    state = slstm_init_state(cfg, B, 0)
+
+    def step(s, inp):
+        return _slstm_cell(s, inp, p["r_zifo"])
+
+    final, hs = jax.lax.scan(step, state, zifo.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                            # (B, T, H, hd)
+    out = h.reshape(B, T, H * hd).astype(x.dtype) @ p["w_out"]
+    return _block(cfg, p, x, out), (final if with_state else None)
+
+
+def slstm_decode(cfg, p, x, state: SLSTMState, ctx):
+    h0 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    zifo = (h0 @ p["w_zifo"]).reshape(B, 1, H, 4 * hd)
+    state, h = _slstm_cell(state, zifo[:, 0], p["r_zifo"])
+    out = h[:, None].reshape(B, 1, H * hd).astype(x.dtype) @ p["w_out"]
+    return _block(cfg, p, x, out), state
+
+
+# ===========================================================================
+# Block registry
+# ===========================================================================
+
+def block_defs(cfg, kind: str) -> dict:
+    if kind in ("attn", "local_attn"):
+        return attn_defs(cfg)
+    if kind == "moe":
+        d = attn_defs(cfg)
+        d.pop("mlp", None)
+        d.pop("mlp_norm", None)
+        d["moe"] = moe_defs(cfg)
+        return d
+    if kind == "rglru":
+        return rglru_defs(cfg)
+    if kind == "mlstm":
+        return mlstm_defs(cfg)
+    if kind == "slstm":
+        return slstm_defs(cfg)
+    raise KeyError(kind)
+
+
+def block_apply(cfg, kind: str, p, x, ctx, with_state: bool = False):
+    """-> (x', aux_loss, state_or_None)."""
+    zero = jnp.float32(0.0)
+    if kind in ("attn", "local_attn"):
+        local = kind == "local_attn"
+        xo = attn_apply(cfg, p, x, ctx, local=local)
+        return xo, zero, None
+    if kind == "moe":
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        x = x + _attn_core(cfg, p, h, ctx, local=False)
+        hm = rmsnorm(x, p["moe"]["norm"], cfg.norm_eps)
+        Bs, T, d = x.shape
+        if cfg.moe.grouped:
+            out, probs = moe_ffn_grouped(cfg, p["moe"], hm)
+            out = out.reshape(Bs, T, d)
+        else:
+            out, probs = moe_ffn(cfg, p["moe"], hm.reshape(Bs * T, d))
+            out = out.reshape(Bs, T, d)
+        x = x + out
+        return x, moe_aux_loss(probs, cfg), None
+    if kind == "rglru":
+        xo, st = rglru_apply(cfg, p, x, ctx, with_state)
+        return xo, zero, st
+    if kind == "mlstm":
+        xo, st = mlstm_apply(cfg, p, x, ctx, with_state)
+        return xo, zero, st
+    if kind == "slstm":
+        xo, st = slstm_apply(cfg, p, x, ctx, with_state)
+        return xo, zero, st
+    raise KeyError(kind)
+
+
+def block_init_state(cfg, kind: str, batch: int, cache_len: int):
+    if kind == "attn":
+        return attn_init_state(cfg, batch, cache_len, local=False)
+    if kind == "local_attn":
+        return attn_init_state(cfg, batch, cache_len, local=True)
+    if kind == "moe":
+        return attn_init_state(cfg, batch, cache_len, local=False)
+    if kind == "rglru":
+        return rglru_init_state(cfg, batch, cache_len)
+    if kind == "mlstm":
+        return mlstm_init_state(cfg, batch, cache_len)
+    if kind == "slstm":
+        return slstm_init_state(cfg, batch, cache_len)
+    raise KeyError(kind)
+
+
+def block_decode(cfg, kind: str, p, x, state, ctx):
+    if kind == "attn":
+        return attn_decode(cfg, p, x, state, ctx, local=False)
+    if kind == "local_attn":
+        return attn_decode(cfg, p, x, state, ctx, local=True)
+    if kind == "moe":
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, h, ctx, False)
+        o, state = _cache_update_attend(cfg, q, k, v, state, ctx, False)
+        x = x + o.reshape(x.shape[0], 1, cfg.d_qkv) @ p["wo"]
+        x = moe_apply(cfg, p["moe"], x, ctx)
+        return x, state
+    if kind == "rglru":
+        return rglru_decode(cfg, p, x, state, ctx)
+    if kind == "mlstm":
+        return mlstm_decode(cfg, p, x, state, ctx)
+    if kind == "slstm":
+        return slstm_decode(cfg, p, x, state, ctx)
+    raise KeyError(kind)

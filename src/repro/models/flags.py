@@ -1,0 +1,34 @@
+"""Lowering-mode flags.
+
+Production lowering keeps `lax.scan` rolled: O(pattern)-sized HLO, fast
+compiles, identical semantics.  XLA's cost model, however, counts a while
+body ONCE regardless of trip count (verified in EXPERIMENTS.md §Dry-run),
+which would corrupt the roofline terms.  Dry-run cost lowering therefore
+sets ``unroll_scans = True``: every counted loop (layer groups, attention
+kv/q chunks, loss chunks) lowers with `unroll=length`, making
+``cost_analysis()`` exact.  Sequential token scans in mLSTM/sLSTM stay
+rolled even then (unrolling 4k+ steps is infeasible); their in-loop FLOPs
+are added analytically by benchmarks/roofline.py (documented error < ~12%
+of the affected arch's total, 0 for all others).
+"""
+
+unroll_scans = False
+attn_chunk_override = None    # force attention bq/bk (cost probes)
+
+
+def set_unroll(on: bool):
+    global unroll_scans
+    unroll_scans = on
+
+
+def set_attn_chunk(n):
+    global attn_chunk_override
+    attn_chunk_override = n
+
+
+def scan_unroll(length: int) -> int:
+    return length if (unroll_scans and length > 0) else 1
+
+
+def attn_chunk(default: int) -> int:
+    return attn_chunk_override if attn_chunk_override else default

@@ -1,0 +1,250 @@
+"""Core NN layers: params-as-data, RMSNorm, RoPE/M-RoPE, chunked (flash)
+attention, SwiGLU — all pure functions over explicit param pytrees.
+
+Layout conventions:
+  activations  (B, T, D)      batch -> ("pod","data"), D replicated
+  attention    (B, T, H, Dh)  H -> "model" when divisible (GSPMD propagates)
+  weights      declared via ParamDef logical axes (sharding/rules.py)
+
+Everything must lower cleanly at 500k sequence length, so attention is
+chunked (online softmax over kv blocks) and never materializes (T, T).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import flags
+
+PARAM_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    logical_axes: tuple
+    init: str = "normal"        # normal | zeros | ones
+    fan_in_dims: tuple = (-2,)  # dims whose product scales normal init
+
+
+def init_param(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, PARAM_DTYPE)
+    if d.init == "ones":
+        return jnp.ones(d.shape, PARAM_DTYPE)
+    fan_in = int(np.prod([d.shape[i] for i in d.fan_in_dims])) or 1
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(
+        PARAM_DTYPE)
+
+
+def init_tree(key, defs: dict) -> dict:
+    flat = sorted(_flatten(defs))
+    keys = jax.random.split(key, max(len(flat), 1))
+    out = {}
+    for (path, d), k in zip(flat, keys):
+        _set(out, path, init_param(k, d))
+    return out
+
+
+def _flatten(defs, prefix=()):
+    for k, v in defs.items():
+        if isinstance(v, dict):
+            yield from _flatten(v, prefix + (k,))
+        else:
+            yield (prefix + (k,), v)
+
+
+def _set(tree, path, value):
+    for p in path[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[path[-1]] = value
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    half = x.shape[-1] // 2
+    freqs = _rope_freqs(x.shape[-1], theta)                  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0,
+                sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE.  positions3: (B, T, 3) = (t, h, w) ids.
+    The half-dim rotary channels are partitioned into `sections`, each
+    rotated by its own position stream."""
+    half = x.shape[-1] // 2
+    sec = np.array(sections, np.int64)
+    sec = (sec * half // sec.sum()).tolist()
+    sec[-1] += half - sum(sec)                    # absorb rounding
+    freqs = _rope_freqs(x.shape[-1], theta)       # (half,)
+    # choose the position stream per frequency channel
+    stream = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                              for i, s in enumerate(sec)])
+    pos = jnp.take_along_axis(
+        positions3, stream[None, None, :].astype(jnp.int32), axis=-1
+    ).astype(jnp.float32)                         # (B, T, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash) attention — XLA path (Pallas kernel is the TPU target)
+# ---------------------------------------------------------------------------
+
+def flash_attention_xla(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, bq: int = 512,
+                        bk: int = 512):
+    """Online-softmax chunked attention with static causal/window block
+    skipping.
+
+    q: (B, Tq, H, Dh); k, v: (B, Tk, Hkv, Dh).  GQA is handled by
+    reshaping q to (B, Tq, Hkv, rep, Dh) and contracting per kv head —
+    no materialized repeat of k/v.
+
+    The q-chunk loop is a *python* loop: each chunk slices only the kv
+    range it can attend to ([0, hi) causal; [hi-window-bq, hi) local), so
+    blocks above the diagonal / outside the window cost no FLOPs — the
+    §Perf compute-term fix (the rolled-scan variant computed all blocks
+    and masked).
+    """
+    B, Tq, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+
+    bq = min(flags.attn_chunk(bq), Tq)
+    bk = min(flags.attn_chunk(bk), Tk)
+    Tqp = -(-Tq // bq) * bq
+    Tkp = -(-Tk // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tkp - Tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tkp - Tk), (0, 0), (0, 0)))
+
+    def q_chunk(qc, qi, lo, hi):
+        """qc (B, bq, Hkv, rep, Dh); attends kv positions [lo, hi)."""
+        qc = qc.astype(jnp.float32) * scale
+        nkb = (hi - lo) // bk
+        ks = kp[:, lo:hi].reshape(B, nkb, bk, Hkv, Dh)
+        vs = vp[:, lo:hi].reshape(B, nkb, bk, Hkv, Dh)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            kc, vc, ki = args2                         # (B, bk, Hkv, Dh)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qc,
+                           kc.astype(jnp.float32))     # (B,Hkv,rep,bq,bk)
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = lo + ki * bk + \
+                jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = cols < Tk
+            if causal:
+                mask &= rows >= cols
+            if window is not None:
+                mask &= (rows - cols) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, rep, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, bq, Dh), jnp.float32)
+        kidx = jnp.arange(nkb, dtype=jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kidx),
+            unroll=flags.scan_unroll(nkb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hkv,rep,bq,Dh)
+        return jnp.einsum("bgrqd->bqgrd", out)
+
+    outs = []
+    for qi in range(Tqp // bq):
+        hi = min((qi + 1) * bq, Tkp) if causal else Tkp
+        hi = -(-hi // bk) * bk                        # round up to kv blocks
+        lo = 0
+        if window is not None:
+            # first row of the chunk still needs col >= qi*bq - window + 1
+            lo = max(0, qi * bq - (window - 1))
+            lo = (lo // bk) * bk                      # round down to blocks
+        qc = qp[:, qi * bq:(qi + 1) * bq].reshape(B, bq, Hkv, rep, Dh)
+        outs.append(q_chunk(qc, qi, lo, hi))
+    out = jnp.concatenate(outs, axis=1).reshape(B, Tqp, H, Dh)
+    return out[:, :Tq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, Dh); k_cache/v_cache: (B, S, Hkv, Dh); cache_len: ()
+    — entries at positions >= cache_len are masked.  For local attention
+    the cache is a ring buffer of size window and fully attended."""
+    B, _, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qf = q.reshape(B, Hkv, rep, Dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bgrd,bsgd->bgrs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    mask = pos[None, None, None, :] < cache_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def ffn_defs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed_tp", "ffn")),
+        "w_up": ParamDef((d_model, d_ff), ("embed_tp", "ffn")),
+        "w_down": ParamDef((d_ff, d_model), ("ffn", "embed_tp")),
+    }
+
+
+def ffn_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,337 @@
+"""Model assembly: embeddings/frontends -> scanned block groups -> head.
+
+Depth is organized as ``n_groups`` repetitions of ``cfg.block_pattern``
+(+ a remainder prefix), with the repeated groups executed under
+``jax.lax.scan`` over *stacked* parameters.  This keeps the lowered HLO
+size O(pattern) instead of O(n_layers) — both the activation-checkpointing
+policy (remat per group) and the reason 64 production-mesh compiles are
+tractable on this box.
+
+Interfaces (all pure):
+  param_defs(cfg)                      ParamDef tree (shapes + logical axes)
+  init_params(cfg, key)                random params (smoke tests / examples)
+  forward(cfg, params, batch, *, return_states)
+                                       -> (final_hidden, aux_loss[, states])
+  logits_and_loss(cfg, params, batch)  chunked-vocab xent (train objective)
+  init_cache(cfg, batch, cache_len)    stacked decode state
+  decode_step(cfg, params, cache, batch) -> (logits, cache')
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks as B
+from repro.models import flags
+from repro.models.layers import ParamDef, init_tree, rmsnorm
+
+VIS_FRAC = 8      # vision stub: first T/VIS_FRAC positions are patch embeds
+
+
+class Batch(NamedTuple):
+    """Model inputs.  Unused fields are None."""
+    tokens: jnp.ndarray                 # (B, T) int32 or (B, T, K) audio
+    positions: jnp.ndarray              # (B, T) or (B, T, 3) for mrope
+    labels: Optional[jnp.ndarray] = None
+    vis_embeds: Optional[jnp.ndarray] = None   # (B, T//VIS_FRAC, D)
+    cache_index: Optional[jnp.ndarray] = None  # () decode write slot
+    cache_len: Optional[jnp.ndarray] = None    # () valid length after write
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+def _stack_defs(defs: dict, g: int) -> dict:
+    out = {}
+    for k, v in defs.items():
+        if isinstance(v, dict):
+            out[k] = _stack_defs(v, g)
+        else:
+            out[k] = ParamDef((g,) + v.shape, (None,) + v.logical_axes,
+                              init=v.init,
+                              fan_in_dims=tuple(d - 1 if d < 0 else d + 1
+                                                for d in v.fan_in_dims))
+    return out
+
+
+def param_defs(cfg) -> dict:
+    d = cfg.d_model
+    defs: dict = {}
+    if cfg.frontend == "audio_stub":
+        defs["embed"] = ParamDef((cfg.n_codebooks, cfg.vocab, d),
+                                 (None, "vocab", None))
+        if not cfg.tie_embeddings:
+            defs["unembed"] = ParamDef((cfg.n_codebooks, d, cfg.vocab),
+                                       (None, None, "vocab"))
+    else:
+        defs["embed"] = ParamDef((cfg.vocab, d), ("vocab", "embed_tp"))
+        if not cfg.tie_embeddings:
+            defs["unembed"] = ParamDef((d, cfg.vocab), (None, "vocab"))
+    defs["final_norm"] = ParamDef((d,), (None,), init="zeros")
+
+    G = cfg.n_groups()
+    if G:
+        group = {f"b{j}": B.block_defs(cfg, kind)
+                 for j, kind in enumerate(cfg.block_pattern)}
+        defs["groups"] = _stack_defs(group, G)
+    rem = {}
+    for j in range(cfg.n_remainder()):
+        rem[f"r{j}"] = B.block_defs(cfg, cfg.block_pattern[j])
+    if rem:
+        defs["rem"] = rem
+    return defs
+
+
+def init_params(cfg, key) -> dict:
+    return init_tree(key, param_defs(cfg))
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    def walk(defs, path=()):
+        total = 0
+        for k, v in defs.items():
+            if isinstance(v, dict):
+                total += walk(v, path + (k,))
+            else:
+                n = int(np.prod(v.shape))
+                if active_only and cfg.moe and "moe" in path and \
+                        k in ("w_gate", "w_up", "w_down"):
+                    n = n * cfg.moe.top_k // cfg.moe.num_experts
+                total += n
+        return total
+    return walk(param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / frontend stubs
+# ---------------------------------------------------------------------------
+
+def embed_input(cfg, params, batch: Batch):
+    if cfg.frontend == "audio_stub":
+        # tokens (B, T, K): sum the K codebook embeddings (MusicGen)
+        embeds = params["embed"]                       # (K, V, D)
+        x = sum(embeds[k][batch.tokens[..., k]]
+                for k in range(cfg.n_codebooks))
+    else:
+        x = params["embed"][batch.tokens]              # (B, T, D)
+    if cfg.frontend == "vision_stub" and batch.vis_embeds is not None:
+        nv = batch.vis_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, batch.vis_embeds.astype(x.dtype), 0, axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, batch: Batch, *, return_states: bool = False,
+            cache_len: int | None = None):
+    x = embed_input(cfg, params, batch)
+    ctx = B.Ctx(positions=batch.positions, cache_index=jnp.int32(0),
+                cache_len=jnp.int32(0))
+    aux = jnp.float32(0.0)
+    G = cfg.n_groups()
+    states_g = None
+
+    if G:
+        def body(carry, gp):
+            x, aux = carry
+            sts = {}
+            for j, kind in enumerate(cfg.block_pattern):
+                x, a, st = _apply_with_state(cfg, kind, gp[f"b{j}"], x, ctx,
+                                             return_states, cache_len)
+                aux = aux + a
+                sts[f"b{j}"] = st
+            return (x, aux), (sts if return_states else None)
+
+        body = jax.checkpoint(body)
+        (x, aux), states_g = jax.lax.scan(body, (x, aux), params["groups"],
+                                          unroll=flags.scan_unroll(G))
+
+    states_r = {}
+    for j in range(cfg.n_remainder()):
+        kind = cfg.block_pattern[j]
+        x, a, st = _apply_with_state(cfg, kind, params["rem"][f"r{j}"], x,
+                                     ctx, return_states, cache_len)
+        aux = aux + a
+        states_r[f"r{j}"] = st
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_states:
+        states = {}
+        if states_g is not None:
+            states["groups"] = states_g
+        if states_r:
+            states["rem"] = states_r
+        return x, aux, states
+    return x, aux
+
+
+def _apply_with_state(cfg, kind, p, x, ctx, return_states, cache_len):
+    xin = x
+    x, aux, st = B.block_apply(cfg, kind, p, x, ctx,
+                               with_state=return_states)
+    if return_states and kind in ("attn", "local_attn", "moe"):
+        # attention caches are recomputed k/v of the prefix, ring-aligned
+        st = _prefill_attn_state(cfg, p, ctx, xin, cache_len,
+                                 local=(kind == "local_attn"))
+    return x, aux, st
+
+
+def _prefill_attn_state(cfg, p, ctx, x, cache_len, local: bool = False):
+    """Recompute k/v for the prefix and lay them into a decode cache."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    _, k, v = B._qkv(cfg, p, h, ctx, local)
+    Bs, T = x.shape[:2]
+    S = min(cfg.attn_window, cache_len) if (local and cfg.attn_window) \
+        else cache_len
+    if T >= S:
+        ks, vs = k[:, T - S:], v[:, T - S:]
+        slots = (jnp.arange(T - S, T, dtype=jnp.int32) % S) if local \
+            else jnp.arange(S, dtype=jnp.int32)
+    else:
+        ks, vs = k, v
+        slots = jnp.arange(T, dtype=jnp.int32)
+    shape = (Bs, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        kq, ksc = B.kv_quantize(ks)
+        vq, vsc = B.kv_quantize(vs)
+        z8 = jnp.zeros(shape, jnp.int8)
+        zs = jnp.zeros(shape[:3], jnp.float32)
+        return B.QuantAttnState(
+            k=z8.at[:, slots].set(kq), v=z8.at[:, slots].set(vq),
+            k_scale=zs.at[:, slots].set(ksc),
+            v_scale=zs.at[:, slots].set(vsc))
+    kc = jnp.zeros(shape, jnp.bfloat16).at[:, slots].set(
+        ks.astype(jnp.bfloat16))
+    vc = jnp.zeros(shape, jnp.bfloat16).at[:, slots].set(
+        vs.astype(jnp.bfloat16))
+    return B.AttnState(k=kc, v=vc)
+
+
+# ---------------------------------------------------------------------------
+# Loss head (vocab-chunked cross entropy)
+# ---------------------------------------------------------------------------
+
+def logits_and_loss(cfg, params, batch: Batch, seq_chunk: int = 512):
+    x, aux = forward(cfg, params, batch)
+    labels = batch.labels
+    Bs, T = x.shape[:2]
+    seq_chunk = min(seq_chunk, T)
+    Tp = -(-T // seq_chunk) * seq_chunk
+    xpad = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
+    lpad = jnp.pad(labels, [(0, 0), (0, Tp - T)] +
+                   [(0, 0)] * (labels.ndim - 2), constant_values=-1)
+    xc = jnp.moveaxis(xpad.reshape(Bs, Tp // seq_chunk, seq_chunk, -1), 1, 0)
+    lc = jnp.moveaxis(
+        lpad.reshape((Bs, Tp // seq_chunk, seq_chunk) + lpad.shape[2:]), 1, 0)
+
+    def chunk_loss(_, args):
+        xch, lch = args
+        return None, _xent(cfg, params, xch, lch)
+
+    nchunks = Tp // seq_chunk
+    _, (losses, counts) = jax.lax.scan(chunk_loss, None, (xc, lc),
+                                       unroll=flags.scan_unroll(nchunks))
+    total = jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1)
+    return total, aux
+
+
+def _unembed(cfg, params):
+    if cfg.tie_embeddings:
+        e = params["embed"]
+        return e.swapaxes(-1, -2)    # (V, D) -> (D, V); audio (K, V, D) -> (K, D, V)
+    return params["unembed"]
+
+
+def _xent(cfg, params, x, labels):
+    """x: (B, C, D); labels (B, C) or (B, C, K).  Returns (sum, count)."""
+    w = _unembed(cfg, params)
+    if cfg.frontend == "audio_stub":
+        lg = jnp.einsum("bcd,kdv->bckv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    else:
+        lg = jnp.einsum("bcd,dv->bcv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    true_lg = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, lse - true_lg, 0.0)
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def last_logits(cfg, params, x):
+    """Logits of the final position (prefill / decode head)."""
+    xl = x[:, -1:]
+    w = _unembed(cfg, params)
+    if cfg.frontend == "audio_stub":
+        return jnp.einsum("btd,kdv->btkv", xl.astype(jnp.float32),
+                          w.astype(jnp.float32))
+    return xl.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int):
+    G = cfg.n_groups()
+    cache: dict = {}
+    if G:
+        grp = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            st = B.block_init_state(cfg, kind, batch, cache_len)
+            grp[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (G,) + a.shape), st)
+        cache["groups"] = grp
+    rem = {}
+    for j in range(cfg.n_remainder()):
+        rem[f"r{j}"] = B.block_init_state(cfg, cfg.block_pattern[j], batch,
+                                          cache_len)
+    if rem:
+        cache["rem"] = rem
+    return cache
+
+
+def decode_step(cfg, params, cache, batch: Batch):
+    """One token for every sequence in the batch.  tokens: (B, 1[, K])."""
+    x = embed_input(cfg, params, batch)
+    ctx = B.Ctx(positions=batch.positions, cache_index=batch.cache_index,
+                cache_len=batch.cache_len)
+    G = cfg.n_groups()
+
+    if G:
+        def body(x, xs):
+            gp, st = xs
+            new_st = {}
+            for j, kind in enumerate(cfg.block_pattern):
+                x, s = B.block_decode(cfg, kind, gp[f"b{j}"], x,
+                                      st[f"b{j}"], ctx)
+                new_st[f"b{j}"] = s
+            return x, new_st
+
+        x, new_groups = jax.lax.scan(body, x,
+                                     (params["groups"], cache["groups"]),
+                                     unroll=flags.scan_unroll(G))
+        new_cache = {"groups": new_groups}
+    else:
+        new_cache = {}
+
+    if cfg.n_remainder():
+        rem = {}
+        for j in range(cfg.n_remainder()):
+            kind = cfg.block_pattern[j]
+            x, s = B.block_decode(cfg, kind, params["rem"][f"r{j}"], x,
+                                  cache["rem"][f"r{j}"], ctx)
+            rem[f"r{j}"] = s
+        new_cache["rem"] = rem
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return last_logits(cfg, params, x), new_cache

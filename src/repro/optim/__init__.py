@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                               cosine_lr)
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_lr"]

@@ -1,0 +1,83 @@
+"""AdamW + cosine schedule + global-norm clipping, pure pytree functions.
+
+Optimizer moments inherit each parameter's sharding (ZeRO-1 falls out of
+the parameter sharding specs for free under pjit), stored in bf16 with an
+f32 scalar step — the large-model memory budget documented in DESIGN.md.
+Optional int8 gradient compression with error feedback lives in
+runtime/compress.py and wraps `adamw_update`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "bfloat16"
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw_init(params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, params, state: OptState, cfg: AdamWConfig):
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+        mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        pf = p.astype(jnp.float32)
+        pnew = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * pf)
+        return pnew.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, params, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v), \
+        {"lr": lr, "grad_norm": gnorm}

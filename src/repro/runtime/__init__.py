@@ -1,0 +1,6 @@
+from repro.runtime.fault import (FaultConfig, StragglerMonitor,
+                                 run_with_restarts)
+from repro.runtime.compress import make_int8_compressor
+
+__all__ = ["FaultConfig", "StragglerMonitor", "run_with_restarts",
+           "make_int8_compressor"]

@@ -1,0 +1,3 @@
+from repro.serve.step import make_decode_step, make_prefill_step, serve_batch
+
+__all__ = ["make_decode_step", "make_prefill_step", "serve_batch"]

@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ShardingRules, DEFAULT_RULES, choose_spec,
+                                  spec_tree, named_sharding)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "choose_spec", "spec_tree",
+           "named_sharding"]

@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every parameter/input declares *logical* axis names; ``choose_spec`` maps
+them to mesh axes with the production rules below, skipping any assignment
+whose dimension is not divisible by the mesh-axis size (e.g. 40 attention
+heads on a 16-way model axis) and falling back to the next candidate dim.
+A mesh axis is used at most once per spec.
+
+Rules (single-pod (data, model) / multi-pod (pod, data, model)):
+  batch      -> (pod, data)      data parallel across pods x pod-minors
+  seq        -> data             sequence parallelism (long-context decode)
+  vocab      -> model            embedding/logits TP
+  ffn        -> model            MLP TP (megatron style)
+  heads      -> model            attention-head TP when divisible
+  qkv        -> model            flattened head*dim projection output
+  embed_tp   -> model            fallback: shard d_model (FSDP-ish row TP)
+  experts    -> model            expert parallelism (MoE)
+  layers,embed,head_dim,window,... -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple = (
+        ("batch", ("pod", "data")),
+        ("seq_shard", ("data",)),
+        ("experts", ("model",)),     # EP first: experts own the model axis
+        ("vocab", ("model",)),
+        ("ffn", ("model",)),
+        ("heads", ("model",)),
+        ("qkv", ("model",)),
+        ("embed_tp", ("model",)),
+        ("kv_heads", ("model",)),
+    )
+
+    def candidates(self, logical: str) -> tuple:
+        for name, axes in self.rules:
+            if name == logical:
+                return axes
+        return ()
+
+
+DEFAULT_RULES = ShardingRules()
+
+# FSDP(+TP) rules: weight dims may additionally shard over the *data* axis
+# (ZeRO-3 style fully-sharded weights + optimizer moments).  Activations
+# keep batch on (pod, data); XLA inserts per-layer weight all-gathers and
+# gradient reduce-scatters.  This is the memory lever for the 400B-scale
+# cells (EXPERIMENTS.md §Perf).
+FSDP_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("seq_shard", ("data",)),
+    ("experts", ("model",)),         # EP first: experts own the model axis
+    ("vocab", ("model", "data")),
+    ("ffn", ("model", "data")),
+    ("heads", ("model",)),
+    ("qkv", ("model", "data")),
+    ("embed_tp", ("model", "data")),
+    ("kv_heads", ("model",)),
+))
+
+
+def _axis_size(mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.shape else 0
+
+
+def choose_spec(shape, logical_axes, mesh, rules: ShardingRules = DEFAULT_RULES):
+    """Map per-dim logical names to a PartitionSpec.
+
+    logical_axes: one logical name (or None) per dim.  Dims are processed
+    left-to-right; each mesh axis is assigned at most once; non-divisible
+    assignments are skipped (the dim stays replicated or a later dim takes
+    the mesh axis).
+    """
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    out: list = [None] * len(shape)
+    # assign dims in rule-precedence order (rules list order), so that e.g.
+    # "ffn" wins the model axis over the "embed_tp" fallback dim
+    prec = {name: i for i, (name, _) in enumerate(rules.rules)}
+    order = sorted(range(len(shape)),
+                   key=lambda i: prec.get(logical_axes[i], len(prec) + 1))
+    for i in order:
+        dim, logical = shape[i], logical_axes[i]
+        if logical is None:
+            continue
+        cands = rules.candidates(logical)
+        # multi-axis assignment (e.g. batch over (pod, data)): use the
+        # largest prefix of available axes whose product divides the dim
+        assign = []
+        prod = 1
+        for ax in cands:
+            sz = _axis_size(mesh, ax)
+            if sz and ax not in used and dim % (prod * sz) == 0:
+                assign.append(ax)
+                prod *= sz
+        if assign:
+            used.update(assign)
+            out[i] = tuple(assign) if len(assign) > 1 else assign[0]
+    return P(*out)
+
+
+def spec_tree(defs: dict, mesh, rules: ShardingRules = DEFAULT_RULES) -> dict:
+    """defs: {name: ParamDef} -> {name: PartitionSpec} (same tree)."""
+    return {k: choose_spec(v.shape, v.logical_axes, mesh, rules)
+            for k, v in defs.items()}
+
+
+def named_sharding(tree, mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,127 @@
+"""Cross-standard timing matrix: the classic JEDEC constraints must hold on
+EVERY modeled standard (fine-grained Listing-2 probes, parameterized)."""
+import pytest
+
+from repro.core import DeviceUnderTest, all_standards, get_standard
+
+CASES = [(name, next(iter(std.org_presets)), next(iter(std.timing_presets)))
+         for name, std in sorted(all_standards().items())]
+
+
+def _dut(name, org, tim):
+    return DeviceUnderTest(name, org, tim)
+
+
+def _addr(dut, **kw):
+    base = {lv: 0 for lv in dut.cspec.levels[1:]}
+    base.update(row=kw.get("row", 3), col=0)
+    for k, v in kw.items():
+        if k in base:
+            base[k] = v
+    return base
+
+
+def _open_row(dut, addr, clk=0):
+    """Issue the (possibly split) activation; returns first legal RD clk."""
+    cs = dut.cspec
+    if cs.split_activation:
+        dut.issue("ACT1", addr, clk=clk)
+        t2 = clk + dut.timings["nAAD_MIN"]
+        dut.issue("ACT2", addr, clk=t2)
+        return t2 + dut.timings["nRCD"]
+    dut.issue("ACT", addr, clk=clk)
+    return clk + dut.timings["nRCD"]
+
+
+@pytest.mark.device_timings
+@pytest.mark.parametrize("name,org,tim", CASES)
+class TestEveryStandard:
+    def test_rd_needs_activation_then_nrcd(self, name, org, tim):
+        dut = _dut(name, org, tim)
+        addr = _addr(dut)
+        r = dut.probe("RD", addr, clk=0)
+        assert r.preq in ("ACT", "ACT1") and r.ready is False
+        t = _open_row(dut, addr)
+        assert dut.probe("RD", addr, clk=t - 1).timing_OK is False
+        ok = dut.probe("RD", addr, clk=t)
+        assert ok.timing_OK is True and ok.row_hit is True
+
+    def test_row_conflict_needs_precharge(self, name, org, tim):
+        dut = _dut(name, org, tim)
+        addr = _addr(dut, row=3)
+        _open_row(dut, addr)
+        other = dict(addr, row=9)
+        assert dut.probe("RD", other, clk=500).preq == "PRE"
+
+    def test_precharge_respects_nras(self, name, org, tim):
+        dut = _dut(name, org, tim)
+        addr = _addr(dut)
+        cs = dut.cspec
+        opener_clk = 0
+        if cs.split_activation:
+            dut.issue("ACT1", addr, clk=0)
+            opener_clk = dut.timings["nAAD_MIN"]
+            dut.issue("ACT2", addr, clk=opener_clk)
+        else:
+            dut.issue("ACT", addr, clk=0)
+        nras = dut.timings["nRAS"]
+        assert dut.probe("PRE", addr, clk=opener_clk + nras - 1).timing_OK \
+            is False
+        assert dut.probe("PRE", addr, clk=opener_clk + nras).timing_OK is True
+
+    def test_refresh_blocks_activation_for_nrfc(self, name, org, tim):
+        dut = _dut(name, org, tim)
+        addr = _addr(dut)
+        dut.issue("REFab", addr, clk=0)
+        opener = "ACT1" if dut.cspec.split_activation else "ACT"
+        nrfc = dut.timings["nRFC"]
+        assert dut.probe(opener, addr, clk=nrfc - 1).timing_OK is False
+        assert dut.probe(opener, addr, clk=nrfc).timing_OK is True
+
+    def test_faw_window_on_opener(self, name, org, tim):
+        dut = _dut(name, org, tim)
+        cs = dut.cspec
+        opener = "ACT1" if cs.split_activation else "ACT"
+        # 4 activations to distinct banks at the min legal spacing
+        banks = []
+        counts = {lv: int(cs.level_counts[i + 1])
+                  for i, lv in enumerate(cs.levels[1:])}
+        for bg in range(counts.get("bankgroup", 1)):
+            for b in range(counts["bank"]):
+                banks.append((bg, b))
+        if len(banks) < 5:
+            pytest.skip("not enough banks for a FAW test")
+        t = 0
+        for i in range(4):
+            bg, b = banks[i]
+            a = _addr(dut, bankgroup=bg, bank=b, row=1)
+            while not dut.probe(opener, a, clk=t).timing_OK:
+                t += 1
+            dut.issue(opener, a, clk=t)
+        bg, b = banks[4]
+        fifth = _addr(dut, bankgroup=bg, bank=b, row=1)
+        e = dut.earliest(opener, fifth)
+        assert e >= dut.timings["nFAW"], (name, e)
+
+    def test_write_read_turnaround(self, name, org, tim):
+        dut = _dut(name, org, tim)
+        addr = _addr(dut)
+        t = _open_row(dut, addr)
+        cs = dut.cspec
+        if cs.data_clock_sync:   # bring the data clock up first
+            sync = "RCKSTRT" if cs.id_RCKSTRT >= 0 else "CAS_WR"
+            dut.issue(sync, addr, clk=t)
+            t += dut.timings.get("nWCKEN", dut.timings.get("nRCKEN", 2))
+        dut.issue("WR", addr, clk=t)
+        wtr = dut.timings["nCWL"] + dut.timings["nBL"] + dut.timings["nWTR_S"]
+        assert dut.probe("RD", addr, clk=t + wtr - 1).timing_OK is False
+
+    def test_peak_bytes_positive_and_describe(self, name, org, tim):
+        std = get_standard(name)
+        info = std.describe()
+        assert info["name"] == name
+        assert info["n_constraints"] > 15
+        dut = _dut(name, org, tim)
+        assert dut.cspec.peak_bytes_per_cycle > 0
+        # per-device access granularity: dq x burst / 8
+        assert 8 <= dut.cspec.access_bytes <= 128

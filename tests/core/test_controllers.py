@@ -1,0 +1,112 @@
+"""Controller workflow tests: FR-FCFS, refresh, BlockHammer, PRAC predicates."""
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, FrontendConfig, Simulator, throughput_gbps
+
+
+def test_frfcfs_prefers_row_hits():
+    """Sequential streaming under FRFCFS ~> few ACTs per many RDs."""
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(probes=False))
+    stats = sim.run(8000, interval=2.0, read_ratio=1.0)
+    counts = dict(zip(sim.cspec.cmd_names, stats.cmd_counts.tolist()))
+    assert counts["RD"] > 5 * max(counts["ACT"], 1), counts
+
+
+def test_fcfs_vs_frfcfs_random_traffic():
+    """FR-FCFS should not lose to FCFS."""
+    kw = dict(frontend=FrontendConfig(pattern="random", probes=False))
+    tp = {}
+    for sched in ("FRFCFS", "FCFS"):
+        sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                        controller=ControllerConfig(scheduler=sched), **kw)
+        stats = sim.run(8000, interval=2.0, read_ratio=1.0)
+        tp[sched] = throughput_gbps(sim.cspec, stats)
+    assert tp["FRFCFS"] >= tp["FCFS"] * 0.99
+
+
+def test_refresh_issued_at_nrefi():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(stream=False, probes=False))
+    n = 4 * sim.cspec.timings["nREFI"] + 100
+    stats = sim.run(n)
+    counts = dict(zip(sim.cspec.cmd_names, stats.cmd_counts.tolist()))
+    # idle system: one REFab per rank per nREFI window
+    ranks = sim.cspec.n_refresh_units
+    assert counts["REFab"] == 4 * ranks, counts
+
+
+def test_refresh_preempts_under_load():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(probes=False))
+    n = 3 * sim.cspec.timings["nREFI"]
+    stats = sim.run(n, interval=1.0, read_ratio=1.0)
+    counts = dict(zip(sim.cspec.cmd_names, stats.cmd_counts.tolist()))
+    assert counts["REFab"] >= 2, "refresh starved under load"
+
+
+def test_blockhammer_defers_hammering():
+    """A single-row hammer pattern must see ACTs deferred by the predicate."""
+    import jax.numpy as jnp
+    from repro.core import controller as C
+
+    # custom frontend-free scenario: hammer via extra predicate accounting
+    base = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     controller=ControllerConfig(blockhammer_threshold=8),
+                     frontend=FrontendConfig(pattern="random", probes=False))
+    # random pattern with tiny row space => heavy per-row reuse
+    base.cspec.rows = 2     # hammer: only 2 distinct rows ever targeted
+    stats = base.run(20000, interval=2.0, read_ratio=1.0)
+    assert int(stats.deferred) > 0, "BlockHammer predicate never fired"
+
+
+def test_blockhammer_neutral_on_benign_traffic():
+    cfg = ControllerConfig(blockhammer_threshold=512)
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", controller=cfg,
+                    frontend=FrontendConfig(probes=False))
+    plain = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      frontend=FrontendConfig(probes=False))
+    s1 = sim.run(6000, interval=2.0, read_ratio=1.0)
+    s2 = plain.run(6000, interval=2.0, read_ratio=1.0)
+    t1, t2 = (throughput_gbps(sim.cspec, s) for s in (s1, s2))
+    assert t1 >= t2 * 0.95, "BlockHammer tanked benign throughput"
+
+
+def test_prac_recovery_blocks_and_resets():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    controller=ControllerConfig(prac_threshold=16),
+                    frontend=FrontendConfig(pattern="random", probes=False))
+    sim.cspec.rows = 4
+    stats = sim.run(20000, interval=2.0, read_ratio=1.0)
+    counts = dict(zip(sim.cspec.cmd_names, stats.cmd_counts.tolist()))
+    nrefi_refs = 20000 // sim.cspec.timings["nREFI"] + 1
+    ranks = sim.cspec.n_refresh_units
+    # PRAC alerts ride the refresh engine -> more REFab than time-based alone
+    assert counts["REFab"] > nrefi_refs * ranks, counts
+
+
+def test_user_predicate_composes():
+    """Paper §2: arbitrary lambdas can be injected into the base workflow."""
+    import jax.numpy as jnp
+
+    def no_writes_ever(cspec, ctx):
+        return ctx.cand_cmd != jnp.int32(cspec.id_WR)
+
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    controller=ControllerConfig(
+                        extra_predicates=(no_writes_ever,)),
+                    frontend=FrontendConfig(probes=False))
+    stats = sim.run(4000, interval=2.0, read_ratio=0.5)
+    counts = dict(zip(sim.cspec.cmd_names, stats.cmd_counts.tolist()))
+    assert counts["WR"] == 0
+    assert counts["RD"] > 0
+
+
+def test_queue_backpressure():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    controller=ControllerConfig(queue_depth=4),
+                    frontend=FrontendConfig(pattern="random", probes=False))
+    stats = sim.run(4000, interval=1.0, read_ratio=1.0)
+    # queue of 4 can't sustain 1 req/cycle of random misses
+    assert int(stats.reads_done) < 4000

@@ -1,0 +1,54 @@
+"""System-level validation (paper §4, Fig. 1): latency-throughput knees."""
+import numpy as np
+import pytest
+
+from repro.core import (FrontendConfig, Simulator, avg_probe_latency_ns,
+                        peak_gbps, throughput_gbps)
+
+
+@pytest.mark.slow
+def test_knee_curve_ddr4():
+    """Latency must be flat at low load and blow up near saturation, and
+    achieved throughput must approach the theoretical peak."""
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    points = []
+    for interval in (64.0, 16.0, 8.0, 4.0, 2.0, 1.0):
+        stats = sim.run(20000, interval=interval, read_ratio=1.0)
+        points.append((throughput_gbps(sim.cspec, stats),
+                       avg_probe_latency_ns(sim.cspec, stats)))
+    tput = [p[0] for p in points]
+    lat = [p[1] for p in points]
+    assert all(np.isfinite(lat)), points
+    # monotone non-decreasing throughput as load rises
+    assert all(tput[i] <= tput[i + 1] * 1.05 for i in range(len(tput) - 1))
+    # knee: saturated latency well above idle latency
+    assert lat[-1] > 2.0 * lat[0], points
+    # peak achieved (probes + refresh cost a few %)
+    assert tput[-1] >= 0.85 * peak_gbps(sim.cspec), points
+
+
+def test_dse_batch_matches_single_runs():
+    """vmap'd DSE engine == per-point runs (same seeds, same stats)."""
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    pts, batch = sim.run_batch(3000, intervals=[8.0, 2.0],
+                               read_ratios=[1.0, 0.5])
+    assert len(pts) == 4
+    for i, (interval, rr) in enumerate(pts):
+        single = sim.run(3000, interval=interval, read_ratio=rr)
+        assert int(batch.reads_done[i]) == int(single.reads_done)
+        assert int(batch.probe_lat_sum[i]) == int(single.probe_lat_sum)
+
+
+def test_dse_batch_scales():
+    sim = Simulator("HBM3", "HBM3_16Gb", "HBM3_5200",
+                    frontend=FrontendConfig(probes=False))
+    pts, batch = sim.run_batch(1500, intervals=[16, 8, 4, 2, 1],
+                               read_ratios=[1.0, 0.8, 0.6])
+    assert batch.reads_done.shape == (15,)
+    tp = [throughput_gbps(sim.cspec, _at(batch, i)) for i in range(15)]
+    assert max(tp) > 0
+
+
+def _at(stats, i):
+    import jax
+    return jax.tree.map(lambda a: a[i], stats)

@@ -1,0 +1,96 @@
+"""Fine-grained DDR4 probe test — reproduces the paper's Listing 2."""
+import pytest
+
+from repro.core import DeviceUnderTest
+
+pytestmark = pytest.mark.device_timings
+
+
+@pytest.fixture
+def dut():
+    return DeviceUnderTest("DDR4", org_preset="DDR4_8Gb_x8",
+                           timing_preset="DDR4_2400R")
+
+
+def test_listing2_rd_blocked_until_act_and_nrcd(dut):
+    addr = dut.addr_vec(Rank=0, BankGroup=0, Bank=0, Row=12, Column=0)
+
+    # Probe the states of the DRAM for a RD command at cycle 0
+    closed = dut.probe("RD", addr, clk=0)
+    assert closed.preq == "ACT"          # prerequisite command is ACT
+    assert closed.timing_OK is True      # no ACT issued yet -> timing is OK
+    assert closed.ready is False         # prerequisite not met
+
+    dut.issue("ACT", addr, clk=0)
+
+    # Before nRCD: row state correct for RD but timing still blocks it
+    early = dut.probe("RD", addr, clk=dut.timings["nRCD"] - 1)
+    assert early.preq == "RD"
+    assert early.timing_OK is False
+    assert early.ready is False
+    assert early.row_hit is True
+    assert early.row_open is True
+
+    # At nRCD the same command becomes legal
+    ontime = dut.probe("RD", addr, clk=dut.timings["nRCD"])
+    assert ontime.preq == "RD"
+    assert ontime.timing_OK is True
+    assert ontime.ready is True
+
+
+def test_row_miss_requires_precharge(dut):
+    addr = dut.addr_vec(Rank=0, BankGroup=1, Bank=2, Row=7, Column=0)
+    dut.issue("ACT", addr, clk=0)
+    other = dict(addr, row=9)
+    r = dut.probe("RD", other, clk=100)
+    assert r.preq == "PRE"
+    assert r.row_hit is False and r.row_open is True
+    dut.issue("PRE", other, clk=100)
+    r2 = dut.probe("RD", other, clk=100 + dut.timings["nRP"] - 1)
+    assert r2.preq == "ACT"   # closed again
+
+
+def test_nrc_act_to_act_same_bank(dut):
+    addr = dut.addr_vec(Rank=0, BankGroup=0, Bank=1, Row=1, Column=0)
+    dut.issue("ACT", addr, clk=0)
+    dut.issue("PRE", addr, clk=dut.timings["nRAS"])
+    clk_ok = dut.timings["nRC"]
+    assert dut.probe("ACT", addr, clk=clk_ok - 1).timing_OK is False
+    assert dut.probe("ACT", addr, clk=clk_ok).timing_OK is True
+
+
+def test_nfaw_window(dut):
+    # 4 ACTs to distinct banks; the 5th must wait for nFAW
+    t = 0
+    for b in range(4):
+        addr = dut.addr_vec(Rank=0, BankGroup=b, Bank=0, Row=1, Column=0)
+        assert dut.probe("ACT", addr, clk=t).timing_OK
+        dut.issue("ACT", addr, clk=t)
+        t += dut.timings["nRRD_S"]
+    fifth = dut.addr_vec(Rank=0, BankGroup=0, Bank=3, Row=1, Column=0)
+    assert dut.probe("ACT", fifth, clk=t).timing_OK is False
+    assert dut.probe("ACT", fifth, clk=dut.timings["nFAW"]).timing_OK is True
+
+
+def test_bankgroup_ccd_long_vs_short(dut):
+    a_same_bg = dut.addr_vec(Rank=0, BankGroup=0, Bank=0, Row=1, Column=0)
+    b_same_bg = dut.addr_vec(Rank=0, BankGroup=0, Bank=1, Row=1, Column=0)
+    c_diff_bg = dut.addr_vec(Rank=0, BankGroup=1, Bank=0, Row=1, Column=0)
+    for addr in (a_same_bg, b_same_bg, c_diff_bg):
+        dut.issue("ACT", addr, clk=0)
+    t = dut.timings["nRCD"]
+    dut.issue("RD", a_same_bg, clk=t)
+    # same bank group: nCCD_L applies; different group: nCCD_S
+    assert dut.probe("RD", b_same_bg, clk=t + dut.timings["nCCD_S"]).timing_OK is False
+    assert dut.probe("RD", b_same_bg, clk=t + dut.timings["nCCD_L"]).timing_OK is True
+    assert dut.probe("RD", c_diff_bg, clk=t + dut.timings["nCCD_S"]).timing_OK is True
+
+
+def test_write_to_precharge(dut):
+    addr = dut.addr_vec(Rank=0, BankGroup=2, Bank=0, Row=3, Column=0)
+    dut.issue("ACT", addr, clk=0)
+    t = dut.timings["nRCD"]
+    dut.issue("WR", addr, clk=t)
+    wait = dut.timings["nCWL"] + dut.timings["nBL"] + dut.timings["nWR"]
+    assert dut.probe("PRE", addr, clk=t + wait - 1).timing_OK is False
+    assert dut.probe("PRE", addr, clk=t + wait).timing_OK is True

@@ -1,0 +1,99 @@
+"""Spec authoring + "codegen" (compile-to-tables) tests, incl. VRR Listing 1."""
+import numpy as np
+import pytest
+
+from repro.core import all_standards, compile_spec, get_standard
+from repro.core.compile import resolve_latency
+
+
+def _first_presets(std):
+    return next(iter(std.org_presets)), next(iter(std.timing_presets))
+
+
+@pytest.mark.parametrize("name", sorted(all_standards()))
+def test_compile_every_standard(name):
+    std = get_standard(name)
+    org, tim = _first_presets(std)
+    cs = compile_spec(std, org, tim)
+    assert cs.n_cmds == len(std.commands)
+    assert cs.num_nodes >= 1 + cs.n_refresh_units + cs.n_banks
+    assert len(cs.ct_prev) == len(cs.ct_lat) > 0
+    assert (cs.ct_lat >= 0).all()
+    assert cs.max_window >= 1
+    assert cs.access_bytes > 0 and cs.peak_bytes_per_cycle > 0
+    # every constraint references valid commands/levels
+    assert cs.ct_prev.max() < cs.n_cmds and cs.ct_next.max() < cs.n_cmds
+    assert cs.ct_level.max() < len(cs.levels)
+
+
+def test_resolve_latency_expressions():
+    t = {"nCL": 16, "nBL": 4, "nCWL": 12, "nWR": 18}
+    assert resolve_latency("nCL", t) == 16
+    assert resolve_latency("nCWL+nBL+nWR", t) == 34
+    assert resolve_latency("nCL+nBL+2-nCWL", t) == 10
+    assert resolve_latency("nBL+2", t) == 6
+    assert resolve_latency(7, t) == 7
+    with pytest.raises(ValueError):
+        resolve_latency("", t)
+
+
+def test_vrr_extension_listing1():
+    """DDR5_VRR: the paper's 18-line extension pattern."""
+    vrr = get_standard("DDR5_VRR")
+    ddr5 = get_standard("DDR5")
+    assert vrr.commands == ddr5.commands + ["VRR"]
+    assert "nVRR" in vrr.timing_params
+    assert len(vrr.timing_constraints) == len(ddr5.timing_constraints) + 3
+    # nVRR derived from tCK per preset: ceil(280ns / tCK)
+    for name, t in vrr.timing_presets.items():
+        assert t["nVRR"] == -(-280_000 // t["tCK_ps"])
+    cs = compile_spec(vrr, *_first_presets(vrr))
+    assert "VRR" in cs.cmd_names
+
+
+def test_vrr_timing_semantics():
+    from repro.core import DeviceUnderTest
+    dut = DeviceUnderTest("DDR5_VRR", "DDR5_16Gb_x8", "DDR5_4800B")
+    addr = dut.addr_vec(Rank=0, BankGroup=0, Bank=0, Row=5, Column=0)
+    dut.issue("VRR", addr, clk=0)
+    nvrr = dut.timings["nVRR"]
+    assert dut.probe("ACT", addr, clk=nvrr - 1).timing_OK is False
+    assert dut.probe("ACT", addr, clk=nvrr).timing_OK is True
+
+
+def test_user_extension_subclass():
+    """Authoring a variant at runtime (paper §3.2) requires only appends."""
+    from repro.core.spec import Command, TimingConstraint, KIND_ROW
+    ddr4 = get_standard("DDR4")
+
+    class DDR4_NOP(ddr4):
+        name = "DDR4_NOP_test"
+        command_meta = dict(ddr4.command_meta,
+                            NOP=Command("NOP", "bank", KIND_ROW))
+        commands = ddr4.commands + ["NOP"]
+        timing_params = ddr4.timing_params + ["nNOP"]
+        timing_constraints = list(ddr4.timing_constraints) + [
+            TimingConstraint("bank", ["NOP"], ["ACT"], "nNOP")]
+        timing_presets = {k: dict(v, nNOP=3)
+                          for k, v in ddr4.timing_presets.items()}
+
+    cs = compile_spec(DDR4_NOP, "DDR4_8Gb_x8", "DDR4_2400R")
+    assert "NOP" in cs.cmd_names
+    i = list(cs.ct_prev).index(cs.cmd_id("NOP"))
+    assert cs.ct_lat[i] == 3
+
+
+def test_timing_overrides():
+    cs = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      timing_overrides={"nRCD": 99})
+    assert cs.timings["nRCD"] == 99
+
+
+def test_loc_table_spirit():
+    """Standards must stay compact (the paper's Table-1 claim)."""
+    import inspect
+    for name in ("DDR5", "LPDDR5", "HBM3", "GDDR7"):
+        src = inspect.getsource(get_standard(name))
+        loc = len([l for l in src.splitlines()
+                   if l.strip() and not l.strip().startswith("#")])
+        assert loc < 60, f"{name} spec ballooned to {loc} lines"

@@ -1,0 +1,79 @@
+"""Flash-attention Pallas kernel vs pure-jnp oracle: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import gqa_flash_attention
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 0.3,
+                       dtype)
+
+
+@pytest.mark.parametrize("B,H,T,D", [(1, 1, 128, 64), (2, 2, 256, 64),
+                                     (1, 4, 100, 32), (1, 1, 300, 128),
+                                     (2, 1, 64, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_vs_ref(B, H, T, D, causal):
+    q = _rand((B, H, T, D), jnp.float32, 1)
+    k = _rand((B, H, T, D), jnp.float32, 2)
+    v = _rand((B, H, T, D), jnp.float32, 3)
+    got = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_dtypes(dtype, tol):
+    q = _rand((1, 2, 128, 64), dtype, 4)
+    k = _rand((1, 2, 128, 64), dtype, 5)
+    v = _rand((1, 2, 128, 64), dtype, 6)
+    got = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_gqa_expansion():
+    q = _rand((2, 8, 64, 32), jnp.float32, 7)
+    k = _rand((2, 2, 64, 32), jnp.float32, 8)
+    v = _rand((2, 2, 64, 32), jnp.float32, 9)
+    got = gqa_flash_attention(q, k, v, causal=True, use_pallas=True)
+    kfull = jnp.repeat(k, 4, axis=1)
+    vfull = jnp.repeat(v, 4, axis=1)
+    want = ref.flash_attention(q, kfull, vfull, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(16, 200), d=st.sampled_from([16, 32, 64]),
+       causal=st.booleans(), seed=st.integers(0, 1000))
+def test_flash_hypothesis(t, d, causal, seed):
+    q = _rand((1, 1, t, d), jnp.float32, seed)
+    k = _rand((1, 1, t, d), jnp.float32, seed + 1)
+    v = _rand((1, 1, t, d), jnp.float32, seed + 2)
+    got = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_block_size_invariance():
+    q = _rand((1, 2, 160, 64), jnp.float32, 11)
+    k = _rand((1, 2, 160, 64), jnp.float32, 12)
+    v = _rand((1, 2, 160, 64), jnp.float32, 13)
+    outs = [flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+            for bq, bk in ((32, 32), (64, 128), (128, 64))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-5, rtol=2e-5)

@@ -1,0 +1,102 @@
+"""Launch-layer tests: mini dry-run in a subprocess (own device count),
+spec choosers, and collective-stats parser."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_stats
+    txt = """
+  %ag = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %p), replica_groups={}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %x), to_apply=%add
+  %t = (f32[128]{0}, f32[64]{0}) all-to-all(f32[128]{0} %a, f32[64]{0} %b)
+  %rs = bf16[2,4]{1,0} reduce-scatter(bf16[16,4]{1,0} %y), dimensions={0}
+  %cp = u32[8]{0} collective-permute(u32[8]{0} %z)
+  %dot = f32[2,2]{1,0} dot(f32[2,2]{1,0} %l, f32[2,2]{1,0} %r)
+"""
+    st = collective_stats(txt)
+    assert set(st["by_kind"]) == {"all-gather", "all-reduce", "all-to-all",
+                                  "reduce-scatter", "collective-permute"}
+    assert st["by_kind"]["all-gather"]["bytes"] == 16 * 512 * 2
+    assert st["by_kind"]["all-reduce"]["bytes"] == 256 * 4
+    assert st["by_kind"]["all-to-all"]["bytes"] == (128 + 64) * 4
+    assert st["by_kind"]["reduce-scatter"]["bytes"] == 8 * 2
+    assert st["by_kind"]["collective-permute"]["bytes"] == 32
+    assert st["total_bytes"] == sum(e["bytes"]
+                                    for e in st["by_kind"].values())
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess(tmp_path):
+    """Real lower+compile of a reduced arch on a faked 8-device (2,4) mesh
+    in a subprocess (the session process has its device count locked)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json, sys
+import jax
+from repro.configs import get_arch
+from repro.launch.specs import cell_spec, step_fn_for
+from repro.launch.dryrun import collective_stats
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = dataclasses.replace(
+    get_arch("llama3.2-1b").reduced(), vocab=2048, name="mini")
+import repro.configs.base as cb
+cb.register_arch(cfg)
+import repro.configs as C
+C.SHAPES = dict(C.SHAPES)
+from repro.configs.base import ShapeConfig, SHAPES
+SHAPES["mini_train"] = ShapeConfig("mini_train", 64, 8, "train")
+SHAPES["mini_decode"] = ShapeConfig("mini_decode", 64, 8, "decode")
+out = {}
+for shape in ("mini_train", "mini_decode"):
+    cs = cell_spec(cfg, shape, mesh)
+    step = step_fn_for(cfg, shape)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=cs.args_shardings,
+                          donate_argnums=cs.donate).lower(*cs.args_avals)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    st = collective_stats(compiled.as_text())
+    out[shape] = {"flops": ca.get("flops", 0),
+                  "temp": ma.temp_size_in_bytes,
+                  "coll": st["total_bytes"]}
+print(json.dumps(out))
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["mini_train"]["flops"] > 0
+    assert out["mini_train"]["coll"] > 0, "no collectives on a 2x4 mesh?"
+    assert out["mini_decode"]["temp"] > 0
+
+
+def test_cell_specs_cover_all_cells():
+    """Every valid cell must produce coherent avals + shardings."""
+    import jax
+    from repro.configs import valid_cells
+    from repro.launch.specs import cell_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    seen = set()
+    for arch, shape in valid_cells():
+        cs = cell_spec(arch, shape, mesh)
+        flat_a = jax.tree.leaves(cs.args_avals)
+        flat_s = jax.tree.leaves(
+            cs.args_shardings,
+            is_leaf=lambda x: hasattr(x, "spec"))
+        assert len(flat_a) == len(flat_s), (arch, shape)
+        seen.add((arch, shape))
+    assert len(seen) == 32

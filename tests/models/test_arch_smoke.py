@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_archs, get_arch, valid_cells
+from repro.data import DataConfig, make_batch
+from repro.models import Batch, forward, init_params, logits_and_loss
+from repro.models.model import last_logits
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, train_init
+
+ARCHS = sorted(all_archs())
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_no_nans(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dc = DataConfig(seq_len=32, global_batch=2)
+    batch = make_batch(cfg, dc, step=0)
+    x, aux = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    assert x.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(x.astype(jnp.float32))))
+    lg = last_logits(cfg, params, x)
+    if cfg.frontend == "audio_stub":
+        assert lg.shape == (2, 1, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert lg.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_runs_and_is_finite(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = train_init(cfg, params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    dc = DataConfig(seq_len=32, global_batch=2)
+    state, m = step(state, make_batch(cfg, dc, step=0))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    # params actually changed
+    before = jax.tree.leaves(params)[0]
+    after = jax.tree.leaves(state.params)[0]
+    assert not np.allclose(np.asarray(before, np.float32),
+                           np.asarray(after, np.float32))
+
+
+def test_loss_decreases_multi_step():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=100)
+    state = train_init(cfg, params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    dc = DataConfig(seq_len=32, global_batch=4)
+    losses = []
+    for i in range(10):
+        state, m = step(state, make_batch(cfg, dc, step=i))
+        losses.append(float(m["loss"]))
+    assert min(losses[-3:]) < losses[0], losses
+
+
+def test_microbatching_matches_full_batch():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    dc = DataConfig(seq_len=16, global_batch=4)
+    batch = make_batch(cfg, dc, step=0)
+    s1 = train_init(cfg, params, opt_cfg)
+    s2 = train_init(cfg, params, opt_cfg)
+    full = jax.jit(make_train_step(cfg, opt_cfg, microbatch=1))
+    micro = jax.jit(make_train_step(cfg, opt_cfg, microbatch=2))
+    s1, m1 = full(s1, batch)
+    s2, m2 = micro(s2, batch)
+    # same gradient direction/magnitude up to accumulation-order noise
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-2)
+    a = np.asarray(jax.tree.leaves(s1.params)[0], np.float32)
+    b = np.asarray(jax.tree.leaves(s2.params)[0], np.float32)
+    np.testing.assert_allclose(a, b, atol=5e-3)
+
+
+def test_valid_cells_count():
+    cells = valid_cells()
+    # 10 archs x 3 shapes + 2 sub-quadratic archs on long_500k
+    assert len(cells) == 32, len(cells)
+    assert ("recurrentgemma-2b", "long_500k") in cells
+    assert ("xlstm-350m", "long_500k") in cells
+    assert ("qwen3-4b", "long_500k") not in cells
+
+
+def test_exact_assigned_configs():
+    """The registered configs carry exactly the assigned hyperparameters."""
+    spec = {
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    }
+    for name, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_arch(name)
+        assert cfg.n_layers == L and cfg.d_model == d, name
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv, name
+        assert (cfg.d_ff == ff) and cfg.vocab == v, name

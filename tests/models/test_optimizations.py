@@ -1,0 +1,167 @@
+"""Beyond-baseline optimization tests: grouped MoE dispatch, int8 KV cache,
+FSDP sharding rules, causal/window block skipping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import Batch, decode_step, forward, init_params
+from repro.models import blocks as B
+from repro.models.model import last_logits
+
+
+def _ample(cfg):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=8.0))
+
+
+@pytest.mark.parametrize("name", ["phi3.5-moe-42b-a6.6b",
+                                  "llama4-maverick-400b-a17b"])
+def test_grouped_moe_equals_flat_dispatch_f32(name):
+    """GShard one-hot dispatch must exactly equal flat dispatch in f32 when
+    neither drops tokens (ample capacity)."""
+    cfg = _ample(get_arch(name).reduced())
+    d, E = cfg.d_model, cfg.moe.num_experts
+    ff = cfg.moe.d_ff_expert
+    rng = np.random.default_rng(0)
+    p = {"router": jnp.asarray(rng.standard_normal((d, E)), jnp.float32) * .5,
+         "w_gate": jnp.asarray(rng.standard_normal((E, d, ff)), jnp.float32) * .2,
+         "w_up": jnp.asarray(rng.standard_normal((E, d, ff)), jnp.float32) * .2,
+         "w_down": jnp.asarray(rng.standard_normal((E, ff, d)), jnp.float32) * .2}
+    if cfg.moe.shared_expert:
+        p["shared"] = {
+            "w_gate": jnp.asarray(rng.standard_normal((d, ff)), jnp.float32) * .2,
+            "w_up": jnp.asarray(rng.standard_normal((d, ff)), jnp.float32) * .2,
+            "w_down": jnp.asarray(rng.standard_normal((ff, d)), jnp.float32) * .2}
+    x = jnp.asarray(rng.standard_normal((2, 16, d)), jnp.float32)
+    og, probs_g = B.moe_ffn_grouped(cfg, p, x)
+    of, probs_f = B.moe_ffn(cfg, p, x.reshape(32, d))
+    np.testing.assert_allclose(np.asarray(og).reshape(32, d),
+                               np.asarray(of), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(probs_g), np.asarray(probs_f),
+                               atol=1e-6)
+
+
+def test_grouped_moe_full_model_close():
+    """Whole-model parity (bf16): dispatch-order rounding only."""
+    cfg_g = _ample(get_arch("phi3.5-moe-42b-a6.6b").reduced())
+    cfg_f = dataclasses.replace(cfg_g, moe=dataclasses.replace(
+        cfg_g.moe, grouped=False))
+    params = init_params(cfg_g, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg_g.vocab, (2, 16)), jnp.int32)
+    pos = jnp.arange(16, dtype=jnp.int32)[None].repeat(2, 0)
+    xg, auxg = forward(cfg_g, params, Batch(tokens=toks, positions=pos))
+    xf, auxf = forward(cfg_f, params, Batch(tokens=toks, positions=pos))
+    np.testing.assert_allclose(np.asarray(xg, np.float32),
+                               np.asarray(xf, np.float32), atol=0.2)
+    np.testing.assert_allclose(float(auxg), float(auxf), rtol=1e-3)
+
+
+def test_grouped_moe_capacity_is_per_group():
+    """A group that routes everything to one expert drops independently of
+    other groups (per-group capacity, unlike flat global dispatch)."""
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, top_k=1, capacity_factor=0.5, num_experts=4))
+    d = cfg.d_model
+    E = 4
+    rng = np.random.default_rng(1)
+    p = {
+        "router": jnp.zeros((d, E), jnp.float32).at[:, 0].set(1.0),
+        "w_gate": jnp.asarray(rng.standard_normal((E, d, 64)), jnp.float32) * .1,
+        "w_up": jnp.asarray(rng.standard_normal((E, d, 64)), jnp.float32) * .1,
+        "w_down": jnp.asarray(rng.standard_normal((E, 64, d)), jnp.float32) * .1,
+    }
+    x = jnp.asarray(rng.standard_normal((4, 16, d)), jnp.float32)
+    out, _ = B.moe_ffn_grouped(cfg, p, x)
+    dropped_per_group = np.asarray(
+        jnp.sum(jnp.all(out == 0.0, axis=-1), axis=1))
+    # every group drops the same count (same capacity, same routing skew)
+    assert (dropped_per_group > 0).all()
+    assert len(set(dropped_per_group.tolist())) == 1
+
+
+def test_int8_kv_cache_dense_decode_parity():
+    cfg = dataclasses.replace(get_arch("llama3.2-1b").reduced(),
+                              kv_quant=True)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B_, T = 2, 17
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B_, T + 1)), jnp.int32)
+    pos = jnp.arange(T + 1, dtype=jnp.int32)[None].repeat(B_, 0)
+    x, _ = forward(cfg, params, Batch(tokens=toks, positions=pos))
+    want = last_logits(cfg, params, x)
+    x2, _, states = forward(cfg, params,
+                            Batch(tokens=toks[:, :T], positions=pos[:, :T]),
+                            return_states=True, cache_len=T + 2)
+    got, cache = decode_step(
+        cfg, params, states,
+        Batch(tokens=toks[:, T:T + 1], positions=pos[:, T:T + 1],
+              cache_index=jnp.int32(T), cache_len=jnp.int32(T + 1)))
+    # int8 quantization noise only — logits stay close, caches are int8
+    assert float(jnp.max(jnp.abs(got - want))) < 0.6
+    k_leaf = jax.tree.leaves(cache)[0]
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(cache))
+
+
+def test_int8_kv_cache_memory_halves():
+    cfg_q = dataclasses.replace(get_arch("llama3.2-1b").reduced(),
+                                kv_quant=True)
+    cfg_b = get_arch("llama3.2-1b").reduced()
+    from repro.models import init_cache
+
+    def nbytes(cfg):
+        cache = jax.eval_shape(lambda: init_cache(cfg, 2, 512))
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in jax.tree.leaves(cache))
+    ratio = nbytes(cfg_q) / nbytes(cfg_b)
+    assert ratio < 0.6, ratio    # int8 + f32 scales ~ 0.52x of bf16
+
+
+def test_fsdp_rules_shard_weights_over_data():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import FSDP_RULES, choose_spec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    # clean divisibility: ffn dim takes both axes -> 256-way on one dim
+    s = choose_spec((4096, 16384), ("embed_tp", "ffn"), FakeMesh(),
+                    FSDP_RULES)
+    assert s == P(None, ("model", "data")), s
+    # 13696 % 256 != 0: ffn keeps model, the embed dim soaks up data —
+    # still 256-way total
+    s1 = choose_spec((4096, 13696), ("embed_tp", "ffn"), FakeMesh(),
+                     FSDP_RULES)
+    assert s1 == P("data", "model"), s1
+    # expert tensor: experts->model, ffn falls back to data
+    s2 = choose_spec((16, 4096, 6400), ("experts", None, "ffn"), FakeMesh(),
+                     FSDP_RULES)
+    assert s2 == P("model", None, "data"), s2
+
+
+def test_window_skip_matches_full_mask():
+    """Block-skipped local attention == dense-masked reference at every
+    (window, chunk) geometry."""
+    from repro.models.layers import flash_attention_xla
+    rng = np.random.default_rng(3)
+    B_, H, D, T = 1, 2, 8, 96
+    q = jnp.asarray(rng.standard_normal((B_, T, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B_, T, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B_, T, H, D)), jnp.float32)
+    for window in (8, 16, 40):
+        got = flash_attention_xla(q, k, v, causal=True, window=window,
+                                  bq=32, bk=16)
+        qf, kf, vf = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        lg = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / np.sqrt(D)
+        i = np.arange(T)[:, None]
+        j = np.arange(T)[None, :]
+        mask = (j <= i) & ((i - j) < window)
+        lg = jnp.where(jnp.asarray(mask), lg, -1e30)
+        want = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(lg, -1),
+                          vf).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
