@@ -4,12 +4,15 @@ from __future__ import annotations
 
 
 def run(report, n_cycles: int = 12_000):
-    from repro.core import (ControllerConfig, FrontendConfig, Simulator,
-                            avg_probe_latency_ns, throughput_gbps)
+    from repro.core import ControllerConfig, FrontendConfig, Simulator, \
+        throughput_gbps
     from repro.core.spec import register
+    from repro.dse import SweepSpec, execute
     import repro.core.standards.hbm3 as h3
 
     # --- dual C/A vs single C/A under command-bus pressure ---
+    # one declarative sweep over both standard variants; the executor
+    # compiles each variant once
     class HBM3_single(h3.HBM3):
         name = "HBM3_single_bench"
         dual_command_bus = False
@@ -18,29 +21,27 @@ def run(report, n_cycles: int = 12_000):
     except Exception:
         pass
     overrides = {"nBL": 1, "nCCD_S": 1, "nCCD_L": 1}
-    lats = {}
-    for name in ("HBM3", "HBM3_single_bench"):
-        sim = Simulator(name, "HBM3_16Gb", "HBM3_5200",
-                        timing_overrides=overrides)
-        st = sim.run(n_cycles, interval=1.0, read_ratio=1.0)
-        lats[name] = avg_probe_latency_ns(sim.cspec, st)
+    res = execute(SweepSpec(
+        systems=(("HBM3", "HBM3_16Gb", "HBM3_5200", overrides),
+                 ("HBM3_single_bench", "HBM3_16Gb", "HBM3_5200", overrides)),
+        intervals=(1.0,), read_ratios=(1.0,), n_cycles=n_cycles))
+    lats = {pt.system.standard: res.latency_ns[i]
+            for i, pt in enumerate(res.points)}
     gain = lats["HBM3_single_bench"] / lats["HBM3"]
-    report("dual_ca_probe_latency_gain", round(gain, 3),
+    report("dual_ca_probe_latency_gain", round(float(gain), 3),
            f"dual={lats['HBM3']:.0f}ns single={lats['HBM3_single_bench']:.0f}ns")
 
     # --- WCK sync overhead: sparse vs dense traffic CAS rate ---
-    sim = Simulator("LPDDR5", "LPDDR5_8Gb_x16", "LPDDR5_6400",
-                    frontend=FrontendConfig(probe_gap=64))
-    sparse = sim.run(n_cycles, interval=64.0, read_ratio=1.0)
-    dense = sim.run(n_cycles, interval=2.0, read_ratio=1.0)
-    names = sim.cspec.cmd_names
+    res = execute(SweepSpec(
+        systems=(("LPDDR5", "LPDDR5_8Gb_x16", "LPDDR5_6400"),),
+        intervals=(64.0, 2.0), read_ratios=(1.0,), n_cycles=n_cycles,
+        frontend=FrontendConfig(probe_gap=64)))
 
-    def cas_per_rd(st):
-        c = dict(zip(names, st.cmd_counts.tolist()))
-        return c["CAS_RD"] / max(c["RD"], 1)
-    report("wck_cas_per_rd_sparse", round(cas_per_rd(sparse), 3),
+    def cas_per_rd(i):
+        return res.cmd_count(i, "CAS_RD") / max(res.cmd_count(i, "RD"), 1)
+    report("wck_cas_per_rd_sparse", round(cas_per_rd(0), 3),
            "clock expires between requests")
-    report("wck_cas_per_rd_dense", round(cas_per_rd(dense), 3),
+    report("wck_cas_per_rd_dense", round(cas_per_rd(1), 3),
            "clock stays on under load")
 
     # --- BlockHammer: deferral under hammer, neutrality under benign ---

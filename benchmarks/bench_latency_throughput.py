@@ -1,10 +1,11 @@
 """Paper Fig. 1: latency-throughput curves for every modeled DRAM standard.
 
-For each standard: sweep the streaming interval (load) at several read
-ratios; record average random-probe latency vs achieved throughput.  The
-validation criteria from the paper: (1) achieved throughput reaches the
-theoretical peak, (2) the curve follows the knee shape.  Writes the full
-curve data to results/latency_throughput.csv.
+One declarative `repro.dse` sweep covers all standards x intervals x read
+ratios; each standard compiles exactly once and vmaps its whole load grid.
+The validation criteria from the paper: (1) achieved throughput reaches
+the theoretical peak, (2) the curve follows the knee shape.  Writes the
+full curve data to results/latency_throughput.csv plus the binary sweep
+artifact results/latency_throughput.{npz,json}.
 """
 from __future__ import annotations
 
@@ -24,39 +25,40 @@ STANDARDS = [
     ("DDR5_VRR", "DDR5_16Gb_x8", "DDR5_4800B"),
 ]
 
-INTERVALS = [64.0, 16.0, 8.0, 4.0, 2.0, 1.0]
-READ_RATIOS = [1.0, 0.8, 0.5]
+INTERVALS = (64.0, 16.0, 8.0, 4.0, 2.0, 1.0)
+READ_RATIOS = (1.0, 0.8, 0.5)
 
 
-def run(report, n_cycles: int = 20_000, out_csv: str = "results/latency_throughput.csv"):
-    from repro.core import (Simulator, avg_probe_latency_ns, peak_gbps,
-                            throughput_gbps)
+def run(report, n_cycles: int = 20_000,
+        out_csv: str = "results/latency_throughput.csv"):
+    from repro.dse import SweepSpec, execute
+
+    spec = SweepSpec(systems=tuple(STANDARDS), intervals=INTERVALS,
+                     read_ratios=READ_RATIOS, n_cycles=n_cycles)
+    result = execute(spec)
+
     os.makedirs(os.path.dirname(out_csv), exist_ok=True)
     rows = ["standard,read_ratio,interval,throughput_gbps,latency_ns,peak_gbps"]
-    for std, org, tim in STANDARDS:
-        sim = Simulator(std, org, tim)
-        pk = peak_gbps(sim.cspec)
-        best = 0.0
-        knee_ok = True
-        lat0 = latN = None
-        for rr in READ_RATIOS:
-            pts, batch = sim.run_batch(n_cycles, INTERVALS, [rr])
-            import jax
-            for i, (interval, _) in enumerate(pts):
-                st = jax.tree.map(lambda a: a[i], batch)
-                tp = throughput_gbps(sim.cspec, st)
-                lat = avg_probe_latency_ns(sim.cspec, st)
-                rows.append(f"{std},{rr},{interval},{tp:.3f},{lat:.1f},{pk:.3f}")
-                best = max(best, tp)
-                if rr == 1.0 and interval == INTERVALS[0]:
-                    lat0 = lat
-                if rr == 1.0 and interval == INTERVALS[-1]:
-                    latN = lat
-        frac = best / pk
-        knee = latN / lat0 if lat0 else float("nan")
-        report(f"latency_throughput_{std}", round(frac, 3),
-               f"peak_frac={frac:.3f} knee_lat_ratio={knee:.2f} "
-               f"peak={pk:.1f}GB/s")
+    for i, pt in enumerate(result.points):
+        rows.append(f"{pt.system.standard},{pt.read_ratio},{pt.interval},"
+                    f"{result.throughput_gbps[i]:.3f},"
+                    f"{result.latency_ns[i]:.1f},{result.peak_gbps[i]:.3f}")
     with open(out_csv, "w") as f:
         f.write("\n".join(rows) + "\n")
+
+    curves = {(c.system, c.read_ratio): c for c in result.curves()}
+    for std, _, _ in STANDARDS:
+        cv = curves[(std, 1.0)]
+        best = max(curves[(std, rr)].throughput_gbps.max()
+                   for rr in READ_RATIOS)
+        frac = best / cv.peak_gbps
+        lat0, latN = cv.latency_ns[0], cv.latency_ns[-1]
+        knee = latN / lat0 if lat0 else float("nan")
+        report(f"latency_throughput_{std}", round(float(frac), 3),
+               f"peak_frac={frac:.3f} knee_lat_ratio={knee:.2f} "
+               f"peak={cv.peak_gbps:.1f}GB/s")
     report("latency_throughput_csv", len(rows) - 1, out_csv)
+    npz = result.save(os.path.splitext(out_csv)[0])
+    report("latency_throughput_npz", result.meta["n_points"],
+           f"{npz} groups={result.meta['n_groups']} "
+           f"compiles={result.meta['compile_cache_misses']}")

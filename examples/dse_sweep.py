@@ -1,35 +1,35 @@
-"""Design-space exploration with the vmapped engine (paper §3.1 workflow):
-sweep load x read-ratio points for two standards in single compiled
-programs, print the latency-throughput table, and render a command-trace
+"""Design-space exploration with the `repro.dse` subsystem (paper §3.1
+workflow): declare a two-standard x load x read-ratio sweep, execute it
+with one compiled program per standard, print the latency-throughput
+table, persist the curve artifact, and render a command-trace
 visualization (paper §4.1).
 
     PYTHONPATH=src python examples/dse_sweep.py
+
+The same sweep is available as a CLI: ``python -m repro.dse.sweep``.
 """
-import time
+from repro.core import Simulator, viz
+from repro.dse import SweepSpec, execute
 
-import jax
+spec = SweepSpec(
+    systems=(("DDR5", "DDR5_16Gb_x8", "DDR5_4800B"),
+             ("HBM3", "HBM3_16Gb", "HBM3_5200")),
+    intervals=(32.0, 8.0, 4.0, 2.0, 1.0),
+    read_ratios=(1.0, 0.5),
+    n_cycles=10_000,
+)
+result = execute(spec)
 
-from repro.core import (Simulator, avg_probe_latency_ns, peak_gbps,
-                        throughput_gbps, viz)
-
-INTERVALS = [32.0, 8.0, 4.0, 2.0, 1.0]
-RATIOS = [1.0, 0.5]
-
-for std, org, tim in [("DDR5", "DDR5_16Gb_x8", "DDR5_4800B"),
-                      ("HBM3", "HBM3_16Gb", "HBM3_5200")]:
-    sim = Simulator(std, org, tim)
-    t0 = time.perf_counter()
-    pts, batch = sim.run_batch(10_000, INTERVALS, RATIOS)
-    dt = time.perf_counter() - t0
-    print(f"\n=== {std}: {len(pts)} design points in {dt:.1f}s "
-          f"(one vmapped program) ===")
-    print(f"{'interval':>9} {'rd%':>5} {'GB/s':>8} {'peak%':>6} {'lat ns':>8}")
-    for i, (interval, rr) in enumerate(pts):
-        st = jax.tree.map(lambda a: a[i], batch)
-        tp = throughput_gbps(sim.cspec, st)
-        lat = avg_probe_latency_ns(sim.cspec, st)
-        print(f"{interval:9.1f} {int(rr * 100):5d} {tp:8.2f} "
-              f"{100 * tp / peak_gbps(sim.cspec):6.1f} {lat:8.1f}")
+print(f"=== {result.meta['n_points']} design points, "
+      f"{result.meta['n_groups']} compiled programs, "
+      f"{result.meta['wall_s']}s ===")
+print(result.to_table())
+for cv in result.curves():
+    print(f"{cv.system:>6} rd={cv.read_ratio:g}: "
+          f"peak_frac={cv.peak_fraction:.3f} "
+          f"knee@interval={cv.intervals[cv.knee]:g}")
+path = result.save("results/dse_sweep_example")
+print(f"curve artifact written to {path}")
 
 # trace visualization of a short saturated window
 sim = Simulator("HBM3", "HBM3_16Gb", "HBM3_5200")

@@ -22,13 +22,18 @@ print("=== YAML equivalent (for non-Python embedders) ===")
 print(system.to_yaml())
 
 # --- 2. simulate ----------------------------------------------------------
+# the derived-metric helpers take the Stats of ONE run (scalar fields);
+# batched Stats from run_batch need repro.dse.results' *_array variants
 sim = system.build()
 stats = sim.run(system.n_cycles)
+tput = throughput_gbps(sim.cspec, stats)      # GB/s (1e9 bytes/s)
+peak = peak_gbps(sim.cspec)                   # GB/s, theoretical
+lat = avg_probe_latency_ns(sim.cspec, stats)  # ns, mean probe latency
 print("\n=== simulation ===")
 print(f"reads={int(stats.reads_done)} writes={int(stats.writes_done)}")
-print(f"throughput {throughput_gbps(sim.cspec, stats):.2f} GB/s "
-      f"(theoretical peak {peak_gbps(sim.cspec):.2f})")
-print(f"avg random-probe latency {avg_probe_latency_ns(sim.cspec, stats):.1f} ns")
+print(f"throughput          {tput:8.2f} GB/s")
+print(f"theoretical peak    {peak:8.2f} GB/s ({100 * tput / peak:.1f}% achieved)")
+print(f"avg probe latency   {lat:8.1f} ns")
 
 # --- 3. fine-grained probing (paper Listing 2) ----------------------------
 dut = DeviceUnderTest("DDR5", org_preset="DDR5_16Gb_x8",

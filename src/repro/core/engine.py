@@ -47,6 +47,112 @@ class SimState(NamedTuple):
     clk: jnp.ndarray
 
 
+# --------------------------------------------------------------------------
+# Compile cache
+# --------------------------------------------------------------------------
+#
+# `make_run` returns a fresh closure every call, so a bare `jax.jit(run_fn)`
+# can never share traces between two `Simulator` instances of the same
+# (standard, org, timing) triple — every instance would pay the full trace +
+# XLA-compile cost again.  `RunCache` memoizes the *jitted callable* keyed on
+# everything that changes the traced program: the compiled-spec identity
+# (including timing overrides and post-hoc `rows`/`columns` edits), the
+# controller and frontend configs, the cycle count, and the trace/batched
+# flags.  Load knobs (interval / read ratio / seed) are traced arguments and
+# therefore never part of the key.
+
+#: Incremented once per actual trace of a run closure; tests use it to
+#: assert that identical sweep specs are compiled exactly once.
+TRACE_COUNT = 0
+
+
+def _freeze(obj):
+    """Recursively convert configs/dicts into hashable cache-key tuples."""
+    if obj is None or isinstance(obj, (int, float, str, bool, bytes)):
+        return obj
+    if isinstance(obj, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in obj.items()))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return (type(obj).__name__,) + tuple(
+            (f.name, _freeze(getattr(obj, f.name)))
+            for f in dataclasses.fields(obj))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(x) for x in obj)
+    return obj                      # callables etc. hash by identity
+
+
+def spec_fingerprint(cspec: CompiledSpec):
+    """Hashable identity of a compiled spec *as the engine traces it*.
+
+    Keyed on provenance (standard/org/timing preset names) plus the resolved
+    timing table and the geometry fields benchmarks are allowed to mutate
+    in place (`rows`, `columns`) — so an edited spec never aliases a cached
+    program built from the pristine one.
+    """
+    return (cspec.standard, cspec.org_preset, cspec.timing_preset,
+            _freeze(cspec.timings), cspec.rows, cspec.columns)
+
+
+def run_key(cspec: CompiledSpec, ccfg: C.ControllerConfig,
+            fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
+            batched: bool):
+    # interval/read_ratio reach the traced program only through FrontParams
+    # (a traced argument) in both scalar and batched mode; the fcfg copies
+    # are dead at trace time, so drop them from the key — sweeping the load
+    # knobs through `Simulator.run` never recompiles.
+    fkey = tuple(kv for kv in _freeze(fcfg)
+                 if not (isinstance(kv, tuple)
+                         and kv[0] in ("interval", "read_ratio")))
+    return (spec_fingerprint(cspec), _freeze(ccfg), fkey,
+            int(n_cycles), bool(trace), bool(batched))
+
+
+class RunCache:
+    """Memoizes jitted engine run callables.
+
+    ``get`` returns a jitted ``(dp, fp, seed) -> Stats`` callable (vmapped
+    over ``fp`` when ``batched=True``).  ``hits``/``misses`` count lookups;
+    re-tracing is observable via the module-level ``TRACE_COUNT``.
+    """
+
+    def __init__(self):
+        self._runs: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self):
+        return len(self._runs)
+
+    def clear(self):
+        self._runs.clear()
+        self.hits = self.misses = 0
+
+    def get(self, cspec: CompiledSpec, ccfg: C.ControllerConfig,
+            fcfg: F.FrontendConfig, n_cycles: int, trace: bool = False,
+            batched: bool = False):
+        key = run_key(cspec, ccfg, fcfg, n_cycles, trace, batched)
+        fn = self._runs.get(key)
+        if fn is not None:
+            self.hits += 1
+            return fn
+        self.misses += 1
+        # Close over a snapshot, not the caller's object: jit may re-trace
+        # this closure much later (new batch shape), and by then the caller
+        # may have mutated its cspec in place — the snapshot keeps every
+        # retrace consistent with the fingerprint taken above.
+        cspec = dataclasses.replace(cspec)
+        fn = make_run(cspec, ccfg, fcfg, n_cycles, trace)
+        if batched:
+            fn = jax.vmap(fn, in_axes=(None, 0, None))
+        fn = jax.jit(fn)
+        self._runs[key] = fn
+        return fn
+
+
+#: Process-wide default cache used by `Simulator` and `repro.dse`.
+RUN_CACHE = RunCache()
+
+
 @dataclasses.dataclass
 class Simulator:
     """User-facing simulator handle for one (standard, org, timing) triple.
@@ -80,8 +186,9 @@ class Simulator:
                             else fcfg.read_ratio))
         dp = D.dyn_params(self.cspec)
         fp = fcfg.params()
-        run_fn = make_run(self.cspec, self.controller, fcfg, n_cycles, trace)
-        out = jax.jit(run_fn)(dp, fp, jnp.uint32(seed))
+        run_fn = RUN_CACHE.get(self.cspec, self.controller, fcfg, n_cycles,
+                               trace=trace)
+        out = run_fn(dp, fp, jnp.uint32(seed))
         return jax.tree.map(np.asarray, out)
 
     # -- batched DSE run ---------------------------------------------------
@@ -90,16 +197,9 @@ class Simulator:
         """Simulate the outer product of load points in one vmapped program."""
         dp = D.dyn_params(self.cspec)
         pts = [(i, r) for i in intervals for r in read_ratios]
-        fp = F.FrontParams(
-            interval_fp=jnp.asarray([max(int(i * 256), 1) for i, _ in pts],
-                                    jnp.int32),
-            read_ratio_fp=jnp.asarray([int(r * 256) for _, r in pts],
-                                      jnp.int32),
-            probe_gap=jnp.full((len(pts),), self.frontend.probe_gap,
-                               jnp.int32))
-        run_fn = make_run(self.cspec, self.controller, self.frontend,
-                          n_cycles, trace=False)
-        batched = jax.jit(jax.vmap(run_fn, in_axes=(None, 0, None)))
+        fp = F.stack_params(pts, self.frontend.probe_gap)
+        batched = RUN_CACHE.get(self.cspec, self.controller, self.frontend,
+                                n_cycles, batched=True)
         out = batched(dp, fp, jnp.uint32(seed))
         return pts, jax.tree.map(np.asarray, out)
 
@@ -138,6 +238,8 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
         return out, ys
 
     def run(dp, fp, seed):
+        global TRACE_COUNT
+        TRACE_COUNT += 1            # runs once per jax trace, not per call
         init = SimState(cs=C.init_ctrl_state(cspec, ccfg.queue_depth),
                         fs=F.init_front(),
                         stats=_zero_stats(cspec), clk=jnp.int32(0))
@@ -154,18 +256,34 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
 # --------------------------------------------------------------------------
 # Derived metrics
 # --------------------------------------------------------------------------
+#
+# These helpers take the Stats of ONE run: the `float()` casts require
+# 0-d (scalar) stat fields and raise on the stacked (B,)-shaped Stats that
+# `run_batch` / `repro.dse` produce.  For batched stats either index one
+# point out first (`jax.tree.map(lambda a: a[i], stats)`) or use the
+# vectorized equivalents in `repro.dse.results`.
 
 def throughput_gbps(cspec: CompiledSpec, stats) -> float:
+    """Achieved data throughput in GB/s (1e9 bytes per second).
+
+    bytes moved = (reads + writes) * access_bytes; wall time =
+    cycles * tCK_ps.  Scalar stats only — see the batched-stats caveat above.
+    """
     bytes_moved = float(stats.reads_done + stats.writes_done) * cspec.access_bytes
     seconds = float(stats.cycles) * cspec.tCK_ps * 1e-12
     return bytes_moved / seconds / 1e9 if seconds else 0.0
 
 
 def peak_gbps(cspec: CompiledSpec) -> float:
+    """Theoretical peak throughput in GB/s: access_bytes / nBL per cycle
+    sustained on every cycle of the data bus."""
     return cspec.peak_bytes_per_cycle / (cspec.tCK_ps * 1e-12) / 1e9
 
 
 def avg_probe_latency_ns(cspec: CompiledSpec, stats) -> float:
+    """Mean random-probe read latency in nanoseconds (arrival to data
+    completion), NaN when no probe finished.  Scalar stats only — see the
+    batched-stats caveat above."""
     if int(stats.probe_cnt) == 0:
         return float("nan")
     cycles = float(stats.probe_lat_sum) / float(stats.probe_cnt)

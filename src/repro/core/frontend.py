@@ -56,6 +56,19 @@ class FrontendConfig:
             probe_gap=jnp.int32(self.probe_gap))
 
 
+def stack_params(load_points, probe_gap: int) -> FrontParams:
+    """Stack (interval, read_ratio) pairs into batched, vmappable
+    `FrontParams` — the single home of the x256 fixed-point encoding used
+    by `FrontendConfig.params`, `Simulator.run_batch`, and the DSE
+    executor."""
+    return FrontParams(
+        interval_fp=jnp.asarray([max(int(i * 256), 1)
+                                 for i, _ in load_points], jnp.int32),
+        read_ratio_fp=jnp.asarray([int(r * 256) for _, r in load_points],
+                                  jnp.int32),
+        probe_gap=jnp.full((len(load_points),), probe_gap, jnp.int32))
+
+
 def init_front(seed: int = 0x1234) -> FrontState:
     return FrontState(accum_fp=jnp.int32(0), rng=jnp.uint32(seed | 1),
                       seq=jnp.int32(0), probe_busy=jnp.asarray(False),

@@ -1,0 +1,28 @@
+"""Design-space-exploration orchestration (Ramulator 2.1 §3 workflows).
+
+Declare a sweep, execute it with compile-cached vmapped programs, get
+latency-throughput curves back:
+
+    from repro.dse import SweepSpec, execute
+    result = execute(SweepSpec(systems=("DDR4", "DDR5"),
+                               intervals=(64, 8, 1), n_cycles=10_000))
+    for curve in result.curves():
+        print(curve.system, curve.peak_fraction, curve.knee)
+    result.save("results/my_sweep")
+
+See ``docs/dse.md`` for the full tour and ``python -m repro.dse.sweep``
+for the CLI.
+"""
+from repro.dse.executor import compile_group_key, execute, group_points
+from repro.dse.results import (Curve, SweepResult,
+                               avg_probe_latency_ns_array, knee_index,
+                               throughput_gbps_array)
+from repro.dse.spec import (DEFAULT_SYSTEMS, RunPoint, SweepSpec, System,
+                            system)
+
+__all__ = [
+    "SweepSpec", "System", "RunPoint", "system", "DEFAULT_SYSTEMS",
+    "execute", "group_points", "compile_group_key",
+    "SweepResult", "Curve", "knee_index",
+    "throughput_gbps_array", "avg_probe_latency_ns_array",
+]

@@ -1,0 +1,218 @@
+"""Sweep result post-processing: latency-throughput curves + persistence.
+
+The engine's scalar metric helpers (`repro.core.engine.throughput_gbps`
+et al.) `float()`-cast their inputs and therefore reject the stacked
+(B,)-shaped Stats a vmapped sweep produces; the `*_array` functions here
+are their vectorized numpy equivalents.  `SweepResult` holds one row per
+`RunPoint` in columnar numpy form, extracts latency-throughput curves
+(with knee detection) per (system, controller, read-ratio) series, and
+persists to a `.npz` + `.json` artifact pair for the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.compile import CompiledSpec
+from repro.dse.spec import RunPoint, SweepSpec, System
+
+# --------------------------------------------------------------------------
+# Vectorized derived metrics (batched counterparts of repro.core.engine's)
+# --------------------------------------------------------------------------
+
+
+def throughput_gbps_array(cspec: CompiledSpec, stats) -> np.ndarray:
+    """Achieved GB/s per batched point; works on (B,) or scalar stats."""
+    bytes_moved = (np.asarray(stats.reads_done, np.float64)
+                   + np.asarray(stats.writes_done)) * cspec.access_bytes
+    seconds = np.asarray(stats.cycles, np.float64) * cspec.tCK_ps * 1e-12
+    return np.divide(bytes_moved / 1e9, seconds,
+                     out=np.zeros_like(bytes_moved), where=seconds > 0)
+
+
+def avg_probe_latency_ns_array(cspec: CompiledSpec, stats) -> np.ndarray:
+    """Mean probe latency in ns per batched point; NaN where no probe
+    finished."""
+    cnt = np.asarray(stats.probe_cnt, np.float64)
+    lat_sum = np.asarray(stats.probe_lat_sum, np.float64)
+    cycles = np.divide(lat_sum, cnt, out=np.full_like(lat_sum, np.nan),
+                       where=cnt > 0)
+    return cycles * cspec.tCK_ps * 1e-3
+
+
+def knee_index(latency_ns, knee_factor: float = 2.0) -> int:
+    """Index of the curve's knee: the first point (ordered by increasing
+    load) whose latency exceeds `knee_factor` x the low-load latency.
+    Returns the last index when the curve never blows up."""
+    lat = np.asarray(latency_ns, np.float64)
+    finite = lat[np.isfinite(lat)]
+    if len(finite) == 0:
+        return len(lat) - 1
+    base = finite[0]
+    over = np.where(np.isfinite(lat) & (lat > knee_factor * base))[0]
+    return int(over[0]) if len(over) else len(lat) - 1
+
+
+@dataclasses.dataclass
+class Curve:
+    """One latency-throughput series at fixed (system, controller,
+    read-ratio), ordered by increasing load (decreasing interval)."""
+    system: str
+    scheduler: str
+    read_ratio: float
+    intervals: np.ndarray       # (K,) decreasing — load rises along the row
+    throughput_gbps: np.ndarray
+    latency_ns: np.ndarray
+    peak_gbps: float
+    knee: int                   # index into the arrays
+
+    @property
+    def peak_fraction(self) -> float:
+        return float(self.throughput_gbps.max() / self.peak_gbps) \
+            if self.peak_gbps else 0.0
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Columnar results for every expanded `RunPoint` of one sweep."""
+    points: list                        # list[RunPoint]
+    throughput_gbps: np.ndarray         # (N,) GB/s
+    latency_ns: np.ndarray              # (N,) mean probe latency
+    peak_gbps: np.ndarray               # (N,) theoretical peak of the system
+    reads_done: np.ndarray              # (N,)
+    writes_done: np.ndarray             # (N,)
+    probe_cnt: np.ndarray               # (N,)
+    deferred: np.ndarray                # (N,)
+    cycles: np.ndarray                  # (N,)
+    cmd_counts: list                    # per-point (n_cmds,) arrays (ragged)
+    cmd_names: list                     # per-point command-name lists
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self):
+        return len(self.points)
+
+    # -- curve extraction -------------------------------------------------
+    def curves(self, knee_factor: float = 2.0) -> list:
+        """Latency-throughput curves per (system, controller, read-ratio)."""
+        from repro.core.engine import _freeze
+        series: dict = {}
+        for i, pt in enumerate(self.points):
+            # key on the FULL controller config (frozen) — two controllers
+            # sharing a scheduler name are still distinct series
+            key = (pt.system, _freeze(pt.controller), pt.read_ratio)
+            series.setdefault(key, []).append(i)
+        out = []
+        for (sy, _ckey, rr), idx in series.items():
+            sched = self.points[idx[0]].controller.scheduler
+            idx = sorted(idx, key=lambda i: -self.points[i].interval)
+            lat = self.latency_ns[idx]
+            out.append(Curve(
+                system=sy.label, scheduler=sched, read_ratio=rr,
+                intervals=np.array([self.points[i].interval for i in idx]),
+                throughput_gbps=self.throughput_gbps[idx],
+                latency_ns=lat,
+                peak_gbps=float(self.peak_gbps[idx[0]]),
+                knee=knee_index(lat, knee_factor)))
+        return out
+
+    def cmd_count(self, i: int, name: str) -> int:
+        """Per-point issued count of one command (0 if the standard lacks
+        it)."""
+        names = self.cmd_names[i]
+        return int(self.cmd_counts[i][names.index(name)]) \
+            if name in names else 0
+
+    # -- pretty-printing --------------------------------------------------
+    def to_table(self) -> str:
+        hdr = (f"{'system':>10} {'sched':>7} {'interval':>9} {'rd%':>5} "
+               f"{'GB/s':>8} {'peak%':>6} {'lat ns':>8}")
+        rows = [hdr]
+        for i, pt in enumerate(self.points):
+            pk = self.peak_gbps[i]
+            frac = 100 * self.throughput_gbps[i] / pk if pk else 0.0
+            rows.append(
+                f"{pt.system.label:>10} {pt.controller.scheduler:>7} "
+                f"{pt.interval:9.1f} {int(pt.read_ratio * 100):5d} "
+                f"{self.throughput_gbps[i]:8.2f} {frac:6.1f} "
+                f"{self.latency_ns[i]:8.1f}")
+        return "\n".join(rows)
+
+    # -- persistence ------------------------------------------------------
+    _COLUMNS = ("throughput_gbps", "latency_ns", "peak_gbps", "reads_done",
+                "writes_done", "probe_cnt", "deferred", "cycles")
+
+    def save(self, path: str) -> str:
+        """Persist to `<path>.npz` (columnar arrays) + `<path>.json`
+        (points, command names, meta).  Returns the npz path."""
+        base = path[:-4] if path.endswith(".npz") else path
+        d = os.path.dirname(base)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        maxc = max((len(c) for c in self.cmd_counts), default=0)
+        padded = np.full((len(self.points), maxc), -1, np.int64)
+        for i, c in enumerate(self.cmd_counts):
+            padded[i, :len(c)] = c
+        arrays = {k: np.asarray(getattr(self, k)) for k in self._COLUMNS}
+        np.savez(base + ".npz", cmd_counts=padded, **arrays)
+        doc = {
+            "points": [_point_doc(pt) for pt in self.points],
+            "cmd_names": self.cmd_names,
+            "meta": self.meta,
+        }
+        with open(base + ".json", "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+        return base + ".npz"
+
+    @classmethod
+    def load(cls, path: str) -> "SweepResult":
+        base = path[:-4] if path.endswith(".npz") else path
+        with np.load(base + ".npz") as z:
+            arrays = {k: z[k] for k in cls._COLUMNS}
+            padded = z["cmd_counts"]
+        with open(base + ".json") as f:
+            doc = json.load(f)
+        points = [_point_from_doc(p) for p in doc["points"]]
+        cmd_names = doc["cmd_names"]
+        cmd_counts = [padded[i][padded[i] >= 0] for i in range(len(points))]
+        return cls(points=points, cmd_counts=cmd_counts,
+                   cmd_names=cmd_names, meta=doc.get("meta", {}), **arrays)
+
+
+def _config_doc(cfg) -> dict:
+    """All JSON-representable dataclass fields (callables — e.g.
+    `extra_predicates` — can't round-trip and are dropped)."""
+    out = {}
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if isinstance(v, (int, float, str, bool)) or v is None:
+            out[f.name] = v
+    return out
+
+
+def _point_doc(pt: RunPoint) -> dict:
+    return {
+        "standard": pt.system.standard,
+        "org_preset": pt.system.org_preset,
+        "timing_preset": pt.system.timing_preset,
+        "timing_overrides": list(pt.system.timing_overrides),
+        "controller": _config_doc(pt.controller),
+        "frontend": _config_doc(pt.frontend),
+        "n_cycles": pt.n_cycles,
+        "interval": pt.interval,
+        "read_ratio": pt.read_ratio,
+    }
+
+
+def _point_from_doc(p: dict) -> RunPoint:
+    from repro.core import controller as C
+    from repro.core import frontend as F
+    sy = System(p["standard"], p["org_preset"], p["timing_preset"],
+                tuple(tuple(kv) for kv in p.get("timing_overrides", [])))
+    return RunPoint(system=sy,
+                    controller=C.ControllerConfig(**p.get("controller", {})),
+                    frontend=F.FrontendConfig(**p.get("frontend", {})),
+                    n_cycles=p["n_cycles"], interval=p["interval"],
+                    read_ratio=p["read_ratio"])

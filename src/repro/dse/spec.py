@@ -1,0 +1,162 @@
+"""Declarative design-space-exploration sweep specifications.
+
+A `SweepSpec` names the four axes of a Ramulator-style DSE campaign —
+DRAM systems (standard x org preset x timing preset, optionally with
+timing overrides), controller configurations, and the load grid
+(streaming intervals x read ratios) — and `expand()`s them into the full
+cartesian list of concrete `RunPoint`s.
+
+The spec layer is pure Python bookkeeping: nothing here touches JAX.  The
+executor (`repro.dse.executor`) groups the expanded points by *compile
+group* — everything that changes the traced program — and runs each group
+as one vmapped, jit-cached call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core import controller as C
+from repro.core import frontend as F
+
+#: Default (org preset, timing preset) per modeled standard, used by
+#: `system()` and the `python -m repro.dse.sweep` CLI so callers can name a
+#: sweep axis by standard alone.
+DEFAULT_SYSTEMS = {
+    "DDR3": ("DDR3_8Gb_x8", "DDR3_1600K"),
+    "DDR4": ("DDR4_8Gb_x8", "DDR4_2400R"),
+    "DDR5": ("DDR5_16Gb_x8", "DDR5_4800B"),
+    "LPDDR5": ("LPDDR5_8Gb_x16", "LPDDR5_6400"),
+    "LPDDR6": ("LPDDR6_16Gb_x16", "LPDDR6_8533"),
+    "GDDR6": ("GDDR6_8Gb_x16", "GDDR6_16"),
+    "GDDR7": ("GDDR7_16Gb_x32", "GDDR7_32"),
+    "HBM2": ("HBM2_8Gb", "HBM2_2Gbps"),
+    "HBM3": ("HBM3_16Gb", "HBM3_5200"),
+    "HBM4": ("HBM4_24Gb", "HBM4_8000"),
+    "DDR5_VRR": ("DDR5_16Gb_x8", "DDR5_4800B"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class System:
+    """One DRAM system under test: a (standard, org, timing) triple plus
+    optional timing overrides (stored frozen so the system is hashable)."""
+    standard: str
+    org_preset: str
+    timing_preset: str
+    timing_overrides: tuple = ()    # sorted (name, cycles) pairs
+
+    def __post_init__(self):
+        # normalize every construction path (dict, unsorted tuple, list of
+        # pairs) to sorted tuples so equal overrides compare/hash equal and
+        # never split a compile group or a curve
+        ov = self.timing_overrides
+        ov = ov.items() if isinstance(ov, dict) else (ov or ())
+        object.__setattr__(self, "timing_overrides",
+                           tuple(sorted(tuple(kv) for kv in ov)))
+
+    @property
+    def overrides_dict(self) -> dict | None:
+        return dict(self.timing_overrides) if self.timing_overrides else None
+
+    @property
+    def label(self) -> str:
+        return self.standard
+
+    @classmethod
+    def make(cls, spec) -> "System":
+        """Coerce a System, a standard name, or a 3/4-tuple into a System."""
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return system(spec)
+        std, org, tim, *rest = spec
+        return cls(std, org, tim, rest[0] if rest else ())
+
+
+def system(standard: str, timing_overrides: dict | None = None) -> System:
+    """Build a `System` from a standard name using `DEFAULT_SYSTEMS`."""
+    if standard not in DEFAULT_SYSTEMS:
+        raise KeyError(f"no default org/timing for {standard!r}; "
+                       f"known: {sorted(DEFAULT_SYSTEMS)}")
+    org, tim = DEFAULT_SYSTEMS[standard]
+    return System(standard, org, tim, timing_overrides or ())
+
+
+@dataclasses.dataclass(frozen=True)
+class RunPoint:
+    """One concrete simulation: a system + controller + one load point."""
+    system: System
+    controller: C.ControllerConfig
+    frontend: F.FrontendConfig
+    n_cycles: int
+    interval: float
+    read_ratio: float
+
+    @property
+    def label(self) -> str:
+        return (f"{self.system.label} {self.controller.scheduler} "
+                f"i={self.interval:g} r={self.read_ratio:g}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative sweep: systems x controllers x intervals x read ratios.
+
+    `systems` entries may be `System` objects, bare standard names (resolved
+    via `DEFAULT_SYSTEMS`), or (standard, org, timing[, overrides]) tuples.
+
+    >>> spec = SweepSpec(systems=("DDR4", "DDR5"),
+    ...                  intervals=(16.0, 4.0, 1.0), read_ratios=(1.0, 0.5))
+    >>> len(spec.expand())      # 2 * 1 * 3 * 2
+    12
+    """
+    systems: tuple
+    intervals: tuple = (64.0, 16.0, 8.0, 4.0, 2.0, 1.0)
+    read_ratios: tuple = (1.0,)
+    controllers: tuple = None   # defaults to (ControllerConfig(),)
+    frontend: F.FrontendConfig = dataclasses.field(
+        default_factory=F.FrontendConfig)
+    n_cycles: int = 20_000
+    seed: int = 0x1234
+
+    def __post_init__(self):
+        object.__setattr__(self, "systems",
+                           tuple(System.make(s) for s in self.systems))
+        object.__setattr__(self, "intervals",
+                           tuple(float(i) for i in self.intervals))
+        object.__setattr__(self, "read_ratios",
+                           tuple(float(r) for r in self.read_ratios))
+        ctrls = self.controllers
+        if ctrls is None:
+            ctrls = (C.ControllerConfig(),)
+        elif isinstance(ctrls, C.ControllerConfig):
+            ctrls = (ctrls,)
+        object.__setattr__(self, "controllers", tuple(ctrls))
+        if not self.systems:
+            raise ValueError("SweepSpec needs at least one system")
+        if not self.intervals or not self.read_ratios:
+            raise ValueError("SweepSpec needs a non-empty load grid")
+
+    @property
+    def grid_shape(self) -> tuple:
+        """(n_systems, n_controllers, n_intervals, n_read_ratios)."""
+        return (len(self.systems), len(self.controllers),
+                len(self.intervals), len(self.read_ratios))
+
+    @property
+    def n_points(self) -> int:
+        n = 1
+        for d in self.grid_shape:
+            n *= d
+        return n
+
+    def expand(self) -> list:
+        """The full cartesian grid, in (system, controller, interval,
+        read_ratio) row-major order — the executor relies on load points of
+        one (system, controller) pair being contiguous."""
+        return [RunPoint(system=sy, controller=ct, frontend=self.frontend,
+                         n_cycles=self.n_cycles, interval=iv, read_ratio=rr)
+                for sy, ct, iv, rr in itertools.product(
+                    self.systems, self.controllers,
+                    self.intervals, self.read_ratios)]

@@ -1,0 +1,182 @@
+"""DSE subsystem: grid expansion, compile-cache reuse, curve extraction,
+artifact persistence."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, Simulator
+from repro.core import engine as E
+from repro.dse import (SweepSpec, System, execute, group_points, knee_index,
+                       SweepResult)
+
+
+def test_expand_full_cartesian_grid():
+    spec = SweepSpec(
+        systems=("DDR4", ("DDR5", "DDR5_16Gb_x8", "DDR5_4800B")),
+        controllers=(ControllerConfig(), ControllerConfig(scheduler="FCFS")),
+        intervals=(32.0, 4.0, 1.0), read_ratios=(1.0, 0.5),
+        n_cycles=1000)
+    pts = spec.expand()
+    assert spec.grid_shape == (2, 2, 3, 2)
+    assert len(pts) == spec.n_points == 24
+    combos = {(p.system.standard, p.controller.scheduler, p.interval,
+               p.read_ratio) for p in pts}
+    want = set(itertools.product(("DDR4", "DDR5"), ("FRFCFS", "FCFS"),
+                                 (32.0, 4.0, 1.0), (1.0, 0.5)))
+    assert combos == want
+    # load points of one (system, controller) pair must be contiguous
+    groups = group_points(pts)
+    assert len(groups) == 4
+    for members in groups.values():
+        idx = [i for i, _ in members]
+        assert idx == list(range(idx[0], idx[0] + len(idx)))
+
+
+def test_system_coercion_and_overrides():
+    sy = System.make(("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", {"nCL": 20}))
+    assert sy.timing_overrides == (("nCL", 20),)
+    assert sy.overrides_dict == {"nCL": 20}
+    assert System.make("HBM3").org_preset == "HBM3_16Gb"
+    with pytest.raises(KeyError):
+        System.make("SDRAM66")
+
+
+def test_system_overrides_order_normalized():
+    """Equal overrides in any order/form must compare and hash equal, or
+    one physical system would split into two compile groups."""
+    a = System.make(("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     (("nCCD_S", 1), ("nBL", 1))))
+    b = System.make(("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     {"nBL": 1, "nCCD_S": 1}))
+    assert a == b and hash(a) == hash(b)
+
+
+def test_compile_cache_hit_no_retrace():
+    """Identical specs compile exactly once: the second execute() must be
+    pure cache hits with zero new jax traces."""
+    cache = E.RunCache()
+    spec = SweepSpec(systems=("DDR4", "DDR5"), intervals=(16.0, 2.0),
+                     read_ratios=(1.0,), n_cycles=400)
+    r1 = execute(spec, cache=cache)
+    assert r1.meta["n_groups"] == 2
+    assert r1.meta["compile_cache_misses"] == 2
+    assert r1.meta["traces"] == 2          # one trace per compiled group
+    r2 = execute(spec, cache=cache)
+    assert r2.meta["compile_cache_misses"] == 0
+    assert r2.meta["compile_cache_hits"] == 2
+    assert r2.meta["traces"] == 0          # nothing re-traced
+    np.testing.assert_array_equal(r1.reads_done, r2.reads_done)
+
+
+def test_simulator_run_reuses_cache():
+    """Two Simulator instances of the same triple share one compiled run."""
+    E.RUN_CACHE.clear()
+    a = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    b = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    sa = a.run(300, interval=4.0)
+    misses = E.RUN_CACHE.misses
+    sb = b.run(300, interval=4.0)
+    assert E.RUN_CACHE.misses == misses      # second instance: cache hit
+    assert E.RUN_CACHE.hits >= 1
+    assert int(sa.reads_done) == int(sb.reads_done)
+
+
+def test_scalar_run_load_sweep_does_not_recompile():
+    """interval/read_ratio are traced FrontParams; sweeping them through
+    Simulator.run must reuse one compiled program."""
+    E.RUN_CACHE.clear()
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    sim.run(300, interval=32.0, read_ratio=1.0)
+    assert E.RUN_CACHE.misses == 1
+    sim.run(300, interval=2.0, read_ratio=0.5)
+    assert E.RUN_CACHE.misses == 1 and E.RUN_CACHE.hits == 1
+
+
+def test_mutated_cspec_gets_fresh_compile():
+    """In-place cspec edits (benchmarks mutate `rows`) must change the
+    cache key, and the cached closure must snapshot the spec so later
+    retraces can't observe the mutation."""
+    E.RUN_CACHE.clear()
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    key_before = E.run_key(sim.cspec, sim.controller, sim.frontend, 300,
+                           False, False)
+    sim.run(300)
+    sim.cspec.rows = 2
+    assert E.run_key(sim.cspec, sim.controller, sim.frontend, 300,
+                     False, False) != key_before
+    sim.run(300)
+    assert E.RUN_CACHE.misses == 2      # mutation compiled fresh
+
+
+def test_executor_matches_simulator_single_runs():
+    spec = SweepSpec(systems=("DDR4",), intervals=(8.0, 2.0),
+                     read_ratios=(1.0, 0.5), n_cycles=1500)
+    res = execute(spec, cache=E.RunCache())
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    for i, pt in enumerate(res.points):
+        single = sim.run(1500, interval=pt.interval, read_ratio=pt.read_ratio)
+        assert int(res.reads_done[i]) == int(single.reads_done)
+        assert int(res.probe_cnt[i]) == int(single.probe_cnt)
+
+
+def test_latency_monotone_as_interval_shrinks():
+    """Latency-throughput extraction on a small DDR4 run: probe latency
+    rises monotonically as the streaming interval shrinks (load rises)."""
+    spec = SweepSpec(systems=("DDR4",), intervals=(64.0, 8.0, 4.0, 2.0),
+                     read_ratios=(1.0,), n_cycles=8000)
+    res = execute(spec, cache=E.RunCache())
+    (curve,) = res.curves()
+    assert list(curve.intervals) == [64.0, 8.0, 4.0, 2.0]
+    lat = curve.latency_ns
+    assert np.all(np.isfinite(lat))
+    assert all(lat[i] < lat[i + 1] for i in range(len(lat) - 1)), lat
+    assert 0 < curve.knee < len(lat)
+    assert curve.peak_fraction > 0.5
+
+
+def test_curves_split_distinct_controllers_sharing_scheduler():
+    """Two controllers with the same scheduler name are distinct series —
+    curves() must not interleave them into one corrupted curve."""
+    spec = SweepSpec(systems=("DDR4",),
+                     controllers=(ControllerConfig(queue_depth=8),
+                                  ControllerConfig(queue_depth=32)),
+                     intervals=(16.0, 2.0), read_ratios=(1.0,),
+                     n_cycles=400)
+    res = execute(spec, cache=E.RunCache())
+    cvs = res.curves()
+    assert len(cvs) == 2
+    for cv in cvs:
+        assert list(cv.intervals) == [16.0, 2.0]
+
+
+def test_knee_index_edges():
+    assert knee_index([10.0, 11.0, 25.0, 80.0]) == 2
+    assert knee_index([10.0, 11.0, 12.0]) == 2        # never blows up: last
+    assert knee_index([float("nan")] * 3) == 2
+
+
+def test_save_load_roundtrip(tmp_path):
+    from repro.core import FrontendConfig
+    spec = SweepSpec(systems=("DDR4",), intervals=(8.0, 1.0),
+                     read_ratios=(1.0,), n_cycles=600,
+                     controllers=(ControllerConfig(blockhammer_threshold=512),),
+                     frontend=FrontendConfig(probe_gap=64))
+    res = execute(spec, cache=E.RunCache())
+    path = res.save(str(tmp_path / "sweep"))
+    assert path.endswith(".npz")
+    back = SweepResult.load(path)
+    assert len(back) == len(res)
+    np.testing.assert_allclose(back.throughput_gbps, res.throughput_gbps)
+    np.testing.assert_allclose(back.latency_ns, res.latency_ns)
+    for i, pt in enumerate(back.points):
+        assert pt.system.standard == res.points[i].system.standard
+        assert pt.interval == res.points[i].interval
+        assert back.cmd_names[i] == res.cmd_names[i]
+        np.testing.assert_array_equal(back.cmd_counts[i], res.cmd_counts[i])
+    # cmd_count helper survives the roundtrip
+    assert back.cmd_count(0, "RD") == res.cmd_count(0, "RD")
+    assert back.cmd_count(0, "NO_SUCH_CMD") == 0
+    # non-default controller/frontend configs survive the roundtrip
+    assert back.points[0].controller.blockhammer_threshold == 512
+    assert back.points[0].frontend.probe_gap == 64

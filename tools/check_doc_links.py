@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Docs link-check: every local markdown link / referenced repo path must
+exist.  Used by CI (`.github/workflows/ci.yml`) so README/docs references
+stay valid.
+
+    python tools/check_doc_links.py README.md docs
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+# inline-code path mentions like `src/repro/dse/` or `examples/quickstart.py`
+CODE_PATH = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_./-]*)`")
+# repo paths resolve against the repo root (this script's parent dir), not
+# the CWD, so the check works from any working directory
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def md_files(args):
+    for a in args:
+        if os.path.isdir(a):
+            for root, _, names in os.walk(a):
+                yield from (os.path.join(root, n) for n in names
+                            if n.endswith(".md"))
+        else:
+            yield a
+
+
+def check(path: str) -> list:
+    errors = []
+    text = open(path).read()
+    base = os.path.dirname(path)
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        resolved = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link -> {target}")
+    for m in CODE_PATH.finditer(text):
+        target = m.group(1)
+        # only flag things that look like repo paths (known top-level dirs)
+        if target.split("/")[0] in ("src", "docs", "examples", "tests",
+                                    "benchmarks", "tools"):
+            if not os.path.exists(os.path.join(REPO_ROOT, target.rstrip("/"))):
+                errors.append(f"{path}: missing repo path -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    errors = []
+    for f in md_files(argv or ["README.md", "docs"]):
+        errors += check(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked docs links: {'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
