@@ -14,8 +14,9 @@ def run(report, n_cycles: int = 20_000):
 
     sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
 
-    # jitted engine, steady-state rate (exclude compile)
-    sim.run(512)  # warm
+    # jitted engine, steady-state rate (exclude compile: the run cache
+    # keys on n_cycles, so warm with the exact timed program)
+    sim.run(n_cycles)
     t0 = time.perf_counter()
     sim.run(n_cycles)
     dt = time.perf_counter() - t0
@@ -38,6 +39,24 @@ def run(report, n_cycles: int = 20_000):
     dt_o = time.perf_counter() - t0
     report("oracle_cycles_per_sec", int(2 * n_oracle / dt_o),
            "scalar numpy reference")
+
+    # trace-capture overhead: the "high-performance" claim of the trace
+    # subsystem, measured — trace=True cycles/sec vs the plain engine,
+    # plus the dense->columnar compaction cost (repro.trace.capture)
+    from repro.trace.capture import capture
+    # warm the exact timed program: the run cache keys on n_cycles, so a
+    # short warm-up run would leave compile time inside the measurement
+    sim.run(n_cycles, trace=True)
+    t0 = time.perf_counter()
+    _, dense = sim.run(n_cycles, trace=True)
+    dt_t = time.perf_counter() - t0
+    report("engine_trace_cycles_per_sec", int(n_cycles / dt_t),
+           f"trace=True; {100 * (dt_t - dt) / dt:+.0f}% vs trace=False")
+    t0 = time.perf_counter()
+    tr = capture(sim.cspec, dense)
+    dt_c = time.perf_counter() - t0
+    report("trace_capture_ms", round(1e3 * dt_c, 2),
+           f"{len(tr)} commands compacted from {n_cycles}x2 dense cells")
 
     # vmap DSE scaling: N configs in one compiled program
     for n_pts in (1, 8, 32):

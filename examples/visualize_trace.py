@@ -1,11 +1,13 @@
-"""Paper §4.1 / Fig. 2: record a DRAM command trace and render the
-two-view HTML visualizer (bus utilization + command trace).
+"""Paper §4 / Fig. 2: capture a DRAM command trace, audit it against the
+timing model, and render the two-view HTML visualizer (bus utilization +
+command trace + audit overlay).
 
     PYTHONPATH=src python examples/visualize_trace.py [standard]
 """
 import sys
 
-from repro.core import Simulator, viz
+from repro.core import Simulator
+from repro.trace import audit, capture, save, write_html
 
 std, org, tim = {
     "DDR5": ("DDR5", "DDR5_16Gb_x8", "DDR5_4800B"),
@@ -15,9 +17,14 @@ std, org, tim = {
 }[sys.argv[1] if len(sys.argv) > 1 else "LPDDR5"]
 
 sim = Simulator(std, org, tim)
-stats, trace = sim.run(3_000, interval=2.0, read_ratio=0.75, trace=True)
-recs = viz.trace_to_records(sim.cspec, trace)
-path = viz.write_html(f"results/{std.lower()}_trace.html", sim.cspec, trace,
-                      title=f"{std} command trace ({tim})")
-print(f"{len(recs)} commands rendered -> {path}")
+stats, dense = sim.run(3_000, interval=2.0, read_ratio=0.75, trace=True)
+trace = capture(sim.cspec, dense, controller=sim.controller,
+                frontend=sim.frontend)
+report = audit(sim.cspec, trace)
+npz = save(trace, f"results/{std.lower()}_trace.npz")
+path = write_html(f"results/{std.lower()}_trace.html", trace, sim.cspec,
+                  report, title=f"{std} command trace ({tim})")
+print(f"{len(trace)} commands captured -> {npz}")
+print(report.summary())
+print(f"visualizer -> {path}")
 print("open in a browser: zoom/offset sliders, hover for per-command info")

@@ -204,10 +204,21 @@ class ControllerConfig:
 
 
 class StepEvents(NamedTuple):
-    """What happened this cycle (static shape; -1 == nothing)."""
+    """What happened this cycle (static shape; -1 == nothing).
+
+    ``bank`` is the flat bank id of queue-issued commands; refresh-engine
+    commands (REFab/PREab) carry the *representative* bank of their refresh
+    unit (``ru * banks_per_ru``) so trace auditing can attribute them to the
+    right hierarchy node.  ``arrive`` is the served request's arrival clock
+    (-1 for refresh-engine commands); ``hit_ready`` records whether a
+    post-predicate row-hit candidate existed when this bus slot selected —
+    the observable the FR-FCFS row-hit-first audit replays.
+    """
     cmd: jnp.ndarray          # (2,) issued command per bus slot [col, row]
     bank: jnp.ndarray         # (2,)
     row: jnp.ndarray          # (2,)
+    arrive: jnp.ndarray       # (2,) arrival clk of the served request, -1 n/a
+    hit_ready: jnp.ndarray    # (2,) bool — a maskable row-hit was available
     served_read: jnp.ndarray      # bool — a read's final RD issued
     served_write: jnp.ndarray     # bool
     served_probe: jnp.ndarray     # bool — the read served was a probe
@@ -291,7 +302,8 @@ def _try_issue_refresh(cspec, dp, cs, clk, due, urgent, ref_cmd,
     bank_ru = jnp.arange(cspec.n_banks, dtype=jnp.int32) // banks_per_ru
     is_ref = do & (cmd == jnp.int32(cspec.id_REFab))
     prac = jnp.where(is_ref & (bank_ru == ru), 0, cs.prac_count)
-    return cs._replace(dev=dev, prac_count=prac), do, cmd
+    ref_bank = (ru * jnp.int32(banks_per_ru)).astype(jnp.int32)
+    return cs._replace(dev=dev, prac_count=prac), do, cmd, ref_bank
 
 
 def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
@@ -318,9 +330,10 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
 
     # refresh engine first (its commands obey the same kind restriction)
     ref_kind_ok = kind_ok[kind_mask]
-    cs, ref_issued, ref_cmd_done = _try_issue_refresh(
+    cs, ref_issued, ref_cmd_done, ref_bank = _try_issue_refresh(
         cspec, dp, cs, clk, due, urgent, ref_cmd, ref_kind_ok)
 
+    hit_ready = jnp.any(mask & open_hit) & ~ref_issued
     slot, ok = sched_fn(mask & ~ref_issued, open_hit, q.arrive)
     do = ok & ~ref_issued
 
@@ -361,8 +374,11 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     ev = dict(
         cmd=jnp.where(do, cmd,
                       jnp.where(ref_issued, ref_cmd_done, jnp.int32(-1))),
-        bank=jnp.where(do, b, jnp.int32(-1)),
+        bank=jnp.where(do, b,
+                       jnp.where(ref_issued, ref_bank, jnp.int32(-1))),
         row=jnp.where(do, rowv, jnp.int32(-1)),
+        arrive=jnp.where(do, q.arrive[slot], jnp.int32(-1)),
+        hit_ready=hit_ready,
         served_read=fin_rd, served_write=fin_wr, served_probe=probe,
         probe_latency=jnp.where(probe, completion - q.arrive[slot], 0),
         probe_completion=jnp.where(probe, completion, 0),
@@ -394,6 +410,8 @@ def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
             cmd=jnp.stack([ev_col["cmd"], ev_row["cmd"]]),
             bank=jnp.stack([ev_col["bank"], ev_row["bank"]]),
             row=jnp.stack([ev_col["row"], ev_row["row"]]),
+            arrive=jnp.stack([ev_col["arrive"], ev_row["arrive"]]),
+            hit_ready=jnp.stack([ev_col["hit_ready"], ev_row["hit_ready"]]),
             served_read=ev_col["served_read"] | ev_row["served_read"],
             served_write=ev_col["served_write"] | ev_row["served_write"],
             served_probe=ev_col["served_probe"] | ev_row["served_probe"],
@@ -409,6 +427,8 @@ def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
             cmd=jnp.stack([ev["cmd"], jnp.int32(-1)]),
             bank=jnp.stack([ev["bank"], jnp.int32(-1)]),
             row=jnp.stack([ev["row"], jnp.int32(-1)]),
+            arrive=jnp.stack([ev["arrive"], jnp.int32(-1)]),
+            hit_ready=jnp.stack([ev["hit_ready"], jnp.asarray(False)]),
             served_read=ev["served_read"], served_write=ev["served_write"],
             served_probe=ev["served_probe"],
             probe_latency=ev["probe_latency"],

@@ -47,6 +47,21 @@ class SimState(NamedTuple):
     clk: jnp.ndarray
 
 
+class TraceArrays(NamedTuple):
+    """Dense per-cycle trace emitted by ``run(..., trace=True)``.
+
+    Every field is ``[T, 2]`` ([cycles, bus slots]; slot 0 is the column
+    C/A bus, slot 1 the row bus — single-bus standards only use slot 0).
+    ``cmd`` is -1 on idle slots.  ``repro.trace.capture`` compacts these
+    dense arrays into a columnar :class:`repro.trace.CommandTrace`.
+    """
+    cmd: jnp.ndarray         # issued command id, -1 == idle
+    bank: jnp.ndarray        # flat bank id (refresh: representative bank)
+    row: jnp.ndarray         # target row, -1 when n/a
+    arrive: jnp.ndarray      # served request's arrival clk, -1 for refresh
+    hit_ready: jnp.ndarray   # bool — a post-predicate row hit was available
+
+
 # --------------------------------------------------------------------------
 # Compile cache
 # --------------------------------------------------------------------------
@@ -234,7 +249,8 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
             deferred=st.deferred + ev.deferred,
         )
         out = SimState(cs=cs, fs=fs, stats=st, clk=sim.clk + 1)
-        ys = (ev.cmd, ev.bank, ev.row) if trace else None
+        ys = TraceArrays(ev.cmd, ev.bank, ev.row, ev.arrive,
+                         ev.hit_ready) if trace else None
         return out, ys
 
     def run(dp, fp, seed):

@@ -1,157 +1,50 @@
-"""DRAM command-trace visualizer (paper §4.1, Fig. 2) — standalone HTML.
+"""Back-compat shim over the `repro.trace` subsystem (paper §4.1).
 
-Two interactive views, as in the paper:
-  (a) bus-utilization view — per-window C/A-bus and data-bus occupancy;
-  (b) command-trace view  — per-bank command rectangles over time with
-      hover tooltips (command, bank, row, cycle).
-
-The live "attach to a running simulation" mode of the paper maps here to
-feeding the trace arrays emitted by ``Simulator.run(..., trace=True)``
-straight into ``render_html`` — same UX, no socket (DESIGN.md §2).
+The visualizer now lives in `src/repro/trace/viz.py`, operating on compact
+columnar `repro.trace.CommandTrace` captures with level-of-detail rendering
+and derived bus-utilization denominators.  This module keeps the original
+`(cspec, dense_trace_arrays)` entry points working: each call compacts the
+engine's dense trace arrays via `repro.trace.capture` and delegates.
 """
 from __future__ import annotations
 
-import json
-
-import numpy as np
-
 from repro.core.compile import CompiledSpec
+from repro.trace import format as _format
+from repro.trace import viz as _viz
+from repro.trace.capture import capture as _capture_fn
 
-_PALETTE = ["#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f",
-            "#edc948", "#b07aa1", "#ff9da7", "#9c755f", "#bab0ac",
-            "#86bcb6", "#d37295"]
+_PALETTE = _viz.PALETTE        # legacy alias
+
+
+def _to_command_trace(cspec: CompiledSpec, trace):
+    return _capture_fn(cspec, trace)
 
 
 def trace_to_records(cspec: CompiledSpec, trace, start: int = 0,
                      limit: int | None = None) -> list:
-    """Convert engine trace arrays (cmds[T,2], banks[T,2], rows[T,2]) into
-    a list of {clk, cmd, bank, row, bus} records."""
-    cmds, banks, rows = (np.asarray(t) for t in trace)
+    """Convert engine trace arrays into `{clk, cmd, bank, row, bus}`
+    records (commands with ``start <= clk < limit``)."""
+    ct = _to_command_trace(cspec, trace)
     recs = []
-    T = cmds.shape[0] if limit is None else min(limit, cmds.shape[0])
-    for t in range(start, T):
-        for bus in range(cmds.shape[1]):
-            c = int(cmds[t, bus])
-            if c < 0:
-                continue
-            recs.append({"clk": t, "cmd": cspec.cmd_names[c],
-                         "bank": int(banks[t, bus]), "row": int(rows[t, bus]),
-                         "bus": bus})
+    for r in _format.iter_records(ct, start=start, stop=limit):
+        r.pop("arrive", None)
+        recs.append(r)
     return recs
 
 
 def render_html(cspec: CompiledSpec, trace, title: str = "",
-                limit: int | None = 4096) -> str:
-    recs = trace_to_records(cspec, trace, limit=limit)
-    colors = {name: _PALETTE[i % len(_PALETTE)]
-              for i, name in enumerate(cspec.cmd_names)}
-    nbl = int(cspec.timings["nBL"])
-    payload = json.dumps({
-        "title": title or f"{cspec.name} command trace",
-        "standard": cspec.name, "n_banks": int(cspec.n_banks),
-        "nBL": nbl, "colors": colors, "records": recs,
-        "cmd_kind": {n: int(k) for n, k in zip(cspec.cmd_names,
-                                               cspec.cmd_kind)},
-    })
-    return _TEMPLATE.replace("__PAYLOAD__", payload)
+                limit: int | None = None) -> str:
+    """Render the two-view HTML from dense engine trace arrays.  ``limit``
+    is accepted for backwards compatibility and ignored — the new renderer
+    is level-of-detail and handles full-length traces."""
+    del limit
+    return _viz.render_html(_to_command_trace(cspec, trace), cspec,
+                            title=title)
 
 
 def write_html(path: str, cspec: CompiledSpec, trace, title: str = "",
-               limit: int | None = 4096) -> str:
+               limit: int | None = None) -> str:
     html = render_html(cspec, trace, title, limit)
     with open(path, "w") as f:
         f.write(html)
     return path
-
-
-_TEMPLATE = """<!doctype html>
-<html><head><meta charset="utf-8"><title>Ramulator-JAX trace</title>
-<style>
- body{font-family:system-ui,sans-serif;margin:12px;background:#fafafa}
- h2{margin:4px 0} .views{display:flex;flex-direction:column;gap:12px}
- canvas{background:#fff;border:1px solid #ccc;width:100%}
- #tip{position:fixed;background:#222;color:#fff;padding:4px 8px;
-      border-radius:4px;font-size:12px;pointer-events:none;display:none}
- .legend span{display:inline-block;margin-right:10px;font-size:12px}
- .legend i{display:inline-block;width:10px;height:10px;margin-right:3px}
- .bar{display:flex;gap:16px;align-items:center;font-size:13px}
-</style></head><body>
-<h2 id="title"></h2>
-<div class="bar">
-  <label>zoom <input id="zoom" type="range" min="1" max="40" value="6"></label>
-  <label>offset <input id="off" type="range" min="0" max="100" value="0"></label>
-  <span id="stats"></span>
-</div>
-<div class="views">
- <div><b>(a) bus utilization</b><canvas id="bus" height="140"></canvas></div>
- <div><b>(b) command trace</b><canvas id="cmds" height="420"></canvas></div>
-</div>
-<div class="legend" id="legend"></div>
-<div id="tip"></div>
-<script>
-const D = __PAYLOAD__;
-document.getElementById('title').textContent = D.title;
-const recs = D.records;
-const maxClk = recs.length ? recs[recs.length-1].clk + 1 : 1;
-const legend = document.getElementById('legend');
-for (const [name,col] of Object.entries(D.colors)) {
-  const s=document.createElement('span');
-  s.innerHTML='<i style="background:'+col+'"></i>'+name; legend.appendChild(s);
-}
-const busC = document.getElementById('bus'), cmdC = document.getElementById('cmds');
-const tip = document.getElementById('tip');
-function layout(){
-  busC.width = busC.clientWidth; cmdC.width = cmdC.clientWidth; draw();
-}
-let pxPerClk = 6, off = 0;
-document.getElementById('zoom').oninput = e=>{pxPerClk=+e.target.value;draw();};
-document.getElementById('off').oninput = e=>{off=+e.target.value/100*maxClk;draw();};
-function draw(){
-  const W = cmdC.width, lanes = D.n_banks + 1;
-  const laneH = Math.max(6, Math.floor((cmdC.height-20)/lanes));
-  let g = cmdC.getContext('2d'); g.clearRect(0,0,W,cmdC.height);
-  g.font='10px sans-serif'; g.fillStyle='#888';
-  for (let b=0;b<D.n_banks;b++) g.fillText('bank '+b, 2, 12+b*laneH+laneH/2);
-  let busUse = {}, dataUse = {};
-  for (const r of recs){
-    const x = (r.clk-off)*pxPerClk + 60;
-    if (x < -20 || x > W) {
-      // still accumulate utilization over visible window only
-    }
-    const wbin = Math.floor(r.clk/32);
-    busUse[wbin] = (busUse[wbin]||0)+1;
-    const isCol = D.cmd_kind[r.cmd]===1;
-    if (isCol) dataUse[wbin]=(dataUse[wbin]||0)+D.nBL;
-    if (x < -20 || x > W) continue;
-    const lane = r.bank >= 0 ? r.bank : D.n_banks;
-    g.fillStyle = D.colors[r.cmd]||'#000';
-    g.fillRect(x, 8+lane*laneH, Math.max(2,pxPerClk*0.9), laneH-2);
-  }
-  // bus utilization view: 32-cycle bins
-  const bg = busC.getContext('2d'); bg.clearRect(0,0,busC.width,busC.height);
-  const bins = Math.ceil(maxClk/32);
-  const bw = Math.max(1, (busC.width-70)/bins);
-  bg.fillStyle='#888'; bg.font='10px sans-serif';
-  bg.fillText('C/A bus', 2, 30); bg.fillText('data bus', 2, 100);
-  for (let i=0;i<bins;i++){
-    const u=(busUse[i]||0)/64, d=Math.min(1,(dataUse[i]||0)/32);
-    bg.fillStyle='#4e79a7'; bg.fillRect(60+i*bw, 50-40*u, Math.max(1,bw-0.5), 40*u);
-    bg.fillStyle='#e15759'; bg.fillRect(60+i*bw, 120-40*d, Math.max(1,bw-0.5), 40*d);
-  }
-  document.getElementById('stats').textContent =
-    recs.length+' commands, '+maxClk+' cycles';
-}
-cmdC.onmousemove = e=>{
-  const rect = cmdC.getBoundingClientRect();
-  const clk = Math.round((e.clientX-rect.left-60)/pxPerClk + off);
-  const hits = recs.filter(r=>Math.abs(r.clk-clk)<=1);
-  if (hits.length){
-    tip.style.display='block'; tip.style.left=(e.clientX+12)+'px';
-    tip.style.top=(e.clientY+12)+'px';
-    tip.textContent = hits.map(r=>r.cmd+'@clk'+r.clk+' bank'+r.bank+' row'+r.row).join(' | ');
-  } else tip.style.display='none';
-};
-cmdC.onmouseleave = ()=>{tip.style.display='none';};
-window.onresize = layout; layout();
-</script></body></html>
-"""

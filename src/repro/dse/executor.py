@@ -14,9 +14,18 @@ as possible:
   3. vmap over the group's load points, sharding the batch across devices
      when more than one is available;
   4. hand the stacked Stats to `repro.dse.results` for curve extraction.
+
+With `SweepSpec(capture_traces=...)` each group runs its *trace-emitting*
+program instead — still exactly one compiled program per group (the trace
+variant replaces the stats-only variant rather than adding to it, so
+`engine.TRACE_COUNT` advances identically to a no-capture sweep) — and the
+batched trace arrays are compacted per point into
+`repro.trace.CommandTrace` objects, optionally persisted as one `.npz`
+artifact per point.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -92,6 +101,12 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
                       "cycles")}
     cmd_counts: list = [None] * n
     cmd_names: list = [None] * n
+    capture = spec.capture_traces
+    traces: list | None = [None] * n if capture else None
+    trace_dir = capture if isinstance(capture, str) else None
+    trace_paths: dict = {}
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
 
     t0 = time.perf_counter()
     misses0, hits0, trace0 = cache.misses, cache.hits, E.TRACE_COUNT
@@ -105,12 +120,27 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         dp = D.dyn_params(cspec)
         fp = _front_params(pts, fcfg)
         fp, pad = _shard_batch(fp, devices)
-        fn = cache.get(cspec, ccfg, fcfg, pts[0].n_cycles, batched=True)
+        fn = cache.get(cspec, ccfg, fcfg, pts[0].n_cycles,
+                       trace=bool(capture), batched=True)
         tg = time.perf_counter()
-        stats = fn(dp, fp, jnp.uint32(spec.seed))
+        out = fn(dp, fp, jnp.uint32(spec.seed))
+        stats, dense = out if capture else (out, None)
         stats = jax.tree.map(np.asarray, stats)
         if pad:
             stats = jax.tree.map(lambda a: a[:-pad], stats)
+        if capture:
+            from repro.trace.capture import capture as capture_trace
+            from repro.trace.format import save as save_trace
+            dense = jax.tree.map(np.asarray, dense)
+            for j, (i, pt) in enumerate(members):
+                tr = capture_trace(
+                    cspec, dense, point=j, controller=ccfg, frontend=fcfg,
+                    interval=pt.interval, read_ratio=pt.read_ratio,
+                    seed=spec.seed, point_index=i, label=pt.label)
+                traces[i] = tr
+                if trace_dir:
+                    trace_paths[i] = save_trace(
+                        tr, os.path.join(trace_dir, f"point_{i:04d}.npz"))
         group_meta.append({"system": sy.label, "n_points": len(pts),
                            "wall_s": round(time.perf_counter() - tg, 3)})
 
@@ -134,6 +164,8 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         "groups": group_meta,
         "seed": spec.seed,
     }
+    if trace_paths:
+        meta["trace_artifacts"] = [trace_paths.get(i) for i in range(n)]
     return R.SweepResult(points=points, cmd_counts=cmd_counts,
-                         cmd_names=cmd_names, meta=meta,
+                         cmd_names=cmd_names, meta=meta, traces=traces,
                          **cols, **ints)

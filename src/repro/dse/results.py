@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.compile import CompiledSpec
 from repro.dse.spec import RunPoint, SweepSpec, System
+from repro.trace.capture import config_doc
 
 # --------------------------------------------------------------------------
 # Vectorized derived metrics (batched counterparts of repro.core.engine's)
@@ -90,6 +91,11 @@ class SweepResult:
     cmd_counts: list                    # per-point (n_cmds,) arrays (ragged)
     cmd_names: list                     # per-point command-name lists
     meta: dict = dataclasses.field(default_factory=dict)
+    #: Per-point `repro.trace.CommandTrace` objects when the sweep ran with
+    #: `capture_traces`; None otherwise.  Not persisted by `save`/`load` —
+    #: trace artifacts are saved separately (one `.npz` per point, paths in
+    #: `meta["trace_artifacts"]`) when `capture_traces` names a directory.
+    traces: list | None = None
 
     def __len__(self):
         return len(self.points)
@@ -181,25 +187,14 @@ class SweepResult:
                    cmd_names=cmd_names, meta=doc.get("meta", {}), **arrays)
 
 
-def _config_doc(cfg) -> dict:
-    """All JSON-representable dataclass fields (callables — e.g.
-    `extra_predicates` — can't round-trip and are dropped)."""
-    out = {}
-    for f in dataclasses.fields(cfg):
-        v = getattr(cfg, f.name)
-        if isinstance(v, (int, float, str, bool)) or v is None:
-            out[f.name] = v
-    return out
-
-
 def _point_doc(pt: RunPoint) -> dict:
     return {
         "standard": pt.system.standard,
         "org_preset": pt.system.org_preset,
         "timing_preset": pt.system.timing_preset,
         "timing_overrides": list(pt.system.timing_overrides),
-        "controller": _config_doc(pt.controller),
-        "frontend": _config_doc(pt.frontend),
+        "controller": config_doc(pt.controller),
+        "frontend": config_doc(pt.frontend),
         "n_cycles": pt.n_cycles,
         "interval": pt.interval,
         "read_ratio": pt.read_ratio,

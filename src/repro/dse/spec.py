@@ -119,6 +119,13 @@ class SweepSpec:
         default_factory=F.FrontendConfig)
     n_cycles: int = 20_000
     seed: int = 0x1234
+    #: Capture a per-point command trace (``repro.trace.CommandTrace``).
+    #: ``True`` keeps traces in-memory on ``SweepResult.traces``; a string
+    #: is a directory to additionally persist one ``.npz`` trace artifact
+    #: per point next to the curve artifact.  Each compile group then runs
+    #: its trace-emitting program — still one compiled program per group,
+    #: so ``engine.TRACE_COUNT`` grows exactly as in a no-capture sweep.
+    capture_traces: bool | str = False
 
     def __post_init__(self):
         object.__setattr__(self, "systems",

@@ -1,0 +1,31 @@
+"""repro.trace — command-trace capture, audit, and visualization (paper §4).
+
+The trustworthiness pillar of Ramulator 2.1 as a subsystem with four
+layers over the cycle-level engine:
+
+  * :mod:`repro.trace.capture` — compact columnar ``CommandTrace`` from the
+    engine's dense trace arrays (scalar runs and batched-sweep points),
+    with spec fingerprint + run configuration embedded;
+  * :mod:`repro.trace.format` — single-file ``.npz`` artifacts and
+    streaming JSONL export, round-trip stable;
+  * :mod:`repro.trace.audit` — vectorized independent replay of the
+    constraint table plus FR-FCFS scheduler invariants; every violation is
+    reported with the exact constraint, commands involved, and slack;
+  * :mod:`repro.trace.viz` — level-of-detail HTML visualizer (bus
+    utilization + per-bank command lanes + audit-violation overlay).
+
+CLI: ``python -m repro.trace --standard DDR4 --cycles 20000 --out
+trace.npz --html trace.html`` (see ``python -m repro.trace --help``).
+"""
+from repro.trace.audit import AuditReport, Violation, audit
+from repro.trace.capture import CommandTrace, capture, spec_fingerprint_hex
+from repro.trace.format import (iter_records, load, read_jsonl, save,
+                                write_jsonl)
+from repro.trace.viz import render_html, write_html
+
+__all__ = [
+    "AuditReport", "Violation", "audit",
+    "CommandTrace", "capture", "spec_fingerprint_hex",
+    "iter_records", "load", "read_jsonl", "save", "write_jsonl",
+    "render_html", "write_html",
+]

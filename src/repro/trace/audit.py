@@ -1,0 +1,256 @@
+"""Trace auditing: vectorized replay of a captured command trace against the
+compiled constraint table, plus scheduler-behavior invariants.
+
+This is the "fine-grained validation" pillar of the paper (§4.2) in
+post-hoc form, following the re-evaluation methodology of Bostancı et al.:
+instead of trusting the engine's in-loop timing checks, an *independent*
+replay walks the captured command stream and re-derives, for every issued
+command, the earliest cycle each timing constraint would have allowed it —
+any command that issued early is reported with the exact violated
+constraint, the preceding command issue it raced, and the (negative) slack.
+
+The replay is fully vectorized: no Python loop over cycles or commands.
+For each constraint ``(prev, next, level, lat, window)`` the preceding
+events are bucketed by their level-``level`` hierarchy node (a division of
+the flat bank id — the trace's issue order is already time-sorted), and one
+``searchsorted`` per constraint locates, for every following event, the
+``window``-th most recent preceding event at the same node.  Cost is
+O(n_constraints · N log N) for N commands, independent of cycle count.
+
+Scheduler checks replay two invariants of the modeled schedulers over the
+request information embedded in the trace:
+
+* **row-hit-first** (FR-FCFS): whenever a post-predicate row-hit candidate
+  existed (the engine records this per selection pass as ``hit_ready``),
+  the issued queue command must be a column/sync command — FR-FCFS never
+  spends the slot on a row command while a ready hit waits;
+* **age order**: among served column commands to the same (bank, row,
+  command), request arrival times must be non-decreasing — both FCFS and
+  FR-FCFS pick the oldest among equally-maskable candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import spec as S
+from repro.core.compile import CompiledSpec
+from repro.trace.capture import CommandTrace, spec_fingerprint_hex
+
+
+@dataclasses.dataclass
+class Violation:
+    """One audit finding.  ``slack`` is issue clock minus earliest legal
+    clock — negative means the command issued ``-slack`` cycles early."""
+    check: str          # "timing" | "scheduler"
+    constraint: str     # e.g. "ACT->RD @ bank lat=22" or "row_hit_first"
+    clk: int            # cycle the offending command issued
+    cmd: str
+    bank: int
+    bus: int
+    prev_cmd: str = ""
+    prev_clk: int = -1
+    slack: int = 0
+
+    def __str__(self):
+        s = (f"[{self.check}] {self.constraint}: {self.cmd} @ clk "
+             f"{self.clk} bank {self.bank}")
+        if self.prev_cmd:
+            s += f" after {self.prev_cmd} @ clk {self.prev_clk}"
+        if self.slack:
+            s += f" (slack {self.slack})"
+        return s
+
+
+@dataclasses.dataclass
+class AuditReport:
+    n_commands: int
+    n_pairs_checked: int            # (preceding, following) pairs examined
+    checks: dict                    # check name -> violation count
+    violations: list                # list[Violation], possibly truncated
+    truncated: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return sum(self.checks.values()) == 0
+
+    @property
+    def n_violations(self) -> int:
+        return sum(self.checks.values())
+
+    def summary(self) -> str:
+        head = (f"audited {self.n_commands} commands, "
+                f"{self.n_pairs_checked} constraint pairs: ")
+        if self.ok:
+            return head + "clean"
+        parts = [f"{n} {name}" for name, n in sorted(self.checks.items())
+                 if n]
+        return head + f"{self.n_violations} violations ({', '.join(parts)})"
+
+
+def constraint_name(cspec: CompiledSpec, i: int) -> str:
+    """Human-readable identity of constraint-table row ``i``."""
+    p = cspec.cmd_names[int(cspec.ct_prev[i])]
+    f = cspec.cmd_names[int(cspec.ct_next[i])]
+    lv = cspec.levels[int(cspec.ct_level[i])]
+    name = f"{p}->{f} @ {lv} lat={int(cspec.ct_lat[i])}"
+    if int(cspec.ct_win[i]) > 1:
+        name += f" window={int(cspec.ct_win[i])}"
+    return name
+
+
+def _nodes_at(cspec: CompiledSpec, level: int, bank: np.ndarray) -> np.ndarray:
+    """Level-``level`` hierarchy-node id for events at flat bank ids."""
+    if level == 0:
+        return np.zeros(bank.shape, np.int64)
+    denom = int(np.prod(cspec.level_counts[level + 1:], dtype=np.int64))
+    return int(cspec.level_offsets[level]) + bank.astype(np.int64) // denom
+
+
+def _audit_timing(cspec: CompiledSpec, trace: CommandTrace, violations: list,
+                  max_violations: int):
+    """Replay every constraint-table row over the trace.  Returns
+    (n_violations, n_pairs_checked)."""
+    N = len(trace)
+    cmd = trace.cmd.astype(np.int64)
+    bank = trace.bank.astype(np.int64)
+    clk = trace.clk.astype(np.int64)
+    order = np.arange(N, dtype=np.int64)
+    names = trace.cmd_names
+    n_viol = 0
+    n_pairs = 0
+    for i in range(len(cspec.ct_prev)):
+        p, f = int(cspec.ct_prev[i]), int(cspec.ct_next[i])
+        level, lat = int(cspec.ct_level[i]), int(cspec.ct_lat[i])
+        win = int(cspec.ct_win[i])
+        if level > int(cspec.cmd_scope[p]):
+            continue        # preceding command never stamps this level
+        p_sel = np.nonzero(cmd == p)[0]
+        f_sel = np.nonzero(cmd == f)[0]
+        if len(p_sel) == 0 or len(f_sel) == 0:
+            continue
+        p_nodes = _nodes_at(cspec, level, bank[p_sel])
+        f_nodes = _nodes_at(cspec, level, bank[f_sel])
+        # bucket preceding events by node, keeping issue order inside each
+        # bucket: composite key = node * (N+1) + order (order < N+1)
+        key_p = p_nodes * (N + 1) + order[p_sel]
+        sort = np.argsort(key_p, kind="stable")
+        key_p = key_p[sort]
+        clk_p = clk[p_sel][sort]
+        # position of each following event inside its node's bucket
+        query = f_nodes * (N + 1) + order[f_sel]
+        pos = np.searchsorted(key_p, query)      # p events strictly before
+        j = pos - win                            # window-th most recent
+        valid = j >= 0
+        same_node = np.zeros(len(f_sel), bool)
+        same_node[valid] = (key_p[j[valid]] // (N + 1)) == f_nodes[valid]
+        valid &= same_node
+        n_pairs += int(np.count_nonzero(valid))
+        t_prev = np.where(valid, clk_p[np.clip(j, 0, None)], np.int64(-1))
+        early = valid & (clk[f_sel] < t_prev + lat)
+        if not early.any():
+            continue
+        cname = constraint_name(cspec, i)
+        for k in np.nonzero(early)[0]:
+            n_viol += 1
+            if len(violations) < max_violations:
+                e = int(f_sel[k])
+                violations.append(Violation(
+                    check="timing", constraint=cname,
+                    clk=int(clk[e]), cmd=names[int(cmd[e])],
+                    bank=int(bank[e]), bus=int(trace.bus[e]),
+                    prev_cmd=names[p], prev_clk=int(t_prev[k]),
+                    slack=int(clk[e] - (t_prev[k] + lat))))
+    return n_viol, n_pairs
+
+
+def _audit_row_hit_first(cspec: CompiledSpec, trace: CommandTrace,
+                         violations: list, max_violations: int) -> int:
+    """FR-FCFS invariant: when a maskable row hit existed, the issued queue
+    command must be a column (or data-clock sync) command."""
+    kind = np.asarray(cspec.cmd_kind)[trace.cmd]
+    queue_issued = trace.arrive >= 0
+    is_col = (kind == S.KIND_COL) | (kind == S.KIND_SYNC)
+    bad = queue_issued & (trace.hit_ready != 0) & ~is_col
+    names = trace.cmd_names
+    for e in np.nonzero(bad)[0]:
+        if len(violations) < max_violations:
+            violations.append(Violation(
+                check="scheduler", constraint="row_hit_first",
+                clk=int(trace.clk[e]), cmd=names[int(trace.cmd[e])],
+                bank=int(trace.bank[e]), bus=int(trace.bus[e])))
+    return int(np.count_nonzero(bad))
+
+
+def _audit_age_order(cspec: CompiledSpec, trace: CommandTrace,
+                     violations: list, max_violations: int) -> int:
+    """Served column commands to one (bank, row, command) must serve
+    requests in arrival order."""
+    fx = np.asarray(cspec.cmd_fx)[trace.cmd]
+    final = (fx & (S.FX_FINAL_RD | S.FX_FINAL_WR)) != 0
+    sel = np.nonzero(final & (trace.arrive >= 0))[0]
+    if len(sel) < 2:
+        return 0
+    # stable sort by (bank, row, cmd) keeps issue order within each group
+    keys = np.lexsort((sel, trace.cmd[sel], trace.row[sel],
+                       trace.bank[sel]))
+    s = sel[keys]
+    same = ((trace.bank[s][1:] == trace.bank[s][:-1])
+            & (trace.row[s][1:] == trace.row[s][:-1])
+            & (trace.cmd[s][1:] == trace.cmd[s][:-1]))
+    regress = same & (trace.arrive[s][1:] < trace.arrive[s][:-1])
+    names = trace.cmd_names
+    for k in np.nonzero(regress)[0]:
+        if len(violations) < max_violations:
+            e, prev = int(s[k + 1]), int(s[k])
+            violations.append(Violation(
+                check="scheduler", constraint="age_order",
+                clk=int(trace.clk[e]), cmd=names[int(trace.cmd[e])],
+                bank=int(trace.bank[e]), bus=int(trace.bus[e]),
+                prev_cmd=names[int(trace.cmd[prev])],
+                prev_clk=int(trace.clk[prev]),
+                slack=int(trace.arrive[e] - trace.arrive[prev])))
+    return int(np.count_nonzero(regress))
+
+
+def audit(cspec: CompiledSpec | None, trace: CommandTrace, *,
+          check_fingerprint: bool = True, scheduler: str | None = None,
+          max_violations: int = 256) -> AuditReport:
+    """Audit a captured trace against ``cspec``'s constraint table.
+
+    ``cspec`` may be None — the spec is then recompiled from the trace's
+    embedded provenance.  When ``check_fingerprint`` is set (default), a
+    provided ``cspec`` must match the fingerprint the trace was captured
+    under.  ``scheduler`` defaults to the controller scheduler recorded in
+    the trace metadata; the row-hit-first check only applies to FR-FCFS.
+    """
+    if cspec is None:
+        cspec = trace.compiled_spec()
+    elif check_fingerprint and trace.fingerprint:
+        got = spec_fingerprint_hex(cspec)
+        if got != trace.fingerprint:
+            raise ValueError(
+                f"spec fingerprint {got} does not match trace fingerprint "
+                f"{trace.fingerprint}; audit would be meaningless "
+                "(pass check_fingerprint=False to override)")
+
+    violations: list = []
+    checks = {}
+    checks["timing"], n_pairs = _audit_timing(cspec, trace, violations,
+                                              max_violations)
+
+    if scheduler is None:
+        scheduler = trace.meta.get("controller", {}).get("scheduler")
+    has_requests = bool(np.any(trace.arrive >= 0))
+    if has_requests and scheduler == "FRFCFS":
+        checks["row_hit_first"] = _audit_row_hit_first(
+            cspec, trace, violations, max_violations)
+    if has_requests and scheduler in ("FRFCFS", "FCFS"):
+        checks["age_order"] = _audit_age_order(cspec, trace, violations,
+                                               max_violations)
+
+    total = sum(checks.values())
+    return AuditReport(n_commands=len(trace), n_pairs_checked=n_pairs,
+                       checks=checks, violations=violations,
+                       truncated=total > len(violations))

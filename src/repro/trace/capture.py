@@ -1,0 +1,184 @@
+"""Compact columnar command-trace capture (paper §4.1 + §4.2).
+
+The engine's ``trace=True`` path emits *dense* ``[T, 2]`` per-cycle arrays
+(``repro.core.engine.TraceArrays``) that are mostly ``-1`` idle sentinels —
+O(n_cycles) memory regardless of how many commands actually issued.
+:func:`capture` compacts them into a :class:`CommandTrace`: one int32 column
+per field, one entry per *issued* command, in exact issue order (cycle-major,
+column bus before row bus — the order the engine mutates device state in).
+
+The capture embeds everything needed to re-audit the trace later without the
+original ``Simulator``: the spec provenance (standard / org / timing preset
+names), the fully *resolved* timing table, and a fingerprint of the compiled
+spec as the engine traced it (`repro.core.engine.spec_fingerprint`), so a
+trace artifact can never be silently replayed against a different device
+model.
+
+Batched sweeps vmap the engine, so their trace arrays are ``[B, T, 2]``;
+``capture(..., point=j)`` extracts one sweep point without materializing
+per-point dense copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core import engine as E
+from repro.core.compile import CompiledSpec, compile_spec
+
+#: Columnar int32 fields of a CommandTrace, in save/load order.
+FIELDS = ("clk", "cmd", "bank", "row", "bus", "arrive", "hit_ready")
+
+
+def spec_fingerprint_hex(cspec: CompiledSpec) -> str:
+    """Stable hex digest of the compiled-spec identity the engine keys
+    compilations on (standard/org/timing names + resolved timing table +
+    geometry)."""
+    return hashlib.sha256(
+        repr(E.spec_fingerprint(cspec)).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class CommandTrace:
+    """Columnar DRAM command trace: one row per issued command.
+
+    All columns are ``(N,)`` numpy arrays in issue order.  ``bank`` is the
+    flat bank id (refresh-unit-scoped commands carry their unit's
+    representative bank).  ``arrive`` is the served request's arrival clock
+    and -1 for refresh-engine commands; ``hit_ready`` records whether a
+    post-predicate row-hit candidate existed at selection time (the
+    scheduler-audit observable).  ``meta`` carries spec provenance, the
+    resolved timing table, the spec fingerprint, and any run configuration
+    the caller supplied (controller / frontend / load point).
+    """
+    clk: np.ndarray
+    cmd: np.ndarray
+    bank: np.ndarray
+    row: np.ndarray
+    bus: np.ndarray
+    arrive: np.ndarray
+    hit_ready: np.ndarray       # int32 0/1 (npz-friendly)
+    n_cycles: int
+    cmd_names: list
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return int(self.clk.shape[0])
+
+    @property
+    def fingerprint(self) -> str:
+        return self.meta.get("fingerprint", "")
+
+    def cmd_count(self, name: str) -> int:
+        if name not in self.cmd_names:
+            return 0
+        return int(np.count_nonzero(self.cmd == self.cmd_names.index(name)))
+
+    def compiled_spec(self) -> CompiledSpec:
+        """Recompile the spec this trace was captured from.  The stored
+        resolved timing table is replayed as overrides, so post-hoc preset
+        edits round-trip exactly; the result is fingerprint-checked."""
+        m = self.meta
+        cspec = compile_spec(m["standard"], m["org_preset"],
+                             m["timing_preset"],
+                             {k: int(v) for k, v in m["timings"].items()})
+        # replay post-compile geometry edits (benchmarks mutate rows/
+        # columns in place; the fingerprint covers them)
+        cspec.rows = int(m.get("rows", cspec.rows))
+        cspec.columns = int(m.get("columns", cspec.columns))
+        got = spec_fingerprint_hex(cspec)
+        if m.get("fingerprint") and got != m["fingerprint"]:
+            raise ValueError(
+                f"recompiled spec fingerprint {got} != captured "
+                f"{m['fingerprint']} — standard definition changed since "
+                "capture")
+        return cspec
+
+
+def config_doc(cfg) -> dict:
+    """JSON-representable scalar fields of a config dataclass (callables —
+    e.g. ``extra_predicates`` — can't round-trip and are dropped).  The one
+    serialization rule for run configs, shared with `repro.dse.results`."""
+    if cfg is None:
+        return {}
+    out = {}
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if isinstance(v, (int, float, str, bool)) or v is None:
+            out[f.name] = v
+    return out
+
+
+def base_meta(cspec: CompiledSpec, controller=None, frontend=None,
+              **extra) -> dict:
+    """Metadata block embedded in every capture: provenance + resolved
+    timings + fingerprint + optional run configuration."""
+    meta = {
+        "standard": cspec.standard or cspec.name,
+        "org_preset": cspec.org_preset,
+        "timing_preset": cspec.timing_preset,
+        "timings": {k: int(v) for k, v in cspec.timings.items()},
+        "fingerprint": spec_fingerprint_hex(cspec),
+        "rows": int(cspec.rows),
+        "columns": int(cspec.columns),
+        "tCK_ps": int(cspec.tCK_ps),
+        "n_banks": int(cspec.n_banks),
+        "dual_command_bus": bool(cspec.dual_command_bus),
+    }
+    if controller is not None:
+        meta["controller"] = config_doc(controller)
+    if frontend is not None:
+        meta["frontend"] = config_doc(frontend)
+    meta.update({k: v for k, v in extra.items() if v is not None})
+    return meta
+
+
+def _normalize(trace):
+    """Accept a ``TraceArrays``, or any 3/5-sequence of dense arrays."""
+    parts = tuple(trace)
+    if len(parts) < 3:
+        raise ValueError("trace needs at least (cmd, bank, row) arrays")
+    cmd, bank, row = (np.asarray(p) for p in parts[:3])
+    arrive = np.asarray(parts[3]) if len(parts) > 3 \
+        else np.full_like(cmd, -1)
+    hit_ready = np.asarray(parts[4]) if len(parts) > 4 \
+        else np.zeros(cmd.shape, bool)
+    return cmd, bank, row, arrive, hit_ready
+
+
+def capture(cspec: CompiledSpec, trace, *, point: int | None = None,
+            controller=None, frontend=None, **extra_meta) -> CommandTrace:
+    """Compact dense engine trace arrays into a :class:`CommandTrace`.
+
+    ``trace`` is the second element of ``Simulator.run(..., trace=True)``
+    (dense ``[T, 2]`` arrays), or the vmapped ``[B, T, 2]`` stack a batched
+    sweep produces — pass ``point=j`` to extract sweep point ``j``.
+    Compaction is one vectorized ``nonzero`` over the issued mask; the
+    resulting row order (cycle-major, bus 0 before bus 1) is exactly the
+    order the engine applied the commands to device state in, which the
+    auditor relies on.
+    """
+    cmd, bank, row, arrive, hit_ready = _normalize(trace)
+    if cmd.ndim == 3:
+        if point is None:
+            raise ValueError(
+                "batched [B, T, 2] trace: pass point=<batch index>")
+        sel = lambda a: a[point] if a.ndim == 3 else a
+        cmd, bank, row = sel(cmd), sel(bank), sel(row)
+        arrive, hit_ready = sel(arrive), sel(hit_ready)
+    if cmd.ndim != 2:
+        raise ValueError(f"expected [T, 2] trace arrays, got {cmd.shape}")
+    n_cycles = int(cmd.shape[0])
+
+    t_idx, bus_idx = np.nonzero(cmd >= 0)        # row-major == issue order
+    i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    return CommandTrace(
+        clk=i32(t_idx), cmd=i32(cmd[t_idx, bus_idx]),
+        bank=i32(bank[t_idx, bus_idx]), row=i32(row[t_idx, bus_idx]),
+        bus=i32(bus_idx), arrive=i32(arrive[t_idx, bus_idx]),
+        hit_ready=i32(hit_ready[t_idx, bus_idx].astype(np.int32)),
+        n_cycles=n_cycles, cmd_names=list(cspec.cmd_names),
+        meta=base_meta(cspec, controller=controller, frontend=frontend,
+                       **extra_meta))

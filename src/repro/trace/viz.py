@@ -1,0 +1,296 @@
+"""Command-trace visualizer (paper §4.1, Fig. 2) on top of ``CommandTrace``.
+
+Standalone HTML, two linked views as in the paper — (a) bus utilization,
+(b) per-bank command trace — plus an audit-violation overlay lane fed by
+:mod:`repro.trace.audit`.
+
+Scale: the renderer is level-of-detail (LOD) binned.  Python precomputes a
+fixed number of time bins (per-bin C/A and data-bus occupancy, and per
+(bin, lane) dominant-command densities); raw per-command records are only
+embedded when the trace is small enough (``raw_limit``).  Zoomed out — or
+for multi-million-command traces with no raw records at all — the command
+view draws the binned densities; zoomed in with raw records available it
+draws exact per-command rectangles.  Payload size and draw cost are
+therefore bounded by the bin count, not the trace length.
+
+Bus-utilization denominators are *derived*, not hardcoded: a bin of
+``bw`` cycles offers ``bw x n_command_buses`` C/A slots (two for dual-C/A
+standards such as HBM3/GDDR7) and ``bw`` data-bus cycles, of which each
+final RD/WR occupies ``nBL``.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+from repro.core import spec as S
+from repro.trace.capture import CommandTrace
+
+PALETTE = ["#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f",
+           "#edc948", "#b07aa1", "#ff9da7", "#9c755f", "#bab0ac",
+           "#86bcb6", "#d37295"]
+
+#: Cap on violations embedded in the overlay payload.
+MAX_OVERLAY_VIOLATIONS = 500
+
+
+def _lanes(trace: CommandTrace, cspec) -> np.ndarray:
+    """Display lane per command: its bank, or the refresh-engine lane
+    (index ``n_banks``) for refresh-engine commands.  Traces without
+    request info (legacy 3-array captures have ``arrive == -1``
+    everywhere) fall back to command kind, and negative banks are always
+    routed to the refresh lane."""
+    if bool(np.any(trace.arrive >= 0)):
+        refresh = trace.arrive < 0
+    else:
+        refresh = np.asarray(cspec.cmd_kind)[trace.cmd] == S.KIND_REF
+    return np.where(refresh | (trace.bank < 0), cspec.n_banks, trace.bank)
+
+
+def _bin_payload(trace: CommandTrace, cspec, n_bins: int) -> dict:
+    """Precompute the LOD summaries: per-bin bus occupancy and per
+    (bin, lane) dominant command + count."""
+    T = max(1, trace.n_cycles)
+    bw = max(1, math.ceil(T / n_bins))
+    nb = math.ceil(T / bw)
+    n_lanes = int(cspec.n_banks) + 1          # +1: refresh-engine lane
+    b = trace.clk // bw
+
+    ca = np.bincount(b, minlength=nb)
+    fx = np.asarray(cspec.cmd_fx)[trace.cmd]
+    final = (fx & (S.FX_FINAL_RD | S.FX_FINAL_WR)) != 0
+    nbl = int(cspec.timings["nBL"])
+    data = np.bincount(b[final], minlength=nb) * nbl
+
+    lane = _lanes(trace, cspec)
+    flat = b.astype(np.int64) * n_lanes + lane
+    counts = np.zeros((cspec.n_cmds, nb * n_lanes), np.int32)
+    for c in range(cspec.n_cmds):
+        m = trace.cmd == c
+        if m.any():
+            counts[c] = np.bincount(flat[m], minlength=nb * n_lanes)
+    dom = counts.argmax(axis=0).astype(np.int32)
+    cnt = counts.sum(axis=0).astype(np.int32)
+    dom[cnt == 0] = -1
+    return {"bw": bw, "nb": nb, "n_lanes": n_lanes,
+            "ca": ca.tolist(), "data": data.tolist(),
+            "dom": dom.tolist(), "cnt": cnt.tolist()}
+
+
+def render_html(trace: CommandTrace, cspec=None, report=None,
+                title: str = "", n_bins: int = 2048,
+                raw_limit: int = 100_000) -> str:
+    """Render the two-view HTML.  ``report`` (an
+    :class:`repro.trace.audit.AuditReport`) adds the violation overlay."""
+    if cspec is None:
+        cspec = trace.compiled_spec()
+    colors = {name: PALETTE[i % len(PALETTE)]
+              for i, name in enumerate(trace.cmd_names)}
+    n_cmd_buses = 2 if cspec.dual_command_bus else 1
+
+    recs = None
+    if len(trace) <= raw_limit:
+        lane = _lanes(trace, cspec)
+        recs = {"clk": trace.clk.tolist(), "cmd": trace.cmd.tolist(),
+                "lane": lane.tolist(), "row": trace.row.tolist(),
+                "bus": trace.bus.tolist()}
+
+    viols = []
+    if report is not None:
+        for v in report.violations[:MAX_OVERLAY_VIOLATIONS]:
+            viols.append({"clk": v.clk, "cmd": v.cmd,
+                          "label": f"{v.check}: {v.constraint}"})
+    payload = {
+        "title": title or f"{cspec.name} command trace",
+        "standard": cspec.name,
+        "n_banks": int(cspec.n_banks),
+        "n_cycles": int(trace.n_cycles),
+        "n_commands": len(trace),
+        "nBL": int(cspec.timings["nBL"]),
+        "n_cmd_buses": n_cmd_buses,
+        "cmd_names": list(trace.cmd_names),
+        "colors": colors,
+        "kind": [int(k) for k in cspec.cmd_kind],
+        "bins": _bin_payload(trace, cspec, n_bins),
+        "recs": recs,
+        "viols": viols,
+        "n_violations": 0 if report is None else report.n_violations,
+        "audited": report is not None,
+    }
+    return _TEMPLATE.replace("__PAYLOAD__", json.dumps(payload))
+
+
+def write_html(path: str, trace: CommandTrace, cspec=None, report=None,
+               title: str = "", n_bins: int = 2048,
+               raw_limit: int = 100_000) -> str:
+    html = render_html(trace, cspec, report, title, n_bins, raw_limit)
+    with open(path, "w") as f:
+        f.write(html)
+    return path
+
+
+_TEMPLATE = """<!doctype html>
+<html><head><meta charset="utf-8"><title>Ramulator-JAX trace</title>
+<style>
+ body{font-family:system-ui,sans-serif;margin:12px;background:#fafafa}
+ h2{margin:4px 0} .views{display:flex;flex-direction:column;gap:12px}
+ canvas{background:#fff;border:1px solid #ccc;width:100%}
+ #tip{position:fixed;background:#222;color:#fff;padding:4px 8px;
+      border-radius:4px;font-size:12px;pointer-events:none;display:none;
+      max-width:480px}
+ .legend span{display:inline-block;margin-right:10px;font-size:12px}
+ .legend i{display:inline-block;width:10px;height:10px;margin-right:3px}
+ .bar{display:flex;gap:16px;align-items:center;font-size:13px}
+ .viol{color:#c0392b;font-weight:600}
+</style></head><body>
+<h2 id="title"></h2>
+<div class="bar">
+  <label>zoom <input id="zoom" type="range" min="0" max="100" value="35"></label>
+  <label>offset <input id="off" type="range" min="0" max="1000" value="0"></label>
+  <span id="stats"></span>
+</div>
+<div class="views">
+ <div><b>(a) bus utilization</b><canvas id="bus" height="140"></canvas></div>
+ <div><b>(b) command trace</b><canvas id="cmds" height="460"></canvas></div>
+</div>
+<div class="legend" id="legend"></div>
+<div id="tip"></div>
+<script>
+const D = __PAYLOAD__;
+const ML = 60;                       // left margin for lane labels
+document.getElementById('title').textContent = D.title;
+const maxClk = Math.max(1, D.n_cycles);
+const legend = document.getElementById('legend');
+for (const [name,col] of Object.entries(D.colors)) {
+  const s=document.createElement('span');
+  s.innerHTML='<i style="background:'+col+'"></i>'+name; legend.appendChild(s);
+}
+const busC = document.getElementById('bus'), cmdC = document.getElementById('cmds');
+const tip = document.getElementById('tip');
+// zoom slider is log-scale: 0 -> whole trace fits, 100 -> 10 px per clk
+let pxPerClk = 1, off = 0;
+function zoomVal(v){
+  const fit = (cmdC.width - ML - 10) / maxClk;
+  return fit * Math.pow(10/fit, v/100);
+}
+document.getElementById('zoom').oninput = e=>{
+  pxPerClk = zoomVal(+e.target.value); draw();};
+document.getElementById('off').oninput = e=>{
+  off = +e.target.value/1000*maxClk; draw();};
+function layout(){
+  busC.width = busC.clientWidth; cmdC.width = cmdC.clientWidth;
+  pxPerClk = zoomVal(+document.getElementById('zoom').value); draw();
+}
+function laneGeom(){
+  const lanes = D.n_banks + 2;       // banks + refresh lane + violation lane
+  const laneH = Math.max(5, Math.floor((cmdC.height-24)/lanes));
+  return {lanes, laneH};
+}
+function drawCmds(){
+  const W = cmdC.width, {lanes, laneH} = laneGeom();
+  const g = cmdC.getContext('2d'); g.clearRect(0,0,W,cmdC.height);
+  g.font='10px sans-serif'; g.fillStyle='#888';
+  for (let b=0;b<D.n_banks;b++)
+    g.fillText('bank '+b, 2, 8+b*laneH+laneH*0.7);
+  g.fillText('refresh', 2, 8+D.n_banks*laneH+laneH*0.7);
+  g.fillStyle='#c0392b';
+  g.fillText('audit', 2, 8+(D.n_banks+1)*laneH+laneH*0.7);
+  const x0 = clk => (clk-off)*pxPerClk + ML;
+  const rawMode = D.recs && pxPerClk >= 0.5;
+  if (rawMode){
+    const recs = D.recs, n = recs.clk.length;
+    // visible clk range -> index range (clk array is sorted)
+    const lo = off - 2/pxPerClk, hi = off + (W-ML)/pxPerClk + 2;
+    let i0 = lowerBound(recs.clk, lo), i1 = lowerBound(recs.clk, hi);
+    for (let i=i0;i<i1;i++){
+      const x = x0(recs.clk[i]);
+      g.fillStyle = D.colors[D.cmd_names[recs.cmd[i]]]||'#000';
+      g.fillRect(x, 8+recs.lane[i]*laneH,
+                 Math.max(2,pxPerClk*0.9), laneH-2);
+    }
+  } else {
+    const B = D.bins, bw = B.bw;
+    for (let i=0;i<B.nb;i++){
+      const x = x0(i*bw), w = Math.max(1, bw*pxPerClk);
+      if (x+w < ML-10 || x > W) continue;
+      for (let l=0;l<B.n_lanes;l++){
+        const c = B.cnt[i*B.n_lanes+l];
+        if (!c) continue;
+        const name = D.cmd_names[B.dom[i*B.n_lanes+l]];
+        g.fillStyle = D.colors[name]||'#000';
+        g.globalAlpha = Math.min(1, 0.25 + c/bw);
+        g.fillRect(x, 8+l*laneH, w, laneH-2);
+      }
+    }
+    g.globalAlpha = 1;
+  }
+  // audit-violation overlay lane
+  const vy = 8+(D.n_banks+1)*laneH;
+  for (const v of D.viols){
+    const x = x0(v.clk);
+    if (x < ML-10 || x > W) continue;
+    g.fillStyle='#c0392b';
+    g.fillRect(x, vy, Math.max(2,pxPerClk*0.9), laneH-2);
+  }
+  const mode = rawMode ? 'exact' : ('binned x'+D.bins.bw);
+  const v = D.audited
+    ? (D.n_violations ? ' — '+D.n_violations+' audit violations' : ' — audit clean')
+    : '';
+  const st = document.getElementById('stats');
+  st.innerHTML = D.n_commands+' commands, '+maxClk+' cycles ['+mode+']'
+    + (D.n_violations ? '<span class="viol">'+v+'</span>' : v);
+}
+function drawBus(){
+  const bg = busC.getContext('2d');
+  bg.clearRect(0,0,busC.width,busC.height);
+  const B = D.bins, bw = B.bw;
+  const caCap = bw * D.n_cmd_buses;       // C/A slots per bin
+  const dataCap = bw;                     // data-bus cycles per bin
+  const w = Math.max(1, (busC.width-ML-10)/B.nb);
+  bg.fillStyle='#888'; bg.font='10px sans-serif';
+  bg.fillText('C/A bus', 2, 30); bg.fillText('data bus', 2, 100);
+  for (let i=0;i<B.nb;i++){
+    const u = Math.min(1, B.ca[i]/caCap);
+    const d = Math.min(1, B.data[i]/dataCap);
+    bg.fillStyle='#4e79a7';
+    bg.fillRect(ML+i*w, 50-40*u, Math.max(1,w-0.5), 40*u);
+    bg.fillStyle='#e15759';
+    bg.fillRect(ML+i*w, 120-40*d, Math.max(1,w-0.5), 40*d);
+  }
+}
+function draw(){ drawCmds(); drawBus(); }
+function lowerBound(a, x){
+  let lo=0, hi=a.length;
+  while (lo<hi){ const m=(lo+hi)>>1; if (a[m]<x) lo=m+1; else hi=m; }
+  return lo;
+}
+cmdC.onmousemove = e=>{
+  const rect = cmdC.getBoundingClientRect();
+  const clk = Math.round((e.clientX-rect.left-ML)/pxPerClk + off);
+  const lines = [];
+  const vnear = D.viols.filter(v=>Math.abs(v.clk-clk)<=Math.max(1,1/pxPerClk));
+  for (const v of vnear) lines.push('VIOLATION '+v.label+' @ clk '+v.clk);
+  if (D.recs){
+    const recs = D.recs;
+    const i0 = lowerBound(recs.clk, clk-1), i1 = lowerBound(recs.clk, clk+2);
+    for (let i=i0;i<i1 && lines.length<8;i++)
+      lines.push(D.cmd_names[recs.cmd[i]]+'@clk'+recs.clk[i]
+                 +(recs.lane[i]<D.n_banks?' bank'+recs.lane[i]:' refresh')
+                 +(recs.row[i]>=0?' row'+recs.row[i]:''));
+  } else {
+    const B = D.bins, b = Math.floor(clk/B.bw);
+    if (b>=0 && b<B.nb)
+      lines.push('bin '+b+': '+B.ca[b]+' cmds, data '+B.data[b]+'/'+B.bw);
+  }
+  if (lines.length && clk>=0 && clk<=maxClk){
+    tip.style.display='block'; tip.style.left=(e.clientX+12)+'px';
+    tip.style.top=(e.clientY+12)+'px';
+    tip.textContent = lines.join(' | ');
+  } else tip.style.display='none';
+};
+cmdC.onmouseleave = ()=>{tip.style.display='none';};
+window.onresize = layout; layout();
+</script></body></html>
+"""

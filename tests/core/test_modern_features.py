@@ -50,7 +50,7 @@ class TestSplitActivation:
         """No ACT1 may linger past its tAAD deadline before ACT2."""
         sim = Simulator("LPDDR5", "LPDDR5_8Gb_x16", "LPDDR5_6400")
         stats, trace = sim.run(3000, interval=4.0, read_ratio=0.7, trace=True)
-        cmds, banks, rows = (np.asarray(t) for t in trace)
+        cmds, banks = np.asarray(trace.cmd), np.asarray(trace.bank)
         names = sim.cspec.cmd_names
         i_act1, i_act2 = names.index("ACT1"), names.index("ACT2")
         pending = {}
@@ -127,7 +127,7 @@ class TestDualCommandBus:
     def test_parallel_row_col_issue(self, std, org, tim):
         sim = Simulator(std, org, tim)
         stats, trace = sim.run(4000, interval=1.0, read_ratio=1.0, trace=True)
-        cmds, _, _ = (np.asarray(t) for t in trace)
+        cmds = np.asarray(trace.cmd)
         kind = sim.cspec.cmd_kind
         both = 0
         for t in range(cmds.shape[0]):

@@ -156,6 +156,46 @@ def test_knee_index_edges():
     assert knee_index([float("nan")] * 3) == 2
 
 
+def test_capture_traces_no_extra_retrace(tmp_path):
+    """`capture_traces` swaps each group onto its trace-emitting program —
+    it must not *add* traces: TRACE_COUNT advances exactly as in a
+    no-capture sweep of the same spec, and per-point artifacts appear."""
+    import repro.trace as T
+    kw = dict(systems=("DDR4", "HBM3"), intervals=(8.0, 2.0),
+              read_ratios=(1.0,), n_cycles=800)
+    t0 = E.TRACE_COUNT
+    plain = execute(SweepSpec(**kw), cache=E.RunCache())
+    d_plain = E.TRACE_COUNT - t0
+    assert plain.traces is None
+
+    tdir = str(tmp_path / "traces")
+    t0 = E.TRACE_COUNT
+    cap = execute(SweepSpec(**kw, capture_traces=tdir), cache=E.RunCache())
+    d_cap = E.TRACE_COUNT - t0
+    assert d_cap == d_plain                  # no extra re-tracing
+    assert cap.meta["n_groups"] == plain.meta["n_groups"]
+    # stats identical between the trace and no-trace programs
+    np.testing.assert_array_equal(cap.reads_done, plain.reads_done)
+
+    assert len(cap.traces) == len(cap.points)
+    for i, pt in enumerate(cap.points):
+        tr = cap.traces[i]
+        assert len(tr) == int(cap.cmd_counts[i].sum())
+        assert tr.meta["interval"] == pt.interval
+        assert tr.meta["standard"] == pt.system.standard
+        # persisted artifact round-trips and audits clean stand-alone
+        back = T.load(cap.meta["trace_artifacts"][i])
+        np.testing.assert_array_equal(back.clk, tr.clk)
+        assert T.audit(None, back).ok
+    # second identical capture sweep is a pure cache hit in a shared cache
+    cache = E.RunCache()
+    execute(SweepSpec(**kw, capture_traces=True), cache=cache)
+    t0 = E.TRACE_COUNT
+    r2 = execute(SweepSpec(**kw, capture_traces=True), cache=cache)
+    assert E.TRACE_COUNT - t0 == 0
+    assert r2.meta["compile_cache_hits"] == 2
+
+
 def test_save_load_roundtrip(tmp_path):
     from repro.core import FrontendConfig
     spec = SweepSpec(systems=("DDR4",), intervals=(8.0, 1.0),

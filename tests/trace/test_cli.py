@@ -1,0 +1,61 @@
+"""`python -m repro.trace` CLI: simulate -> artifact -> audit -> HTML, the
+--load path, and --fail-on-violations plumbing (the CI smoke contract)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.trace.__main__ import main
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    out = tmp_path / "trace.npz"
+    html = tmp_path / "trace.html"
+    jsonl = tmp_path / "trace.jsonl"
+    rc = main(["--standard", "DDR4", "--cycles", "4000",
+               "--out", str(out), "--html", str(html),
+               "--jsonl", str(jsonl), "--fail-on-violations"])
+    assert rc == 0
+    assert out.exists() and html.exists() and jsonl.exists()
+    text = capsys.readouterr().out
+    assert "clean" in text
+    page = html.read_text()
+    assert "bus utilization" in page and "command trace" in page
+
+    # --load path: re-audit + re-render the saved artifact
+    html2 = tmp_path / "again.html"
+    rc = main(["--load", str(out), "--html", str(html2),
+               "--fail-on-violations"])
+    assert rc == 0 and html2.exists()
+    assert "loaded" in capsys.readouterr().out
+
+
+def test_cli_fails_on_corrupted_artifact(tmp_path, capsys):
+    out = tmp_path / "trace.npz"
+    assert main(["--standard", "DDR4", "--cycles", "3000",
+                 "--out", str(out)]) == 0
+    import repro.trace as T
+    tr = T.load(str(out))
+    # deterministic corruption: pull the first RD after the first ACT on
+    # its bank to one cycle inside the nRCD window
+    names = tr.cmd_names
+    a = int(np.nonzero(tr.cmd == names.index("ACT"))[0][0])
+    r = int(np.nonzero((tr.cmd == names.index("RD"))
+                       & (tr.bank == tr.bank[a])
+                       & (tr.clk > tr.clk[a]))[0][0])
+    clk = tr.clk.copy()
+    clk[r] = tr.clk[a] + tr.meta["timings"]["nRCD"] - 1
+    order = np.argsort(clk, kind="stable")
+    bad = dataclasses.replace(
+        tr, clk=clk[order],
+        **{f: getattr(tr, f)[order]
+           for f in ("cmd", "bank", "row", "bus", "arrive", "hit_ready")})
+    T.save(bad, str(out))
+    rc = main(["--load", str(out), "--fail-on-violations"])
+    text = capsys.readouterr().out
+    assert rc == 1 and "ACT->RD" in text
+
+
+def test_cli_unknown_standard_errors():
+    with pytest.raises(SystemExit):
+        main(["--standard", "SDRAM66", "--cycles", "100"])
