@@ -11,9 +11,10 @@ from repro.core import standards  # noqa: F401  (populates the registry)
 from repro.core.compile import CompiledSpec, compile_spec
 from repro.core.controller import ControllerConfig
 from repro.core.dut import DeviceUnderTest
-from repro.core.engine import (Simulator, avg_probe_latency_ns, peak_gbps,
+from repro.core.engine import (Simulator, avg_probe_latency_ns,
+                               channel_breakdown, peak_gbps,
                                throughput_gbps)
-from repro.core.frontend import FrontendConfig
+from repro.core.frontend import FrontendConfig, ReplayStream
 from repro.core.spec import (Command, DRAMSpec, Organization,
                              TimingConstraint, all_standards, get_standard)
 
@@ -22,4 +23,5 @@ __all__ = [
     "Simulator", "FrontendConfig", "Command", "DRAMSpec", "Organization",
     "TimingConstraint", "all_standards", "get_standard", "standards",
     "throughput_gbps", "peak_gbps", "avg_probe_latency_ns",
+    "channel_breakdown", "ReplayStream",
 ]

@@ -1,8 +1,28 @@
-"""Address mappers: physical address -> DRAM address vector.
+"""Address mappers: linear physical address <-> DRAM address vector.
 
-Used by the trace-driven frontend and examples.  Mapper names follow
-Ramulator convention: ordering of Row / Bank(+group) / Rank / Column /
-Channel fields from MSB to LSB.
+Channel-aware and JAX-traceable.  ``AddressMapper`` lowers a mapper *order*
+string (Ramulator convention: Row / Bank(+group) / Rank / Column / Channel
+fields listed MSB -> LSB) into a mixed-radix ``layout`` — a list of
+``(field_name, count)`` pairs, least-significant first — over the compiled
+spec's geometry.  The channel field width comes from ``cspec.n_channels``
+(it is no longer pinned to one channel), so decoding a linear address
+yields the target channel alongside the per-channel sub-level indices.
+
+``map``/``encode`` use only arithmetic (``%``, ``//``, ``*``, shifts), so
+they work identically on numpy int64 arrays (host-side tooling, replay
+preparation) and on traced ``jnp`` arrays — the engine's streaming
+frontend decodes its linear request counter through this very layout
+inside the ``lax.scan`` body.  Mixed radix degrades to exact bit slicing
+when every count is a power of two and stays correct when it is not
+(e.g. benchmarks that shrink ``rows`` in place).
+
+Request sources that consume a layout (see ``repro.core.frontend``):
+
+  * streaming frontend — the sequential pattern decodes its linear
+    request counter through the layout each cycle;
+  * trace-driven frontend — replayed linear addresses are decoded
+    host-side into per-channel request columns (``ReplayStream``);
+  * probe frontend — random fields are drawn per layout entry.
 """
 from __future__ import annotations
 
@@ -16,7 +36,7 @@ def _field_bits(n: int) -> int:
 
 
 def split_fields(addr: np.ndarray, widths: list) -> list:
-    """Split a linear address into fields, LSB-first widths list."""
+    """Split a linear address into bit fields, LSB-first widths list."""
     out = []
     a = np.asarray(addr, np.int64)
     for w in widths:
@@ -25,50 +45,92 @@ def split_fields(addr: np.ndarray, widths: list) -> list:
     return out
 
 
+def make_layout(cspec: CompiledSpec, order: str) -> list:
+    """Lower a mapper order string to ``[(field, count), ...]`` LSB-first.
+
+    Field names are ``"channel"``, the spec's sub-channel levels (rank /
+    bankgroup / bank / pseudochannel...), ``"row"`` and ``"col"``.
+    """
+    sub_levels = cspec.levels[1:]
+    bank_like = [lv for lv in sub_levels if lv in ("bankgroup", "bank")]
+    rank_like = [lv for lv in sub_levels if lv not in ("bankgroup", "bank")]
+    counts = {lv: int(cspec.level_counts[i + 1])
+              for i, lv in enumerate(sub_levels)}
+    field_defs = {
+        "Ch": [("channel", int(cspec.n_channels))],
+        "Ra": [(lv, counts[lv]) for lv in rank_like],
+        "Ba": [(lv, counts[lv]) for lv in bank_like],
+        "Ro": [("row", int(cspec.rows))],
+        "Co": [("col", int(cspec.columns))],
+    }
+    toks = [order[i:i + 2] for i in range(0, len(order), 2)]
+    if sorted(toks) != sorted(field_defs):
+        raise ValueError(f"bad mapper order {order!r}: need each of "
+                         f"{sorted(field_defs)} exactly once")
+    lsb_first = []
+    for tok in reversed(toks):          # order string is MSB -> LSB
+        lsb_first.extend(field_defs[tok])
+    return lsb_first
+
+
+def decode_fields(layout, value):
+    """Mixed-radix decode of a line index through ``layout`` (LSB-first).
+
+    Pure ``%``/``//`` arithmetic, so it works identically on numpy
+    arrays and on traced jnp values — the single decode implementation
+    shared by :meth:`AddressMapper.map` (host side) and the engine's
+    streaming frontend (inside the scan body).
+    """
+    out = {}
+    q = value
+    for name, count in layout:
+        out[name] = q % count
+        q = q // count
+    return out
+
+
 class AddressMapper:
-    """order: field names LSB->MSB, e.g. RoBaRaCoCh reads MSB->LSB as
-    Row | Bank | Rank | Column | Channel."""
+    """Decode/encode linear addresses through a mapper layout.
+
+    ``order`` reads MSB->LSB, e.g. ``"RoBaRaCoCh"`` is
+    Row | Bank | Rank | Column | Channel (channel bits least significant:
+    consecutive cache lines interleave across channels).
+    """
 
     def __init__(self, cspec: CompiledSpec, order: str = "RoBaRaCoCh",
                  tx_bytes: int | None = None):
         self.cspec = cspec
         self.order = order
         self.tx_bits = _field_bits(tx_bytes or cspec.access_bytes)
-        sub_levels = cspec.levels[1:]
-        bank_like = [lv for lv in sub_levels if lv in ("bankgroup", "bank")]
-        rank_like = [lv for lv in sub_levels if lv not in ("bankgroup", "bank")]
-        counts = {lv: int(cspec.level_counts[i + 1])
-                  for i, lv in enumerate(sub_levels)}
-        field_defs = {
-            "Ch": [("channel", 1)],
-            "Ra": [(lv, counts[lv]) for lv in rank_like],
-            "Ba": [(lv, counts[lv]) for lv in bank_like],
-            "Ro": [("row", cspec.rows)],
-            "Co": [("col", cspec.columns)],
-        }
-        # parse the order string into 2-char tokens, MSB -> LSB
-        toks = [order[i:i + 2] for i in range(0, len(order), 2)]
-        lsb_first = []
-        for tok in reversed(toks):
-            lsb_first.extend(field_defs[tok])
-        self.layout = lsb_first   # [(name, count), ...] LSB-first
+        self.layout = make_layout(cspec, order)   # [(name, count)] LSB-first
 
     def map(self, addr):
-        """addr (bytes) -> dict of address fields (vectorized)."""
-        a = np.asarray(addr, np.int64) >> self.tx_bits
-        out = {}
-        for name, count in self.layout:
-            bits = _field_bits(count)
-            out[name] = (a & ((1 << bits) - 1)).astype(np.int32)
-            a = a >> bits
-        return out
+        """addr (bytes) -> dict of address fields (vectorized, traceable)."""
+        return decode_fields(self.layout, addr >> self.tx_bits)
 
-    def to_sub_row_col(self, addr):
-        """addr -> (sub[levels-1], row, col) arrays for the engine/DUT."""
-        f = self.map(addr)
+    def encode(self, fields: dict):
+        """Inverse of :meth:`map`: field dict -> linear byte address."""
+        a = None
+        for name, count in reversed(self.layout):   # MSB first
+            f = fields[name]
+            a = f if a is None else a * count + f
+        return a << self.tx_bits
+
+    def to_chan_sub_row_col(self, addr):
+        """addr -> (channel, sub[levels-1], row, col) numpy arrays, the
+        request-column form consumed by the engine/DUT and ``ReplayStream``."""
+        f = self.map(np.asarray(addr, np.int64))
         sub = np.stack([f.get(lv, np.zeros_like(f["row"]))
                         for lv in self.cspec.levels[1:]], axis=-1)
-        return sub, f["row"], f["col"]
+        return f["channel"], sub, f["row"], f["col"]
+
+    def to_sub_row_col(self, addr):
+        """Single-channel legacy form: addr -> (sub, row, col)."""
+        _, sub, row, col = self.to_chan_sub_row_col(addr)
+        return sub, row, col
 
 
+#: Supported mapper orders (MSB -> LSB).  ``RoBaRaCoCh`` interleaves
+#: channels then columns fastest (row-buffer friendly, channel-parallel);
+#: ``RoCoBaRaCh`` rotates banks fastest (bank-parallel streaming).
 MAPPERS = ["RoBaRaCoCh", "RoRaBaCoCh", "RoCoBaRaCh"]

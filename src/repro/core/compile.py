@@ -39,10 +39,18 @@ def resolve_latency(expr, timings: dict) -> int:
 
 @dataclasses.dataclass
 class CompiledSpec:
-    """Dense-table form of one (standard, org preset, timing preset)."""
+    """Dense-table form of one (standard, org preset, timing preset).
+
+    The node tables describe ONE channel; a multi-channel memory system
+    replicates the whole controller+device state along a leading channel
+    axis (``n_channels``) and runs it under ``jax.vmap`` inside the
+    engine's cycle scan.  ``level_counts[0]`` therefore stays 1 — the
+    per-channel hierarchy — while ``n_channels`` carries the system-level
+    channel fan-out consumed by the address mapper and the engine.
+    """
     name: str
     levels: list                    # level names, levels[0] == "channel"
-    level_counts: np.ndarray        # per-level fan-out (channel count == 1)
+    level_counts: np.ndarray        # per-level fan-out within one channel
     level_offsets: np.ndarray       # node-index base per level
     num_nodes: int
     n_banks: int
@@ -84,6 +92,7 @@ class CompiledSpec:
     standard: str = ""
     org_preset: str = ""
     timing_preset: str = ""
+    n_channels: int = 1             # memory-system channel fan-out
 
     def cmd_id(self, name: str) -> int:
         return self.cmd_names.index(name)
@@ -98,9 +107,12 @@ class CompiledSpec:
 
 
 def compile_spec(standard, org_preset: str, timing_preset: str,
-                 timing_overrides: dict | None = None) -> CompiledSpec:
+                 timing_overrides: dict | None = None,
+                 channels: int = 1) -> CompiledSpec:
     if isinstance(standard, str):
         standard = S.get_standard(standard)
+    if channels < 1:
+        raise ValueError(f"channels must be >= 1, got {channels}")
     org: S.Organization = standard.org_presets[org_preset]
     timings = dict(standard.timing_presets[timing_preset])
     if timing_overrides:
@@ -170,5 +182,5 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
         nAAD=timings.get("nAAD", 0),
         clock_idle=timings.get("nWCKIDLE", timings.get("nRCKIDLE", 0)),
         standard=standard.name, org_preset=org_preset,
-        timing_preset=timing_preset,
+        timing_preset=timing_preset, n_channels=int(channels),
     )

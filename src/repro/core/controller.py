@@ -58,16 +58,20 @@ def empty_queue(cspec: CompiledSpec, depth: int) -> Queue:
 
 
 def queue_insert(q: Queue, is_write, is_probe, sub, row, col, arrive, want):
-    """Insert one request into the first free slot (returns (q', ok))."""
+    """Insert one request into the first free slot (returns (q', ok)).
+
+    Dense one-hot update (no scatter) — vectorizes under the engine's
+    channel/batch vmap nesting."""
     free = ~q.valid
     ok = want & jnp.any(free)
     slot = jnp.argmax(free)          # first free slot
+    hit = ok & (jnp.arange(q.valid.shape[0], dtype=jnp.int32) == slot)
     def put(a, v):
-        return a.at[slot].set(jnp.where(ok, v, a[slot]))
-    return Queue(valid=put(q.valid, ok | q.valid[slot]),
+        return jnp.where(hit, v, a)
+    return Queue(valid=q.valid | hit,
                  is_write=put(q.is_write, is_write),
                  is_probe=put(q.is_probe, is_probe),
-                 sub=q.sub.at[slot].set(jnp.where(ok, sub, q.sub[slot])),
+                 sub=jnp.where(hit[:, None], sub[None, :], q.sub),
                  row=put(q.row, row), col=put(q.col, col),
                  arrive=put(q.arrive, arrive)), ok
 
@@ -232,15 +236,16 @@ class StepEvents(NamedTuple):
 # --------------------------------------------------------------------------
 
 
-def _candidates(cspec, dp, cs, clk):
+def _candidates(cspec, dp, cs, clk, bank):
     q = cs.queue
     pre = jax.vmap(partial(D.prereq, cspec, dp, cs.dev),
                    in_axes=(0, 0, 0, None))
     cand_cmd, cand_row, open_hit = pre(q.is_write, q.sub, q.row, clk)
-    earliest = jax.vmap(partial(D.earliest_ready, cspec, dp, cs.dev))(
-        cand_cmd, q.sub)
-    timing_ready = clk >= earliest
-    return cand_cmd, cand_row, open_hit, timing_ready
+    # dense (n_cmds, n_banks) earliest table + one (Q,) lookup — keeps the
+    # channel-vmapped pipeline vectorized (no per-slot gather loops)
+    table = D.earliest_ready_table(cspec, dp, cs.dev)
+    timing_ready = clk >= table[cand_cmd, bank]
+    return cand_cmd, cand_row, open_hit, timing_ready, table
 
 
 def _refresh_plan(cspec, dp, cs, clk, cfg: ControllerConfig):
@@ -279,19 +284,23 @@ def _ru_addr(cspec, ru):
 
 
 def _try_issue_refresh(cspec, dp, cs, clk, due, urgent, ref_cmd,
-                       kind_mask_ok):
+                       kind_mask_ok, table):
     """Issue the refresh-engine command of the most-overdue due unit.
 
     Refresh is *opportunistic* until urgent: a merely-due refresh yields to
     pending requests targeting the same unit; an urgent one preempts (the
     ``refresh_urgency`` predicate blocks those requests at the same time).
+    ``table`` is the pass's dense earliest-issue table; the refresh unit's
+    representative bank resolves its timing through the same lookup the
+    queue candidates use.
     """
     score = jnp.where(due, clk - cs.dev.last_ref, -1)
     ru = jnp.argmax(score)
     cmd = ref_cmd[ru]
     sub = _ru_addr(cspec, ru)
     ok_kind = kind_mask_ok[cmd]
-    ready = D.timing_ok(cspec, dp, cs.dev, cmd, sub, clk)
+    banks_per_ru0 = cspec.n_banks // cspec.n_refresh_units
+    ready = clk >= table[cmd, ru * jnp.int32(banks_per_ru0)]
     q = cs.queue
     pending_here = jnp.any(q.valid & (q.sub[:, 0] == ru))
     may_go = urgent[ru] | ~pending_here
@@ -310,8 +319,9 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     """One pass of the base pipeline restricted to commands with
     kind_ok[kind] == True (dual C/A runs this twice, paper §2)."""
     q = cs.queue
-    cand_cmd, cand_row, open_hit, timing_ready = _candidates(cspec, dp, cs, clk)
     bank = jax.vmap(partial(D.flat_bank, cspec))(q.sub)
+    cand_cmd, cand_row, open_hit, timing_ready, table = _candidates(
+        cspec, dp, cs, clk, bank)
     ru = q.sub[:, 0]
 
     due, urgent, ref_cmd = _refresh_plan(cspec, dp, cs, clk, cfg)
@@ -331,7 +341,7 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     # refresh engine first (its commands obey the same kind restriction)
     ref_kind_ok = kind_ok[kind_mask]
     cs, ref_issued, ref_cmd_done, ref_bank = _try_issue_refresh(
-        cspec, dp, cs, clk, due, urgent, ref_cmd, ref_kind_ok)
+        cspec, dp, cs, clk, due, urgent, ref_cmd, ref_kind_ok, table)
 
     hit_ready = jnp.any(mask & open_hit) & ~ref_issued
     slot, ok = sched_fn(mask & ~ref_issued, open_hit, q.arrive)
@@ -346,15 +356,17 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     fin_rd = do & ((fx & S.FX_FINAL_RD) != 0)
     fin_wr = do & ((fx & S.FX_FINAL_WR) != 0)
     served = fin_rd | fin_wr
-    valid = q.valid.at[slot].set(jnp.where(served, False, q.valid[slot]))
+    slot_hit = jnp.arange(q.valid.shape[0], dtype=jnp.int32) == slot
+    valid = q.valid & ~(slot_hit & served)
 
     # row-hit streak bookkeeping (FRFCFS-Cap support)
     b = bank[slot]
+    b_hit = jnp.arange(cspec.n_banks, dtype=jnp.int32) == b
     streak = cs.hit_streak
-    streak = jnp.where(served, streak.at[b].add(1), streak)
+    streak = jnp.where(served & b_hit, streak + 1, streak)
     opener = cspec.id_ACT1 if cspec.split_activation else cspec.id_ACT
-    streak = jnp.where(do & (cmd == jnp.int32(opener)),
-                       streak.at[b].set(0), streak)
+    streak = jnp.where(do & (cmd == jnp.int32(opener)) & b_hit,
+                       0, streak)
 
     # BlockHammer sketch update on row-open
     sk = cs.bh_sketch
@@ -367,7 +379,7 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     prac = cs.prac_count
     if cfg.prac_threshold:
         is_open_cmd = do & (cmd == jnp.int32(opener))
-        prac = jnp.where(is_open_cmd, prac.at[b].add(1), prac)
+        prac = jnp.where(is_open_cmd & b_hit, prac + 1, prac)
 
     probe = fin_rd & q.is_probe[slot]
     completion = clk + dp.read_latency
@@ -389,10 +401,43 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     return cs, ev
 
 
+_IDLE_SLOT = dict(cmd=jnp.int32(-1), bank=jnp.int32(-1), row=jnp.int32(-1),
+                  arrive=jnp.int32(-1), hit_ready=False)
+
+
+def _pack_events(ev_col: dict, ev_row: dict | None = None) -> StepEvents:
+    """Pack one or two selection-pass event dicts into ``StepEvents``.
+
+    Per-bus-slot fields stack [col-bus, row-bus] (the row slot is idle for
+    single-bus standards); per-cycle outcome fields OR/sum across passes —
+    at most one pass can serve a given request, so the sums are exact.
+    """
+    if ev_row is None:
+        ev_row = dict(_IDLE_SLOT,
+                      **{k: jnp.zeros_like(ev_col[k])
+                         for k in ("served_read", "served_write",
+                                   "served_probe", "probe_latency",
+                                   "probe_completion", "deferred")})
+    slot = {k: jnp.stack([jnp.asarray(ev_col[k]), jnp.asarray(ev_row[k])])
+            for k in ("cmd", "bank", "row", "arrive", "hit_ready")}
+    return StepEvents(
+        **slot,
+        served_read=ev_col["served_read"] | ev_row["served_read"],
+        served_write=ev_col["served_write"] | ev_row["served_write"],
+        served_probe=ev_col["served_probe"] | ev_row["served_probe"],
+        probe_latency=ev_col["probe_latency"] + ev_row["probe_latency"],
+        probe_completion=(ev_col["probe_completion"]
+                          + ev_row["probe_completion"]),
+        deferred=ev_col["deferred"] + ev_row["deferred"],
+    )
+
+
 def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
                     cs: CtrlState, clk) -> tuple:
-    """One controller cycle.  Dual-C/A standards run the selection pipeline
-    twice — a column pass and a row pass (paper §2); others run it once."""
+    """One controller cycle for ONE channel.  Dual-C/A standards run the
+    selection pipeline twice — a column pass and a row pass (paper §2);
+    others run it once.  The engine vmaps this function across the
+    memory system's channels inside its cycle scan."""
     preds = cfg.predicates()
     sched_fn = SCHEDULERS[cfg.scheduler]
     n_kinds = 4
@@ -406,33 +451,10 @@ def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
                                        col_ok, sched_fn)
         cs, ev_row = _select_and_issue(cspec, dp, cs, clk, cfg, preds,
                                        row_ok, sched_fn)
-        events = StepEvents(
-            cmd=jnp.stack([ev_col["cmd"], ev_row["cmd"]]),
-            bank=jnp.stack([ev_col["bank"], ev_row["bank"]]),
-            row=jnp.stack([ev_col["row"], ev_row["row"]]),
-            arrive=jnp.stack([ev_col["arrive"], ev_row["arrive"]]),
-            hit_ready=jnp.stack([ev_col["hit_ready"], ev_row["hit_ready"]]),
-            served_read=ev_col["served_read"] | ev_row["served_read"],
-            served_write=ev_col["served_write"] | ev_row["served_write"],
-            served_probe=ev_col["served_probe"] | ev_row["served_probe"],
-            probe_latency=ev_col["probe_latency"] + ev_row["probe_latency"],
-            probe_completion=ev_col["probe_completion"] + ev_row["probe_completion"],
-            deferred=ev_col["deferred"] + ev_row["deferred"],
-        )
+        events = _pack_events(ev_col, ev_row)
     else:
         all_ok = jnp.ones((n_kinds,), bool)
         cs, ev = _select_and_issue(cspec, dp, cs, clk, cfg, preds, all_ok,
                                    sched_fn)
-        events = StepEvents(
-            cmd=jnp.stack([ev["cmd"], jnp.int32(-1)]),
-            bank=jnp.stack([ev["bank"], jnp.int32(-1)]),
-            row=jnp.stack([ev["row"], jnp.int32(-1)]),
-            arrive=jnp.stack([ev["arrive"], jnp.int32(-1)]),
-            hit_ready=jnp.stack([ev["hit_ready"], jnp.asarray(False)]),
-            served_read=ev["served_read"], served_write=ev["served_write"],
-            served_probe=ev["served_probe"],
-            probe_latency=ev["probe_latency"],
-            probe_completion=ev["probe_completion"],
-            deferred=ev["deferred"],
-        )
+        events = _pack_events(ev)
     return cs, events

@@ -120,6 +120,41 @@ def earliest_ready(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
     return jnp.max(allowed, initial=NEG)
 
 
+def earliest_ready_table(cspec: CompiledSpec, dp: DynParams,
+                         state: DeviceState) -> jnp.ndarray:
+    """Dense ``(n_cmds, n_banks)`` earliest-issue table for the whole
+    device — the vectorized twin of :func:`earliest_ready`.
+
+    The constraint table is static, so the whole computation unrolls at
+    trace time into static slices: each constraint row reads its level's
+    node timestamps with a static slice of ``last_issue`` and broadcasts
+    them to banks with a static ``repeat`` — no gathers or scatters at
+    all, which is what keeps the channel-vmapped selection pipeline
+    vectorized (dynamic gathers serialize under nested vmap on CPU/TPU).
+    The controller then resolves a queue slot's readiness with a single
+    ``table[cmd, bank]`` lookup.
+    """
+    n_banks = cspec.n_banks
+    sizes = np.asarray(cspec.level_counts, np.int64)
+    node_counts = np.cumprod(sizes)                  # nodes per level
+    offs = np.asarray(cspec.level_offsets, np.int64)
+    acc = [None] * cspec.n_cmds                      # per-cmd running max
+    for i in range(len(cspec.ct_prev)):
+        p, f = int(cspec.ct_prev[i]), int(cspec.ct_next[i])
+        level, w = int(cspec.ct_level[i]), int(cspec.ct_win[i]) - 1
+        if level > int(cspec.cmd_scope[p]):
+            continue        # preceding command never stamps this level
+        n_l = int(node_counts[level])
+        off = int(offs[level])
+        # static slice: the level's nodes for (prev cmd, window position)
+        t_nodes = state.last_issue[off:off + n_l, p, w]          # (n_l,)
+        t_banks = jnp.repeat(t_nodes, n_banks // n_l)            # (n_banks,)
+        allowed = jnp.where(t_banks > NEG, t_banks + dp.ct_lat[i], NEG)
+        acc[f] = allowed if acc[f] is None else jnp.maximum(acc[f], allowed)
+    neg_row = jnp.full((n_banks,), NEG, jnp.int32)
+    return jnp.stack([a if a is not None else neg_row for a in acc])
+
+
 def timing_ok(cspec, dp, state, cmd, addr_sub, clk) -> jnp.ndarray:
     return clk >= earliest_ready(cspec, dp, state, cmd, addr_sub)
 
@@ -174,53 +209,63 @@ def prereq(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
 def issue(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
           cmd: jnp.ndarray, addr_sub: jnp.ndarray, row: jnp.ndarray,
           clk: jnp.ndarray, enable: jnp.ndarray) -> DeviceState:
-    """Issue `cmd` at `addr` on cycle `clk` (no-op when ``enable`` is False)."""
+    """Issue `cmd` at `addr` on cycle `clk` (no-op when ``enable`` is False).
+
+    Every state mutation is a *dense one-hot masked update* (compare +
+    select over the full array) instead of a scatter: scatters serialize
+    under the engine's (batch x channel) vmap nesting on CPU/TPU backends,
+    while these elementwise forms vectorize across all batch dimensions.
+    The arrays are small (nodes x cmds x window), so the extra flops are
+    noise next to the removed gather/scatter loops.
+    """
     nodes = node_per_level(cspec, addr_sub)                    # (L,)
     scope = jnp.asarray(cspec.cmd_scope)[cmd]
     lvl_idx = jnp.arange(len(cspec.levels), dtype=jnp.int32)
     upd_mask = (lvl_idx <= scope) & enable                     # ancestors+self
 
-    li = state.last_issue
-    # ring shift at each ancestor node for this command
-    rows_sel = li[nodes, cmd]                                  # (L, W)
+    li = state.last_issue                                      # (N, cmds, W)
+    node_ids = jnp.arange(cspec.num_nodes, dtype=jnp.int32)
+    node_hit = jnp.any((node_ids[:, None] == nodes[None, :])
+                       & upd_mask[None, :], axis=1)            # (N,)
+    cmd_hit = jnp.arange(cspec.n_cmds, dtype=jnp.int32) == cmd  # (cmds,)
     shifted = jnp.concatenate(
-        [jnp.full((rows_sel.shape[0], 1), clk, jnp.int32), rows_sel[:, :-1]],
-        axis=1)
-    new_rows = jnp.where(upd_mask[:, None], shifted, rows_sel)
-    li = li.at[nodes, cmd].set(new_rows)
+        [jnp.full_like(li[:, :, :1], clk), li[:, :, :-1]], axis=2)
+    li = jnp.where((node_hit[:, None] & cmd_hit[None, :])[:, :, None],
+                   shifted, li)
 
     fx = jnp.asarray(cspec.cmd_fx)[cmd]
     bank = flat_bank(cspec, addr_sub)
     ru = refresh_unit(cspec, addr_sub)
+    bank_hit = jnp.arange(cspec.n_banks, dtype=jnp.int32) == bank
+    ru_hit = jnp.arange(cspec.n_refresh_units, dtype=jnp.int32) == ru
 
     def has(bit):
         return ((fx & bit) != 0) & enable
 
     rs = state.row_state
-    rs = jnp.where(has(S.FX_OPEN), rs.at[bank].set(row), rs)
-    rs = jnp.where(has(S.FX_CLOSE), rs.at[bank].set(ROW_CLOSED), rs)
+    rs = jnp.where(has(S.FX_OPEN) & bank_hit, row, rs)
+    rs = jnp.where(has(S.FX_CLOSE) & bank_hit, ROW_CLOSED, rs)
     # FX_CLOSE_ALL: close every bank in this refresh unit
     banks_per_ru = cspec.n_banks // cspec.n_refresh_units
     bank_ru = jnp.arange(cspec.n_banks, dtype=jnp.int32) // banks_per_ru
     rs = jnp.where(has(S.FX_CLOSE_ALL) & (bank_ru == ru), ROW_CLOSED, rs)
-    rs = jnp.where(has(S.FX_ACT1), rs.at[bank].set(ROW_ACTIVATING), rs)
+    rs = jnp.where(has(S.FX_ACT1) & bank_hit, ROW_ACTIVATING, rs)
 
-    a1r = jnp.where(has(S.FX_ACT1), state.act1_row.at[bank].set(row), state.act1_row)
-    a1c = jnp.where(has(S.FX_ACT1), state.act1_clk.at[bank].set(clk), state.act1_clk)
+    a1_hit = has(S.FX_ACT1) & bank_hit
+    a1r = jnp.where(a1_hit, row, state.act1_row)
+    a1c = jnp.where(a1_hit, clk, state.act1_clk)
 
     cu = state.clock_until
-    turn_on = has(S.FX_CLOCK_ON)
-    cu = jnp.where(turn_on, cu.at[ru].set(clk + dp.clock_idle), cu)
+    cu = jnp.where(has(S.FX_CLOCK_ON) & ru_hit, clk + dp.clock_idle, cu)
     # data transfer keeps the data clock alive
     is_data = has(S.FX_FINAL_RD) | has(S.FX_FINAL_WR)
     if cspec.data_clock_sync:
-        cu = jnp.where(is_data,
-                       cu.at[ru].set(jnp.maximum(cu[ru], clk + dp.clock_idle)),
-                       cu)
+        cu = jnp.where(is_data & ru_hit,
+                       jnp.maximum(cu, clk + dp.clock_idle), cu)
 
     lr = state.last_ref
-    lr = jnp.where((cmd == jnp.int32(cspec.id_REFab)) & enable,
-                   lr.at[ru].set(clk), lr)
+    lr = jnp.where((cmd == jnp.int32(cspec.id_REFab)) & enable & ru_hit,
+                   clk, lr)
 
     return DeviceState(last_issue=li, row_state=rs, act1_row=a1r,
                        act1_clk=a1c, clock_until=cu, last_ref=lr)

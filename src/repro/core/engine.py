@@ -1,11 +1,17 @@
-"""Cycle-level simulation engine: `lax.scan` over cycles, `vmap` over configs.
+"""Cycle-level memory-system engine: `lax.scan` over cycles, `vmap` over
+channels *and* configs.
 
-The engine composes (frontend -> controller -> device) into one pure cycle
-function and runs it under `jax.lax.scan`.  Because every load knob and
-every timing latency is a traced array (`FrontParams`, `DynParams`), a
-*batched* engine falls out of `jax.vmap` — hundreds of design-space points
-(timing presets x scheduler loads x read ratios) simulate in one compiled
-program.  This is the TPU-native analogue of Ramulator's DSE workflows
+The engine composes (frontend -> address mapper -> per-channel controllers
+-> devices) into one pure cycle function and runs it under `jax.lax.scan`.
+Controller and device state carry a leading channel axis; `controller_step`
+runs across the system's C channels via an inner `jax.vmap`, so a 1-channel
+and an 8-channel system are the *same* compiled program shape family — one
+trace, one XLA compile, regardless of channel count.  Because every load
+knob and every timing latency is a traced array (`FrontParams`,
+`DynParams`), a *batched* engine falls out of an outer `jax.vmap` —
+hundreds of design-space points (timing presets x scheduler loads x read
+ratios x channel counts x mapper orders) simulate in few compiled
+programs.  This is the TPU-native analogue of Ramulator's DSE workflows
 (DESIGN.md §2).
 """
 from __future__ import annotations
@@ -24,36 +30,59 @@ from repro.core import frontend as F
 from repro.core.compile import CompiledSpec, compile_spec
 
 
+class ChannelStats(NamedTuple):
+    """Per-channel breakdowns; every leaf has a leading ``(C,)`` axis
+    (``(B, C)`` for batched runs)."""
+    reads_done: jnp.ndarray
+    writes_done: jnp.ndarray
+    probe_lat_sum: jnp.ndarray
+    probe_cnt: jnp.ndarray
+    data_bus_busy: jnp.ndarray      # cycles the channel's data bus was busy
+    cmd_counts: jnp.ndarray         # (C, n_cmds)
+    deferred: jnp.ndarray
+
+
 class Stats(NamedTuple):
+    """Aggregate run statistics plus the per-channel breakdown.
+
+    The scalar fields sum across channels (identical to the historical
+    single-channel semantics); ``per_channel`` holds the same counters
+    split by channel.
+    """
     cycles: jnp.ndarray
     reads_done: jnp.ndarray
     writes_done: jnp.ndarray
     probe_lat_sum: jnp.ndarray
     probe_cnt: jnp.ndarray
-    data_bus_busy: jnp.ndarray      # cycles the data bus carried data
+    data_bus_busy: jnp.ndarray      # cycles any data bus carried data
     cmd_counts: jnp.ndarray         # (n_cmds,)
     deferred: jnp.ndarray           # predicate-masked candidate count
+    per_channel: ChannelStats
 
 
-def _zero_stats(cspec: CompiledSpec) -> Stats:
-    z = jnp.int32(0)
-    return Stats(z, z, z, z, z, z, jnp.zeros((cspec.n_cmds,), jnp.int32), z)
+def _zero_channel_stats(cspec: CompiledSpec) -> ChannelStats:
+    nch = cspec.n_channels
+    z = lambda *sh: jnp.zeros(sh, jnp.int32)
+    return ChannelStats(z(nch), z(nch), z(nch), z(nch), z(nch),
+                        z(nch, cspec.n_cmds), z(nch))
 
 
 class SimState(NamedTuple):
-    cs: C.CtrlState
+    cs: C.CtrlState              # every leaf has a leading channel axis
     fs: F.FrontState
-    stats: Stats
+    ch: ChannelStats
     clk: jnp.ndarray
 
 
 class TraceArrays(NamedTuple):
     """Dense per-cycle trace emitted by ``run(..., trace=True)``.
 
-    Every field is ``[T, 2]`` ([cycles, bus slots]; slot 0 is the column
-    C/A bus, slot 1 the row bus — single-bus standards only use slot 0).
-    ``cmd`` is -1 on idle slots.  ``repro.trace.capture`` compacts these
-    dense arrays into a columnar :class:`repro.trace.CommandTrace`.
+    Single-channel systems emit ``[T, 2]`` fields ([cycles, bus slots];
+    slot 0 is the column C/A bus, slot 1 the row bus — single-bus
+    standards only use slot 0).  Multi-channel systems emit ``[T, C, 2]``
+    with the channel axis in the middle.  ``cmd`` is -1 on idle slots.
+    ``repro.trace.capture`` compacts these dense arrays into a columnar
+    :class:`repro.trace.CommandTrace` (with a ``chan`` column).
     """
     cmd: jnp.ndarray         # issued command id, -1 == idle
     bank: jnp.ndarray        # flat bank id (refresh: representative bank)
@@ -82,7 +111,14 @@ TRACE_COUNT = 0
 
 
 def _freeze(obj):
-    """Recursively convert configs/dicts into hashable cache-key tuples."""
+    """Recursively convert configs/dicts into hashable cache-key tuples.
+
+    Callables (user filtering predicates in ``extra_predicates``) freeze
+    to their qualified name plus frozen closure constants — two equal
+    configs built from *separate but identical* factory calls therefore
+    share one cache entry, instead of silently never hitting because the
+    lambdas hash by identity.
+    """
     if obj is None or isinstance(obj, (int, float, str, bool, bytes)):
         return obj
     if isinstance(obj, dict):
@@ -93,33 +129,63 @@ def _freeze(obj):
             for f in dataclasses.fields(obj))
     if isinstance(obj, (list, tuple)):
         return tuple(_freeze(x) for x in obj)
-    return obj                      # callables etc. hash by identity
+    if callable(obj):
+        # Key on everything that can bind a value into the function:
+        # closure cells, default args (the `def pred(..., t=t)` binding
+        # idiom), and bytecode+consts (distinguishes different lambdas
+        # sharing the '<lambda>' qualname).  Factory-rebuilt equal copies
+        # still collide into one cache entry.  Known limitation: a
+        # predicate reading a *module-level global* that mutates between
+        # runs is not re-keyed — bind state via closures/defaults instead.
+        cells = getattr(obj, "__closure__", None) or ()
+        closure = tuple(_freeze(c.cell_contents) for c in cells)
+        defaults = (_freeze(getattr(obj, "__defaults__", None)),
+                    _freeze(getattr(obj, "__kwdefaults__", None)))
+        code = getattr(obj, "__code__", None)
+        code_key = ((code.co_code, _freeze(code.co_consts))
+                    if code is not None else id(obj))
+        return ("callable", getattr(obj, "__module__", ""),
+                getattr(obj, "__qualname__", repr(obj)), code_key, closure,
+                defaults)
+    try:
+        hash(obj)
+        return obj
+    except TypeError:
+        return repr(obj)
 
 
 def spec_fingerprint(cspec: CompiledSpec):
     """Hashable identity of a compiled spec *as the engine traces it*.
 
     Keyed on provenance (standard/org/timing preset names) plus the resolved
-    timing table and the geometry fields benchmarks are allowed to mutate
-    in place (`rows`, `columns`) — so an edited spec never aliases a cached
-    program built from the pristine one.
+    timing table, the geometry fields benchmarks are allowed to mutate
+    in place (`rows`, `columns`), and the memory-system channel count — so
+    an edited spec never aliases a cached program built from the pristine
+    one, and an N-channel system never aliases a 1-channel program.  The
+    channel count is appended only when >1: every pre-multi-channel trace
+    artifact was captured single-channel, and this keeps their stored
+    fingerprints verifiable.
     """
-    return (cspec.standard, cspec.org_preset, cspec.timing_preset,
+    base = (cspec.standard, cspec.org_preset, cspec.timing_preset,
             _freeze(cspec.timings), cspec.rows, cspec.columns)
+    return base if cspec.n_channels == 1 else base + (cspec.n_channels,)
 
 
 def run_key(cspec: CompiledSpec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
-            batched: bool):
+            batched: bool, replay: F.ReplayStream | None = None):
     # interval/read_ratio reach the traced program only through FrontParams
     # (a traced argument) in both scalar and batched mode; the fcfg copies
     # are dead at trace time, so drop them from the key — sweeping the load
-    # knobs through `Simulator.run` never recompiles.
+    # knobs through `Simulator.run` never recompiles.  The mapper order
+    # stays in the key (it changes the traced decode), as does the replay
+    # stream's content fingerprint.
     fkey = tuple(kv for kv in _freeze(fcfg)
                  if not (isinstance(kv, tuple)
                          and kv[0] in ("interval", "read_ratio")))
     return (spec_fingerprint(cspec), _freeze(ccfg), fkey,
-            int(n_cycles), bool(trace), bool(batched))
+            int(n_cycles), bool(trace), bool(batched),
+            None if replay is None else replay.fingerprint)
 
 
 class RunCache:
@@ -144,8 +210,8 @@ class RunCache:
 
     def get(self, cspec: CompiledSpec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool = False,
-            batched: bool = False):
-        key = run_key(cspec, ccfg, fcfg, n_cycles, trace, batched)
+            batched: bool = False, replay: F.ReplayStream | None = None):
+        key = run_key(cspec, ccfg, fcfg, n_cycles, trace, batched, replay)
         fn = self._runs.get(key)
         if fn is not None:
             self.hits += 1
@@ -156,7 +222,7 @@ class RunCache:
         # may have mutated its cspec in place — the snapshot keeps every
         # retrace consistent with the fingerprint taken above.
         cspec = dataclasses.replace(cspec)
-        fn = make_run(cspec, ccfg, fcfg, n_cycles, trace)
+        fn = make_run(cspec, ccfg, fcfg, n_cycles, trace, replay)
         if batched:
             fn = jax.vmap(fn, in_axes=(None, 0, None))
         fn = jax.jit(fn)
@@ -170,10 +236,13 @@ RUN_CACHE = RunCache()
 
 @dataclasses.dataclass
 class Simulator:
-    """User-facing simulator handle for one (standard, org, timing) triple.
+    """User-facing memory-system handle for one (standard, org, timing)
+    triple, with a configurable channel count and address-mapper order.
 
     >>> sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
     >>> stats = sim.run(100_000, interval=4.0, read_ratio=1.0)
+    >>> quad = Simulator("HBM3", "HBM3_16Gb", "HBM3_5200", channels=4)
+    >>> stats = quad.run(50_000)      # stats.per_channel: (4,) breakdowns
     """
     standard: str
     org_preset: str
@@ -183,10 +252,20 @@ class Simulator:
     frontend: F.FrontendConfig = dataclasses.field(
         default_factory=F.FrontendConfig)
     timing_overrides: dict | None = None
+    #: memory-system channel fan-out (vmapped controllers inside the scan)
+    channels: int = 1
+    #: convenience override for ``frontend.mapper`` (None keeps it)
+    mapper: str | None = None
+    #: replay source for ``FrontendConfig(pattern="trace")``
+    replay: F.ReplayStream | None = None
 
     def __post_init__(self):
         self.cspec = compile_spec(self.standard, self.org_preset,
-                                  self.timing_preset, self.timing_overrides)
+                                  self.timing_preset, self.timing_overrides,
+                                  channels=self.channels)
+        if self.mapper is not None:
+            self.frontend = dataclasses.replace(self.frontend,
+                                                mapper=self.mapper)
 
     # -- single-config run ------------------------------------------------
     def run(self, n_cycles: int, interval: float | None = None,
@@ -202,7 +281,7 @@ class Simulator:
         dp = D.dyn_params(self.cspec)
         fp = fcfg.params()
         run_fn = RUN_CACHE.get(self.cspec, self.controller, fcfg, n_cycles,
-                               trace=trace)
+                               trace=trace, replay=self.replay)
         out = run_fn(dp, fp, jnp.uint32(seed))
         return jax.tree.map(np.asarray, out)
 
@@ -214,57 +293,105 @@ class Simulator:
         pts = [(i, r) for i in intervals for r in read_ratios]
         fp = F.stack_params(pts, self.frontend.probe_gap)
         batched = RUN_CACHE.get(self.cspec, self.controller, self.frontend,
-                                n_cycles, batched=True)
+                                n_cycles, batched=True, replay=self.replay)
         out = batched(dp, fp, jnp.uint32(seed))
         return pts, jax.tree.map(np.asarray, out)
 
 
 def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
-             fcfg: F.FrontendConfig, n_cycles: int, trace: bool):
-    """Build the pure run function (dp, fp, seed) -> Stats [, trace]."""
+             fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
+             replay: F.ReplayStream | None = None):
+    """Build the pure run function (dp, fp, seed) -> Stats [, trace].
+
+    One compiled program per (spec, configs, n_cycles, trace, replay)
+    regardless of channel count: the frontend routes decoded requests to
+    per-channel queues and ``controller_step`` runs across all channels
+    via an inner ``jax.vmap`` inside the single ``lax.scan`` body.
+    """
+    nch = cspec.n_channels
+    layout = F.make_layout(cspec, fcfg.mapper)
+    if fcfg.stream and fcfg.pattern == "trace" and replay is None:
+        raise ValueError('FrontendConfig(pattern="trace") needs a '
+                         "ReplayStream (Simulator(..., replay=...))")
+    if replay is not None:
+        if len(replay) == 0:
+            raise ValueError("replay stream is empty — nothing to replay")
+        top = int(np.max(replay.chan))
+        if top >= nch or int(np.min(replay.chan)) < 0:
+            raise ValueError(
+                f"replay stream targets channel {top} but the memory "
+                f"system has {nch} channel(s) — re-encode the stream "
+                "through this system's mapper (ReplayStream."
+                "from_addresses) instead of reusing captured channels")
+    rp = None if replay is None else F.ReplayStream(
+        chan=jnp.asarray(replay.chan), sub=jnp.asarray(replay.sub),
+        row=jnp.asarray(replay.row), col=jnp.asarray(replay.col),
+        is_write=jnp.asarray(replay.is_write),
+        fingerprint=replay.fingerprint)
 
     def cycle(sim: SimState, _, dp, fp):
-        queue, fs = F.frontend_step(cspec, fcfg, fp, sim.fs, sim.cs.queue,
-                                    sim.clk)
-        cs = sim.cs._replace(queue=queue)
-        cs, ev = C.controller_step(cspec, dp, ccfg, cs, sim.clk)
+        queues, fs = F.frontend_step(cspec, fcfg, fp, sim.fs, sim.cs.queue,
+                                     sim.clk, layout, rp)
+        cs = sim.cs._replace(queue=queues)
+        cs, ev = jax.vmap(
+            lambda s: C.controller_step(cspec, dp, ccfg, s, sim.clk))(cs)
         fs = F.frontend_absorb(fs, fp, ev)
 
-        st = sim.stats
+        ch = sim.ch
         nBL = jnp.int32(cspec.timings["nBL"])
-        issued = ev.cmd >= 0
-        counts = st.cmd_counts
+        rd = ev.served_read.astype(jnp.int32)          # (C,)
+        wr = ev.served_write.astype(jnp.int32)
+        counts = ch.cmd_counts                          # (C, n_cmds)
+        cmd_ids = jnp.arange(cspec.n_cmds, dtype=jnp.int32)
         for i in range(2):
-            counts = jnp.where(issued[i], counts.at[ev.cmd[i]].add(1), counts)
-        st = Stats(
-            cycles=st.cycles + 1,
-            reads_done=st.reads_done + ev.served_read.astype(jnp.int32),
-            writes_done=st.writes_done + ev.served_write.astype(jnp.int32),
-            probe_lat_sum=st.probe_lat_sum + ev.probe_latency,
-            probe_cnt=st.probe_cnt + ev.served_probe.astype(jnp.int32),
-            data_bus_busy=st.data_bus_busy + nBL * (
-                ev.served_read.astype(jnp.int32)
-                + ev.served_write.astype(jnp.int32)),
+            # dense one-hot add (idle slots are -1: no match, no count)
+            counts = counts + (cmd_ids[None, :]
+                               == ev.cmd[:, i:i + 1]).astype(jnp.int32)
+        ch = ChannelStats(
+            reads_done=ch.reads_done + rd,
+            writes_done=ch.writes_done + wr,
+            probe_lat_sum=ch.probe_lat_sum + ev.probe_latency,
+            probe_cnt=ch.probe_cnt + ev.served_probe.astype(jnp.int32),
+            data_bus_busy=ch.data_bus_busy + nBL * (rd + wr),
             cmd_counts=counts,
-            deferred=st.deferred + ev.deferred,
+            deferred=ch.deferred + ev.deferred,
         )
-        out = SimState(cs=cs, fs=fs, stats=st, clk=sim.clk + 1)
-        ys = TraceArrays(ev.cmd, ev.bank, ev.row, ev.arrive,
-                         ev.hit_ready) if trace else None
+        out = SimState(cs=cs, fs=fs, ch=ch, clk=sim.clk + 1)
+        if trace:
+            # single-channel systems keep the historical [2] slot shape
+            sq = (lambda a: a[0]) if nch == 1 else (lambda a: a)
+            ys = TraceArrays(sq(ev.cmd), sq(ev.bank), sq(ev.row),
+                             sq(ev.arrive), sq(ev.hit_ready))
+        else:
+            ys = None
         return out, ys
 
     def run(dp, fp, seed):
         global TRACE_COUNT
         TRACE_COUNT += 1            # runs once per jax trace, not per call
-        init = SimState(cs=C.init_ctrl_state(cspec, ccfg.queue_depth),
-                        fs=F.init_front(),
-                        stats=_zero_stats(cspec), clk=jnp.int32(0))
+        cs1 = C.init_ctrl_state(cspec, ccfg.queue_depth)
+        css = jax.tree.map(lambda a: jnp.broadcast_to(a, (nch,) + a.shape),
+                           cs1)
+        init = SimState(cs=css, fs=F.init_front(),
+                        ch=_zero_channel_stats(cspec), clk=jnp.int32(0))
         init = init._replace(fs=init.fs._replace(rng=seed | jnp.uint32(1)))
         final, ys = jax.lax.scan(partial(cycle, dp=dp, fp=fp), init, None,
                                  length=n_cycles)
+        ch = final.ch
+        stats = Stats(
+            cycles=final.clk,
+            reads_done=jnp.sum(ch.reads_done),
+            writes_done=jnp.sum(ch.writes_done),
+            probe_lat_sum=jnp.sum(ch.probe_lat_sum),
+            probe_cnt=jnp.sum(ch.probe_cnt),
+            data_bus_busy=jnp.sum(ch.data_bus_busy),
+            cmd_counts=jnp.sum(ch.cmd_counts, axis=0),
+            deferred=jnp.sum(ch.deferred),
+            per_channel=ch,
+        )
         if trace:
-            return final.stats, ys
-        return final.stats
+            return stats, ys
+        return stats
 
     return run
 
@@ -291,9 +418,30 @@ def throughput_gbps(cspec: CompiledSpec, stats) -> float:
 
 
 def peak_gbps(cspec: CompiledSpec) -> float:
-    """Theoretical peak throughput in GB/s: access_bytes / nBL per cycle
-    sustained on every cycle of the data bus."""
-    return cspec.peak_bytes_per_cycle / (cspec.tCK_ps * 1e-12) / 1e9
+    """Theoretical peak throughput of the memory *system* in GB/s:
+    access_bytes / nBL per cycle sustained on every cycle of every
+    channel's data bus (scales with ``n_channels``)."""
+    per_chan = cspec.peak_bytes_per_cycle / (cspec.tCK_ps * 1e-12) / 1e9
+    return cspec.n_channels * per_chan
+
+
+def channel_breakdown(cspec: CompiledSpec, stats) -> dict:
+    """Per-channel summary of one scalar run's ``stats.per_channel``:
+    ``{channel: {reads_done, writes_done, throughput_gbps, bus_util}}``."""
+    ch = stats.per_channel
+    seconds = float(stats.cycles) * cspec.tCK_ps * 1e-12
+    out = {}
+    for c in range(cspec.n_channels):
+        moved = (int(ch.reads_done[c]) + int(ch.writes_done[c])) \
+            * cspec.access_bytes
+        out[c] = {
+            "reads_done": int(ch.reads_done[c]),
+            "writes_done": int(ch.writes_done[c]),
+            "throughput_gbps": moved / seconds / 1e9 if seconds else 0.0,
+            "bus_util": (float(ch.data_bus_busy[c]) / float(stats.cycles)
+                         if int(stats.cycles) else 0.0),
+        }
+    return out
 
 
 def avg_probe_latency_ns(cspec: CompiledSpec, stats) -> float:

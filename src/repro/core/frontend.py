@@ -1,24 +1,38 @@
 """Traffic-generator frontends (paper §4, improved version of [5]).
 
-Two request sources drive the latency-throughput evaluation:
+Three request sources drive the memory system:
 
   1. *streaming* requests at a configurable inter-arrival interval — the
      load (throughput) axis, with a configurable read ratio;
   2. *serialized random-access probe* requests — the latency axis: a probe
-     is only issued after the previous probe's data returned.
+     is only issued after the previous probe's data returned;
+  3. *trace replay* — a captured (or synthetic) linear-address stream,
+     pre-decoded into per-channel request columns (:class:`ReplayStream`)
+     and replayed at the streaming pace (``pattern="trace"``).
 
-Both are implemented as pure state-machines over int32 arrays so the whole
-(frontend + controller + device) cycle is one `lax.scan` body, and the
-load/read-ratio knobs are vmappable for design-space sweeps.
+The frontend emits *linear physical addresses*: a sequential stream is a
+linear request counter, decoded each cycle through the configured
+``AddressMapper`` layout (``FrontendConfig.mapper``) into
+(channel, sub-levels, row, col) inside the scan body — channel bits
+included.  Requests route to the per-channel request queues with
+per-channel backpressure (a full target queue leaves the arrival pending).
+
+Everything is pure state-machines over int32 arrays so the whole
+(frontend -> per-channel controllers -> devices) cycle is one `lax.scan`
+body, and the load/read-ratio knobs are vmappable for design-space sweeps.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import controller as C
+from repro.core.addrmap import AddressMapper, decode_fields, make_layout
 from repro.core.compile import CompiledSpec
 
 
@@ -32,7 +46,7 @@ class FrontParams(NamedTuple):
 class FrontState(NamedTuple):
     accum_fp: jnp.ndarray        # arrival accumulator (x256)
     rng: jnp.ndarray             # uint32 LCG state
-    seq: jnp.ndarray             # sequential-stream position counter
+    seq: jnp.ndarray             # linear request-counter / replay position
     probe_busy: jnp.ndarray      # bool — a probe is in flight
     probe_next: jnp.ndarray      # earliest clock for the next probe
     sent: jnp.ndarray            # streaming requests injected
@@ -46,7 +60,15 @@ class FrontendConfig:
     probe_gap: int = 16
     probes: bool = True
     stream: bool = True
-    pattern: str = "sequential"  # streaming address pattern: sequential|random
+    #: streaming address pattern: ``sequential`` (linear counter decoded
+    #: through ``mapper``), ``random``, or ``trace`` (replay a
+    #: :class:`ReplayStream` supplied to the engine).
+    pattern: str = "sequential"
+    #: address-mapper order for the linear streams (see
+    #: ``repro.core.addrmap.MAPPERS``).  The default rotates banks/channels
+    #: fastest — the bank-interleaved, row-buffer-friendly streaming
+    #: pattern of the paper's traffic generator.
+    mapper: str = "RoCoBaRaCh"
     max_backlog_fp: int = 256 * 64   # accumulator cap: ≤64 queued arrivals
 
     def params(self) -> FrontParams:
@@ -76,49 +98,125 @@ def init_front(seed: int = 0x1234) -> FrontState:
                       dropped_backpressure=jnp.int32(0))
 
 
+# --------------------------------------------------------------------------
+# Trace-driven replay source
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ReplayStream:
+    """Pre-decoded replay request columns for the trace-driven frontend.
+
+    Columns are host-side numpy int32 arrays of equal length N: target
+    ``chan``, per-channel ``sub`` level indices ``(N, L-1)``, ``row``,
+    ``col``, and ``is_write``.  The engine closes over them as constants;
+    ``fingerprint`` (a digest of the columns) keys the compile cache so
+    two different streams never alias one compiled program.
+    """
+    chan: np.ndarray
+    sub: np.ndarray
+    row: np.ndarray
+    col: np.ndarray
+    is_write: np.ndarray
+    fingerprint: str = ""
+
+    def __post_init__(self):
+        if not self.fingerprint:
+            h = hashlib.sha256()
+            for a in (self.chan, self.sub, self.row, self.col,
+                      self.is_write):
+                h.update(np.ascontiguousarray(a, np.int32).tobytes())
+            object.__setattr__(self, "fingerprint", h.hexdigest()[:16])
+
+    def __len__(self) -> int:
+        return int(self.chan.shape[0])
+
+    @classmethod
+    def from_addresses(cls, cspec: CompiledSpec, addrs, is_write=None,
+                       order: str = "RoBaRaCoCh") -> "ReplayStream":
+        """Decode a linear byte-address stream through ``order``."""
+        chan, sub, row, col = AddressMapper(cspec, order).to_chan_sub_row_col(
+            np.asarray(addrs, np.int64))
+        n = len(chan)
+        wr = np.zeros(n, np.int32) if is_write is None \
+            else np.asarray(is_write, np.int32)
+        i32 = lambda a: np.ascontiguousarray(a, np.int32)
+        return cls(chan=i32(chan), sub=i32(sub), row=i32(row), col=i32(col),
+                   is_write=i32(wr))
+
+
+# --------------------------------------------------------------------------
+# Address generation: linear streams decoded through the mapper layout
+# --------------------------------------------------------------------------
+
+
 def _lcg(rng):
     return rng * jnp.uint32(1664525) + jnp.uint32(1013904223)
 
 
-def _rand_addr(cspec: CompiledSpec, rng):
-    """Split one 32-bit random draw into (sub-levels, row, col)."""
-    counts = cspec.level_counts
-    subs = []
+def _pack_fields(cspec: CompiledSpec, fields: dict):
+    chan = fields.get("channel", jnp.int32(0))
+    sub = jnp.stack([fields.get(lv, jnp.int32(0))
+                     for lv in cspec.levels[1:]])
+    return chan, sub, fields["row"], fields["col"]
+
+
+def _seq_addr(cspec: CompiledSpec, layout, seq):
+    """Decode the linear request counter through the mapper layout —
+    the exact same ``decode_fields`` the host-side ``AddressMapper.map``
+    uses, just running traced inside the scan body."""
+    return _pack_fields(cspec, decode_fields(layout, seq))
+
+
+def _rand_addr(cspec: CompiledSpec, layout, rng):
+    """Draw one random value per layout field (channel included)."""
+    fields = {}
     r = rng
-    for i in range(1, len(counts)):
+    for name, count in layout:
         r = _lcg(r)
-        subs.append((r >> jnp.uint32(8)).astype(jnp.int32)
-                    % jnp.int32(int(counts[i])))
-    r = _lcg(r)
-    row = (r >> jnp.uint32(8)).astype(jnp.int32) % jnp.int32(cspec.rows)
-    r = _lcg(r)
-    col = (r >> jnp.uint32(8)).astype(jnp.int32) % jnp.int32(cspec.columns)
-    return jnp.stack(subs), row, col, r
+        fields[name] = ((r >> jnp.uint32(8)).astype(jnp.int32)
+                        % jnp.int32(count))
+    chan, sub, row, col = _pack_fields(cspec, fields)
+    return chan, sub, row, col, r
 
 
-def _seq_addr(cspec: CompiledSpec, seq):
-    """Bank-interleaved sequential walk: successive requests rotate across
-    banks; within a bank, columns advance before the row does — the
-    row-buffer-friendly streaming pattern of the paper's traffic generator."""
-    counts = cspec.level_counts
-    subs = []
-    q = seq
-    for i in range(len(counts) - 1, 0, -1):
-        subs.append(q % jnp.int32(int(counts[i])))
-        q = q // jnp.int32(int(counts[i]))
-    subs = subs[::-1]          # back to (rank, ..., bank) order
-    col = q % jnp.int32(cspec.columns)
-    row = (q // jnp.int32(cspec.columns)) % jnp.int32(cspec.rows)
-    return jnp.stack(subs), row, col
+# --------------------------------------------------------------------------
+# Per-channel routing
+# --------------------------------------------------------------------------
+
+
+def route_insert(queues: C.Queue, chan, is_write, is_probe, sub, row, col,
+                 arrive, want):
+    """Insert one request into its target channel's queue.
+
+    ``queues`` leaves carry a leading channel axis ``(C, Q)``; the insert
+    is vmapped across channels with ``want`` gated on the channel match,
+    so exactly one channel (the decoded one) can accept.  Returns
+    ``(queues', ok)`` — ``ok`` False means the target channel's queue was
+    full (per-channel backpressure)."""
+    n_channels = queues.valid.shape[0]
+
+    def one(q, c):
+        return C.queue_insert(q, is_write, is_probe, sub, row, col, arrive,
+                              want & (chan == c))
+
+    queues, oks = jax.vmap(one)(queues, jnp.arange(n_channels,
+                                                   dtype=jnp.int32))
+    return queues, jnp.any(oks)
 
 
 def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
-                  fs: FrontState, queue: C.Queue, clk):
-    """Inject up to one probe and one streaming request this cycle.
+                  fs: FrontState, queues: C.Queue, clk, layout=None,
+                  replay=None):
+    """Inject up to one probe and one streaming/replay request this cycle.
 
     Probes insert first so a saturated streaming load cannot starve the
-    latency measurement out of the queue entirely.
+    latency measurement out of the queues entirely.  ``layout`` is the
+    static mapper layout (defaults to ``cfg.mapper``'s); ``replay`` is the
+    jnp-column :class:`ReplayStream` required by ``pattern="trace"``.
     """
+    if layout is None:
+        layout = make_layout(cspec, cfg.mapper)
     rng = fs.rng
     accum = fs.accum_fp
     sent = fs.sent
@@ -127,10 +225,10 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
 
     if cfg.probes:
         want_p = (~fs.probe_busy) & (clk >= fs.probe_next)
-        sub, row, col, rng = _rand_addr(cspec, rng)
-        queue, okp = C.queue_insert(queue, jnp.asarray(False),
-                                    jnp.asarray(True), sub, row, col, clk,
-                                    want_p)
+        chan, sub, row, col, rng = _rand_addr(cspec, layout, rng)
+        queues, okp = route_insert(queues, chan, jnp.asarray(False),
+                                   jnp.asarray(True), sub, row, col, clk,
+                                   want_p)
         probe_busy = fs.probe_busy | okp
     else:
         probe_busy = fs.probe_busy
@@ -139,31 +237,44 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
         accum = jnp.minimum(accum + jnp.int32(256),
                             jnp.int32(cfg.max_backlog_fp))
         want = accum >= fp.interval_fp
-        if cfg.pattern == "sequential":
-            sub, row, col = _seq_addr(cspec, seq)
+        if cfg.pattern == "trace":
+            if replay is None:
+                raise ValueError('pattern="trace" needs a ReplayStream '
+                                 "(Simulator(..., replay=...))")
+            n = replay.chan.shape[0]
+            idx = seq % jnp.int32(n)
+            chan, sub = replay.chan[idx], replay.sub[idx]
+            row, col = replay.row[idx], replay.col[idx]
+            is_write = replay.is_write[idx] != 0
         else:
-            sub, row, col, rng = _rand_addr(cspec, rng)
-        rng = _lcg(rng)
-        is_write = ((rng >> jnp.uint32(9)).astype(jnp.int32) % 256
-                    ) >= fp.read_ratio_fp
-        queue, ok = C.queue_insert(queue, is_write, jnp.asarray(False),
-                                   sub, row, col, clk, want)
+            if cfg.pattern == "sequential":
+                chan, sub, row, col = _seq_addr(cspec, layout, seq)
+            else:
+                chan, sub, row, col, rng = _rand_addr(cspec, layout, rng)
+            rng = _lcg(rng)
+            is_write = ((rng >> jnp.uint32(9)).astype(jnp.int32) % 256
+                        ) >= fp.read_ratio_fp
+        queues, ok = route_insert(queues, chan, is_write, jnp.asarray(False),
+                                  sub, row, col, clk, want)
         accum = jnp.where(ok, accum - fp.interval_fp, accum)
         seq = seq + ok.astype(jnp.int32)
         sent = sent + ok.astype(jnp.int32)
         dropped = dropped + (want & ~ok).astype(jnp.int32)
 
-    return queue, FrontState(accum_fp=accum, rng=rng, seq=seq,
-                             probe_busy=probe_busy,
-                             probe_next=fs.probe_next, sent=sent,
-                             dropped_backpressure=dropped)
+    return queues, FrontState(accum_fp=accum, rng=rng, seq=seq,
+                              probe_busy=probe_busy,
+                              probe_next=fs.probe_next, sent=sent,
+                              dropped_backpressure=dropped)
 
 
 def frontend_absorb(fs: FrontState, fp: FrontParams,
                     events: C.StepEvents) -> FrontState:
-    """Consume completion events (closes the probe loop)."""
-    done = events.served_probe
+    """Consume completion events (closes the probe loop).  Works on both
+    single-channel (scalar) and channel-stacked ``(C,)`` events: at most
+    one channel can complete the single in-flight probe."""
+    done = jnp.any(events.served_probe)
+    completion = jnp.max(events.probe_completion)
     return fs._replace(
         probe_busy=jnp.where(done, False, fs.probe_busy),
-        probe_next=jnp.where(done, events.probe_completion + fp.probe_gap,
+        probe_next=jnp.where(done, completion + fp.probe_gap,
                              fs.probe_next))

@@ -89,7 +89,7 @@ class System:
 
     def __init__(self, standard: str, org_preset: str, timing_preset: str,
                  controller=None, frontend=None, n_cycles: int = 100_000,
-                 timing_overrides: dict | None = None):
+                 timing_overrides: dict | None = None, channels: int = 1):
         S.get_standard(standard)   # validate early
         self.standard = standard
         self.org_preset = org_preset
@@ -98,13 +98,15 @@ class System:
         self.frontend = frontend or PROXIES["Frontend"]()
         self.n_cycles = n_cycles
         self.timing_overrides = timing_overrides or {}
+        self.channels = int(channels)
 
     def build(self):
         from repro.core.engine import Simulator
         return Simulator(self.standard, self.org_preset, self.timing_preset,
                          controller=self.controller.build(),
                          frontend=self.frontend.build(),
-                         timing_overrides=self.timing_overrides or None)
+                         timing_overrides=self.timing_overrides or None,
+                         channels=self.channels)
 
     # ---- YAML round-trip ---------------------------------------------------
     def to_dict(self) -> dict:
@@ -113,6 +115,7 @@ class System:
             "org_preset": self.org_preset,
             "timing_preset": self.timing_preset,
             "n_cycles": self.n_cycles,
+            "channels": self.channels,
             "timing_overrides": dict(self.timing_overrides),
             "Controller": _plain(self.controller.params()),
             "Frontend": _plain(self.frontend.params()),
@@ -128,7 +131,8 @@ class System:
         return cls(d["standard"], d["org_preset"], d["timing_preset"],
                    controller=ctrl, frontend=front,
                    n_cycles=int(d.get("n_cycles", 100_000)),
-                   timing_overrides=d.get("timing_overrides") or {})
+                   timing_overrides=d.get("timing_overrides") or {},
+                   channels=int(d.get("channels", 1)))
 
     @classmethod
     def from_yaml(cls, text: str) -> "System":

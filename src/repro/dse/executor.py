@@ -41,9 +41,11 @@ from repro.dse.spec import SweepSpec
 
 
 def compile_group_key(pt) -> tuple:
-    """Hashable key identifying the compiled program a point runs under."""
+    """Hashable key identifying the compiled program a point runs under.
+    The channel count and the mapper order (inside the frontend freeze)
+    both change the traced program, so they split compile groups."""
     return (pt.system, E._freeze(pt.controller), E._freeze(pt.frontend),
-            pt.n_cycles)
+            pt.n_cycles, pt.n_channels)
 
 
 def group_points(points) -> dict:
@@ -116,7 +118,8 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         pts = [pt for _, pt in members]
         sy, ccfg, fcfg = pts[0].system, pts[0].controller, pts[0].frontend
         cspec = compile_spec(sy.standard, sy.org_preset, sy.timing_preset,
-                             sy.overrides_dict)
+                             sy.overrides_dict,
+                             channels=pts[0].n_channels)
         dp = D.dyn_params(cspec)
         fp = _front_params(pts, fcfg)
         fp, pad = _shard_batch(fp, devices)
@@ -142,6 +145,8 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
                     trace_paths[i] = save_trace(
                         tr, os.path.join(trace_dir, f"point_{i:04d}.npz"))
         group_meta.append({"system": sy.label, "n_points": len(pts),
+                           "n_channels": pts[0].n_channels,
+                           "mapper": fcfg.mapper,
                            "wall_s": round(time.perf_counter() - tg, 3)})
 
         cols["throughput_gbps"][idx] = R.throughput_gbps_array(cspec, stats)

@@ -69,6 +69,7 @@ class Curve:
     latency_ns: np.ndarray
     peak_gbps: float
     knee: int                   # index into the arrays
+    n_channels: int = 1
 
     @property
     def peak_fraction(self) -> float:
@@ -107,11 +108,13 @@ class SweepResult:
         series: dict = {}
         for i, pt in enumerate(self.points):
             # key on the FULL controller config (frozen) — two controllers
-            # sharing a scheduler name are still distinct series
-            key = (pt.system, _freeze(pt.controller), pt.read_ratio)
+            # sharing a scheduler name are still distinct series — plus the
+            # channel count and mapper order (distinct memory systems)
+            key = (pt.system, _freeze(pt.controller), pt.n_channels,
+                   pt.mapper, pt.read_ratio)
             series.setdefault(key, []).append(i)
         out = []
-        for (sy, _ckey, rr), idx in series.items():
+        for (sy, _ckey, nch, _mp, rr), idx in series.items():
             sched = self.points[idx[0]].controller.scheduler
             idx = sorted(idx, key=lambda i: -self.points[i].interval)
             lat = self.latency_ns[idx]
@@ -121,7 +124,8 @@ class SweepResult:
                 throughput_gbps=self.throughput_gbps[idx],
                 latency_ns=lat,
                 peak_gbps=float(self.peak_gbps[idx[0]]),
-                knee=knee_index(lat, knee_factor)))
+                knee=knee_index(lat, knee_factor),
+                n_channels=nch))
         return out
 
     def cmd_count(self, i: int, name: str) -> int:
@@ -133,14 +137,15 @@ class SweepResult:
 
     # -- pretty-printing --------------------------------------------------
     def to_table(self) -> str:
-        hdr = (f"{'system':>10} {'sched':>7} {'interval':>9} {'rd%':>5} "
-               f"{'GB/s':>8} {'peak%':>6} {'lat ns':>8}")
+        hdr = (f"{'system':>10} {'ch':>3} {'sched':>7} {'interval':>9} "
+               f"{'rd%':>5} {'GB/s':>8} {'peak%':>6} {'lat ns':>8}")
         rows = [hdr]
         for i, pt in enumerate(self.points):
             pk = self.peak_gbps[i]
             frac = 100 * self.throughput_gbps[i] / pk if pk else 0.0
             rows.append(
-                f"{pt.system.label:>10} {pt.controller.scheduler:>7} "
+                f"{pt.system.label:>10} {pt.n_channels:>3} "
+                f"{pt.controller.scheduler:>7} "
                 f"{pt.interval:9.1f} {int(pt.read_ratio * 100):5d} "
                 f"{self.throughput_gbps[i]:8.2f} {frac:6.1f} "
                 f"{self.latency_ns[i]:8.1f}")
@@ -198,6 +203,7 @@ def _point_doc(pt: RunPoint) -> dict:
         "n_cycles": pt.n_cycles,
         "interval": pt.interval,
         "read_ratio": pt.read_ratio,
+        "n_channels": pt.n_channels,
     }
 
 
@@ -210,4 +216,5 @@ def _point_from_doc(p: dict) -> RunPoint:
                     controller=C.ControllerConfig(**p.get("controller", {})),
                     frontend=F.FrontendConfig(**p.get("frontend", {})),
                     n_cycles=p["n_cycles"], interval=p["interval"],
-                    read_ratio=p["read_ratio"])
+                    read_ratio=p["read_ratio"],
+                    n_channels=p.get("n_channels", 1))

@@ -85,36 +85,51 @@ def system(standard: str, timing_overrides: dict | None = None) -> System:
 
 @dataclasses.dataclass(frozen=True)
 class RunPoint:
-    """One concrete simulation: a system + controller + one load point."""
+    """One concrete simulation: a system + controller + channel/mapper
+    configuration + one load point.  The mapper order rides inside
+    ``frontend.mapper``."""
     system: System
     controller: C.ControllerConfig
     frontend: F.FrontendConfig
     n_cycles: int
     interval: float
     read_ratio: float
+    n_channels: int = 1
+
+    @property
+    def mapper(self) -> str:
+        return self.frontend.mapper
 
     @property
     def label(self) -> str:
-        return (f"{self.system.label} {self.controller.scheduler} "
+        ch = f" {self.n_channels}ch" if self.n_channels != 1 else ""
+        return (f"{self.system.label}{ch} {self.controller.scheduler} "
                 f"i={self.interval:g} r={self.read_ratio:g}")
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """Declarative sweep: systems x controllers x intervals x read ratios.
+    """Declarative sweep: systems x controllers x channels x mappers x
+    intervals x read ratios.
 
     `systems` entries may be `System` objects, bare standard names (resolved
     via `DEFAULT_SYSTEMS`), or (standard, org, timing[, overrides]) tuples.
+    ``channels`` sweeps the memory-system channel count and ``mappers``
+    the address-mapper order (see ``repro.core.addrmap.MAPPERS``) — both
+    are compile-group axes: each combination is its own compiled program,
+    with the whole load grid still vmapped inside it.
 
     >>> spec = SweepSpec(systems=("DDR4", "DDR5"),
     ...                  intervals=(16.0, 4.0, 1.0), read_ratios=(1.0, 0.5))
-    >>> len(spec.expand())      # 2 * 1 * 3 * 2
+    >>> len(spec.expand())      # 2 * 1 * 1 * 1 * 3 * 2
     12
     """
     systems: tuple
     intervals: tuple = (64.0, 16.0, 8.0, 4.0, 2.0, 1.0)
     read_ratios: tuple = (1.0,)
     controllers: tuple = None   # defaults to (ControllerConfig(),)
+    channels: tuple = (1,)
+    mappers: tuple = None       # defaults to (frontend.mapper,)
     frontend: F.FrontendConfig = dataclasses.field(
         default_factory=F.FrontendConfig)
     n_cycles: int = 20_000
@@ -140,15 +155,29 @@ class SweepSpec:
         elif isinstance(ctrls, C.ControllerConfig):
             ctrls = (ctrls,)
         object.__setattr__(self, "controllers", tuple(ctrls))
+        chans = self.channels
+        if isinstance(chans, int):
+            chans = (chans,)
+        object.__setattr__(self, "channels", tuple(int(c) for c in chans))
+        maps = self.mappers
+        if maps is None:
+            maps = (self.frontend.mapper,)
+        elif isinstance(maps, str):
+            maps = (maps,)
+        object.__setattr__(self, "mappers", tuple(maps))
         if not self.systems:
             raise ValueError("SweepSpec needs at least one system")
+        if not self.channels or any(c < 1 for c in self.channels):
+            raise ValueError("SweepSpec needs channel counts >= 1")
         if not self.intervals or not self.read_ratios:
             raise ValueError("SweepSpec needs a non-empty load grid")
 
     @property
     def grid_shape(self) -> tuple:
-        """(n_systems, n_controllers, n_intervals, n_read_ratios)."""
+        """(n_systems, n_controllers, n_channels, n_mappers, n_intervals,
+        n_read_ratios)."""
         return (len(self.systems), len(self.controllers),
+                len(self.channels), len(self.mappers),
                 len(self.intervals), len(self.read_ratios))
 
     @property
@@ -159,11 +188,14 @@ class SweepSpec:
         return n
 
     def expand(self) -> list:
-        """The full cartesian grid, in (system, controller, interval,
-        read_ratio) row-major order — the executor relies on load points of
-        one (system, controller) pair being contiguous."""
-        return [RunPoint(system=sy, controller=ct, frontend=self.frontend,
-                         n_cycles=self.n_cycles, interval=iv, read_ratio=rr)
-                for sy, ct, iv, rr in itertools.product(
-                    self.systems, self.controllers,
-                    self.intervals, self.read_ratios)]
+        """The full cartesian grid, in (system, controller, channels,
+        mapper, interval, read_ratio) row-major order — the executor
+        relies on the load points of one compile group being contiguous."""
+        return [RunPoint(system=sy, controller=ct,
+                         frontend=dataclasses.replace(self.frontend,
+                                                      mapper=mp),
+                         n_cycles=self.n_cycles, interval=iv, read_ratio=rr,
+                         n_channels=nc)
+                for sy, ct, nc, mp, iv, rr in itertools.product(
+                    self.systems, self.controllers, self.channels,
+                    self.mappers, self.intervals, self.read_ratios)]

@@ -35,6 +35,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "high interval = low load")
     ap.add_argument("--ratios", default="1.0", type=_floats,
                     help="read ratios in [0,1]")
+    ap.add_argument("--channels", default="1",
+                    help="comma-separated memory-system channel counts")
+    ap.add_argument("--mappers", default=None,
+                    help="comma-separated address-mapper orders "
+                         "(see repro.core.addrmap.MAPPERS)")
     ap.add_argument("--cycles", default=10_000, type=int,
                     help="simulated cycles per point")
     ap.add_argument("--scheduler", default="FRFCFS",
@@ -52,6 +57,9 @@ def main(argv=None) -> SweepResult:
         systems=tuple(s.strip() for s in args.standards.split(",") if s),
         intervals=args.intervals, read_ratios=args.ratios,
         controllers=(ControllerConfig(scheduler=args.scheduler),),
+        channels=tuple(int(c) for c in args.channels.split(",") if c),
+        mappers=(tuple(m.strip() for m in args.mappers.split(",") if m)
+                 if args.mappers else None),
         n_cycles=args.cycles, seed=args.seed)
     print(f"expanding {spec.grid_shape} grid -> {spec.n_points} points")
     result = execute(spec)

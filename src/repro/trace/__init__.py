@@ -18,14 +18,15 @@ CLI: ``python -m repro.trace --standard DDR4 --cycles 20000 --out
 trace.npz --html trace.html`` (see ``python -m repro.trace --help``).
 """
 from repro.trace.audit import AuditReport, Violation, audit
-from repro.trace.capture import CommandTrace, capture, spec_fingerprint_hex
+from repro.trace.capture import (CommandTrace, capture,
+                                 spec_fingerprint_hex, to_replay)
 from repro.trace.format import (iter_records, load, read_jsonl, save,
                                 write_jsonl)
 from repro.trace.viz import render_html, write_html
 
 __all__ = [
     "AuditReport", "Violation", "audit",
-    "CommandTrace", "capture", "spec_fingerprint_hex",
+    "CommandTrace", "capture", "spec_fingerprint_hex", "to_replay",
     "iter_records", "load", "read_jsonl", "save", "write_jsonl",
     "render_html", "write_html",
 ]

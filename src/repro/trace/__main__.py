@@ -32,6 +32,11 @@ def build_parser() -> argparse.ArgumentParser:
     src.add_argument("--timing", default=None,
                      help="timing preset (default: the standard's default)")
     src.add_argument("--cycles", default=20_000, type=int)
+    src.add_argument("--channels", default=1, type=int,
+                     help="memory-system channel count")
+    src.add_argument("--mapper", default=None,
+                     help="address-mapper order (see repro.core.addrmap."
+                          "MAPPERS); default: the frontend's")
     src.add_argument("--interval", default=4.0, type=float,
                      help="streaming inter-arrival interval in cycles")
     src.add_argument("--ratio", default=1.0, type=float, help="read ratio")
@@ -71,7 +76,8 @@ def _simulate(args):
     else:
         org, tim = args.org, args.timing
     sim = Simulator(args.standard, org, tim,
-                    controller=ControllerConfig(scheduler=args.scheduler))
+                    controller=ControllerConfig(scheduler=args.scheduler),
+                    channels=args.channels, mapper=args.mapper)
     stats, dense = sim.run(args.cycles, interval=args.interval,
                            read_ratio=args.ratio, trace=True,
                            seed=args.seed)
@@ -79,10 +85,17 @@ def _simulate(args):
         sim.cspec, dense, controller=sim.controller, frontend=sim.frontend,
         n_cycles_requested=args.cycles, interval=args.interval,
         read_ratio=args.ratio, seed=args.seed)
-    print(f"simulated {args.cycles} cycles of {args.standard} ({org}/{tim})"
+    print(f"simulated {args.cycles} cycles of {args.standard} ({org}/{tim}"
+          f", {args.channels} channel{'s' if args.channels > 1 else ''})"
           f": {len(trace)} commands, "
           f"{int(stats.reads_done)} reads / {int(stats.writes_done)} writes"
           " served")
+    if args.channels > 1:
+        ch = stats.per_channel
+        for c in range(args.channels):
+            print(f"  ch{c}: {int(ch.reads_done[c])} reads / "
+                  f"{int(ch.writes_done[c])} writes, "
+                  f"{int(ch.cmd_counts[c].sum())} commands")
     return sim.cspec, trace
 
 

@@ -11,11 +11,16 @@ constraint, the preceding command issue it raced, and the (negative) slack.
 
 The replay is fully vectorized: no Python loop over cycles or commands.
 For each constraint ``(prev, next, level, lat, window)`` the preceding
-events are bucketed by their level-``level`` hierarchy node (a division of
-the flat bank id — the trace's issue order is already time-sorted), and one
+events are bucketed by their *channel-qualified* level-``level`` hierarchy
+node (``chan * num_nodes + node``; the node is a division of the flat bank
+id — the trace's issue order is already time-sorted), and one
 ``searchsorted`` per constraint locates, for every following event, the
-``window``-th most recent preceding event at the same node.  Cost is
-O(n_constraints · N log N) for N commands, independent of cycle count.
+``window``-th most recent preceding event at the same node.  Multi-channel
+traces are thereby audited per channel in the same vectorized pass —
+commands on different channels never constrain each other — and the
+report carries an explicit per-channel violation count (``by_channel``).
+Cost is O(n_constraints · N log N) for N commands, independent of cycle
+count and channel count.
 
 Scheduler checks replay two invariants of the modeled schedulers over the
 request information embedded in the trace:
@@ -42,7 +47,8 @@ from repro.trace.capture import CommandTrace, spec_fingerprint_hex
 @dataclasses.dataclass
 class Violation:
     """One audit finding.  ``slack`` is issue clock minus earliest legal
-    clock — negative means the command issued ``-slack`` cycles early."""
+    clock — negative means the command issued ``-slack`` cycles early.
+    ``chan`` is the memory-system channel the command issued on."""
     check: str          # "timing" | "scheduler"
     constraint: str     # e.g. "ACT->RD @ bank lat=22" or "row_hit_first"
     clk: int            # cycle the offending command issued
@@ -52,10 +58,11 @@ class Violation:
     prev_cmd: str = ""
     prev_clk: int = -1
     slack: int = 0
+    chan: int = 0
 
     def __str__(self):
         s = (f"[{self.check}] {self.constraint}: {self.cmd} @ clk "
-             f"{self.clk} bank {self.bank}")
+             f"{self.clk} ch {self.chan} bank {self.bank}")
         if self.prev_cmd:
             s += f" after {self.prev_cmd} @ clk {self.prev_clk}"
         if self.slack:
@@ -70,6 +77,9 @@ class AuditReport:
     checks: dict                    # check name -> violation count
     violations: list                # list[Violation], possibly truncated
     truncated: bool = False
+    #: channel -> total violation count (every audited channel appears,
+    #: so a clean multi-channel report shows an explicit zero per channel)
+    by_channel: dict = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -83,10 +93,16 @@ class AuditReport:
         head = (f"audited {self.n_commands} commands, "
                 f"{self.n_pairs_checked} constraint pairs: ")
         if self.ok:
-            return head + "clean"
-        parts = [f"{n} {name}" for name, n in sorted(self.checks.items())
-                 if n]
-        return head + f"{self.n_violations} violations ({', '.join(parts)})"
+            tail = "clean"
+        else:
+            parts = [f"{n} {name}" for name, n in sorted(self.checks.items())
+                     if n]
+            tail = f"{self.n_violations} violations ({', '.join(parts)})"
+        if len(self.by_channel) > 1:
+            per = ", ".join(f"ch{c}: {n}"
+                            for c, n in sorted(self.by_channel.items()))
+            tail += f" [{per}]"
+        return head + tail
 
 
 def constraint_name(cspec: CompiledSpec, i: int) -> str:
@@ -109,13 +125,17 @@ def _nodes_at(cspec: CompiledSpec, level: int, bank: np.ndarray) -> np.ndarray:
 
 
 def _audit_timing(cspec: CompiledSpec, trace: CommandTrace, violations: list,
-                  max_violations: int):
-    """Replay every constraint-table row over the trace.  Returns
+                  max_violations: int, by_channel: np.ndarray):
+    """Replay every constraint-table row over the trace.  Hierarchy nodes
+    are channel-qualified (``chan * num_nodes + node``): every constraint
+    is replayed independently per memory-system channel, and commands on
+    different channels never constrain each other.  Returns
     (n_violations, n_pairs_checked)."""
     N = len(trace)
     cmd = trace.cmd.astype(np.int64)
     bank = trace.bank.astype(np.int64)
     clk = trace.clk.astype(np.int64)
+    chan = trace.chan.astype(np.int64)
     order = np.arange(N, dtype=np.int64)
     names = trace.cmd_names
     n_viol = 0
@@ -130,8 +150,10 @@ def _audit_timing(cspec: CompiledSpec, trace: CommandTrace, violations: list,
         f_sel = np.nonzero(cmd == f)[0]
         if len(p_sel) == 0 or len(f_sel) == 0:
             continue
-        p_nodes = _nodes_at(cspec, level, bank[p_sel])
-        f_nodes = _nodes_at(cspec, level, bank[f_sel])
+        p_nodes = chan[p_sel] * cspec.num_nodes \
+            + _nodes_at(cspec, level, bank[p_sel])
+        f_nodes = chan[f_sel] * cspec.num_nodes \
+            + _nodes_at(cspec, level, bank[f_sel])
         # bucket preceding events by node, keeping issue order inside each
         # bucket: composite key = node * (N+1) + order (order < N+1)
         key_p = p_nodes * (N + 1) + order[p_sel]
@@ -152,6 +174,7 @@ def _audit_timing(cspec: CompiledSpec, trace: CommandTrace, violations: list,
         if not early.any():
             continue
         cname = constraint_name(cspec, i)
+        np.add.at(by_channel, chan[f_sel][early], 1)
         for k in np.nonzero(early)[0]:
             n_viol += 1
             if len(violations) < max_violations:
@@ -161,46 +184,56 @@ def _audit_timing(cspec: CompiledSpec, trace: CommandTrace, violations: list,
                     clk=int(clk[e]), cmd=names[int(cmd[e])],
                     bank=int(bank[e]), bus=int(trace.bus[e]),
                     prev_cmd=names[p], prev_clk=int(t_prev[k]),
-                    slack=int(clk[e] - (t_prev[k] + lat))))
+                    slack=int(clk[e] - (t_prev[k] + lat)),
+                    chan=int(chan[e])))
     return n_viol, n_pairs
 
 
 def _audit_row_hit_first(cspec: CompiledSpec, trace: CommandTrace,
-                         violations: list, max_violations: int) -> int:
+                         violations: list, max_violations: int,
+                         by_channel: np.ndarray) -> int:
     """FR-FCFS invariant: when a maskable row hit existed, the issued queue
-    command must be a column (or data-clock sync) command."""
+    command must be a column (or data-clock sync) command.  The engine
+    records ``hit_ready`` per (channel, bus-slot) selection pass, so the
+    check is channel-local by construction."""
     kind = np.asarray(cspec.cmd_kind)[trace.cmd]
     queue_issued = trace.arrive >= 0
     is_col = (kind == S.KIND_COL) | (kind == S.KIND_SYNC)
     bad = queue_issued & (trace.hit_ready != 0) & ~is_col
     names = trace.cmd_names
+    np.add.at(by_channel, trace.chan[bad].astype(np.int64), 1)
     for e in np.nonzero(bad)[0]:
         if len(violations) < max_violations:
             violations.append(Violation(
                 check="scheduler", constraint="row_hit_first",
                 clk=int(trace.clk[e]), cmd=names[int(trace.cmd[e])],
-                bank=int(trace.bank[e]), bus=int(trace.bus[e])))
+                bank=int(trace.bank[e]), bus=int(trace.bus[e]),
+                chan=int(trace.chan[e])))
     return int(np.count_nonzero(bad))
 
 
 def _audit_age_order(cspec: CompiledSpec, trace: CommandTrace,
-                     violations: list, max_violations: int) -> int:
-    """Served column commands to one (bank, row, command) must serve
-    requests in arrival order."""
+                     violations: list, max_violations: int,
+                     by_channel: np.ndarray) -> int:
+    """Served column commands to one (channel, bank, row, command) must
+    serve requests in arrival order — each channel's controller schedules
+    independently, so age order only binds within a channel."""
     fx = np.asarray(cspec.cmd_fx)[trace.cmd]
     final = (fx & (S.FX_FINAL_RD | S.FX_FINAL_WR)) != 0
     sel = np.nonzero(final & (trace.arrive >= 0))[0]
     if len(sel) < 2:
         return 0
-    # stable sort by (bank, row, cmd) keeps issue order within each group
+    # stable sort by (chan, bank, row, cmd) keeps issue order per group
     keys = np.lexsort((sel, trace.cmd[sel], trace.row[sel],
-                       trace.bank[sel]))
+                       trace.bank[sel], trace.chan[sel]))
     s = sel[keys]
-    same = ((trace.bank[s][1:] == trace.bank[s][:-1])
+    same = ((trace.chan[s][1:] == trace.chan[s][:-1])
+            & (trace.bank[s][1:] == trace.bank[s][:-1])
             & (trace.row[s][1:] == trace.row[s][:-1])
             & (trace.cmd[s][1:] == trace.cmd[s][:-1]))
     regress = same & (trace.arrive[s][1:] < trace.arrive[s][:-1])
     names = trace.cmd_names
+    np.add.at(by_channel, trace.chan[s][1:][regress].astype(np.int64), 1)
     for k in np.nonzero(regress)[0]:
         if len(violations) < max_violations:
             e, prev = int(s[k + 1]), int(s[k])
@@ -210,7 +243,8 @@ def _audit_age_order(cspec: CompiledSpec, trace: CommandTrace,
                 bank=int(trace.bank[e]), bus=int(trace.bus[e]),
                 prev_cmd=names[int(trace.cmd[prev])],
                 prev_clk=int(trace.clk[prev]),
-                slack=int(trace.arrive[e] - trace.arrive[prev])))
+                slack=int(trace.arrive[e] - trace.arrive[prev]),
+                chan=int(trace.chan[e])))
     return int(np.count_nonzero(regress))
 
 
@@ -235,22 +269,27 @@ def audit(cspec: CompiledSpec | None, trace: CommandTrace, *,
                 f"{trace.fingerprint}; audit would be meaningless "
                 "(pass check_fingerprint=False to override)")
 
+    n_channels = max(int(getattr(cspec, "n_channels", 1)),
+                     int(trace.chan.max()) + 1 if len(trace) else 1)
+    ch_counts = np.zeros(n_channels, np.int64)
     violations: list = []
     checks = {}
     checks["timing"], n_pairs = _audit_timing(cspec, trace, violations,
-                                              max_violations)
+                                              max_violations, ch_counts)
 
     if scheduler is None:
         scheduler = trace.meta.get("controller", {}).get("scheduler")
     has_requests = bool(np.any(trace.arrive >= 0))
     if has_requests and scheduler == "FRFCFS":
         checks["row_hit_first"] = _audit_row_hit_first(
-            cspec, trace, violations, max_violations)
+            cspec, trace, violations, max_violations, ch_counts)
     if has_requests and scheduler in ("FRFCFS", "FCFS"):
         checks["age_order"] = _audit_age_order(cspec, trace, violations,
-                                               max_violations)
+                                               max_violations, ch_counts)
 
     total = sum(checks.values())
     return AuditReport(n_commands=len(trace), n_pairs_checked=n_pairs,
                        checks=checks, violations=violations,
-                       truncated=total > len(violations))
+                       truncated=total > len(violations),
+                       by_channel={c: int(n)
+                                   for c, n in enumerate(ch_counts)})

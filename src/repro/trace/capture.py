@@ -29,7 +29,7 @@ from repro.core import engine as E
 from repro.core.compile import CompiledSpec, compile_spec
 
 #: Columnar int32 fields of a CommandTrace, in save/load order.
-FIELDS = ("clk", "cmd", "bank", "row", "bus", "arrive", "hit_ready")
+FIELDS = ("clk", "cmd", "bank", "row", "bus", "arrive", "hit_ready", "chan")
 
 
 def spec_fingerprint_hex(cspec: CompiledSpec) -> str:
@@ -62,10 +62,21 @@ class CommandTrace:
     hit_ready: np.ndarray       # int32 0/1 (npz-friendly)
     n_cycles: int
     cmd_names: list
+    #: memory-system channel of each command (all-zero for single-channel
+    #: traces; defaults to zeros when omitted for backward compatibility)
+    chan: np.ndarray | None = None
     meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.chan is None:
+            self.chan = np.zeros_like(np.asarray(self.clk, np.int32))
 
     def __len__(self) -> int:
         return int(self.clk.shape[0])
+
+    @property
+    def n_channels(self) -> int:
+        return int(self.meta.get("n_channels", 1))
 
     @property
     def fingerprint(self) -> str:
@@ -83,7 +94,8 @@ class CommandTrace:
         m = self.meta
         cspec = compile_spec(m["standard"], m["org_preset"],
                              m["timing_preset"],
-                             {k: int(v) for k, v in m["timings"].items()})
+                             {k: int(v) for k, v in m["timings"].items()},
+                             channels=int(m.get("n_channels", 1)))
         # replay post-compile geometry edits (benchmarks mutate rows/
         # columns in place; the fingerprint covers them)
         cspec.rows = int(m.get("rows", cspec.rows))
@@ -125,6 +137,7 @@ def base_meta(cspec: CompiledSpec, controller=None, frontend=None,
         "columns": int(cspec.columns),
         "tCK_ps": int(cspec.tCK_ps),
         "n_banks": int(cspec.n_banks),
+        "n_channels": int(cspec.n_channels),
         "dual_command_bus": bool(cspec.dual_command_bus),
     }
     if controller is not None:
@@ -161,24 +174,67 @@ def capture(cspec: CompiledSpec, trace, *, point: int | None = None,
     auditor relies on.
     """
     cmd, bank, row, arrive, hit_ready = _normalize(trace)
-    if cmd.ndim == 3:
+    n_channels = int(getattr(cspec, "n_channels", 1))
+    # single-channel traces are [T, 2] (batched: [B, T, 2]); multi-channel
+    # traces carry the channel axis in the middle: [T, C, 2] / [B, T, C, 2]
+    scalar_ndim = 2 if n_channels == 1 else 3
+    if cmd.ndim == scalar_ndim + 1:
         if point is None:
             raise ValueError(
-                "batched [B, T, 2] trace: pass point=<batch index>")
-        sel = lambda a: a[point] if a.ndim == 3 else a
+                f"batched {'[B, T, 2]' if n_channels == 1 else '[B, T, C, 2]'}"
+                " trace: pass point=<batch index>")
+        sel = lambda a: a[point] if a.ndim == scalar_ndim + 1 else a
         cmd, bank, row = sel(cmd), sel(bank), sel(row)
         arrive, hit_ready = sel(arrive), sel(hit_ready)
-    if cmd.ndim != 2:
-        raise ValueError(f"expected [T, 2] trace arrays, got {cmd.shape}")
+    if cmd.ndim != scalar_ndim:
+        raise ValueError(f"expected {scalar_ndim}-d trace arrays for a "
+                         f"{n_channels}-channel spec, got {cmd.shape}")
     n_cycles = int(cmd.shape[0])
 
-    t_idx, bus_idx = np.nonzero(cmd >= 0)        # row-major == issue order
     i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    if n_channels == 1:
+        idx = np.nonzero(cmd >= 0)           # row-major == issue order
+        t_idx, bus_idx = idx
+        chan = np.zeros(len(t_idx), np.int32)
+    else:
+        idx = np.nonzero(cmd >= 0)           # cycle-major, channel, bus
+        t_idx, chan, bus_idx = idx
     return CommandTrace(
-        clk=i32(t_idx), cmd=i32(cmd[t_idx, bus_idx]),
-        bank=i32(bank[t_idx, bus_idx]), row=i32(row[t_idx, bus_idx]),
-        bus=i32(bus_idx), arrive=i32(arrive[t_idx, bus_idx]),
-        hit_ready=i32(hit_ready[t_idx, bus_idx].astype(np.int32)),
+        clk=i32(t_idx), cmd=i32(cmd[idx]),
+        bank=i32(bank[idx]), row=i32(row[idx]),
+        bus=i32(bus_idx), arrive=i32(arrive[idx]),
+        hit_ready=i32(hit_ready[idx].astype(np.int32)),
+        chan=i32(chan),
         n_cycles=n_cycles, cmd_names=list(cspec.cmd_names),
         meta=base_meta(cspec, controller=controller, frontend=frontend,
                        **extra_meta))
+
+
+def to_replay(trace: CommandTrace, cspec: CompiledSpec | None = None):
+    """Derive a trace-driven-frontend :class:`repro.core.ReplayStream`
+    from a captured trace's served column commands (final RD/WR with
+    request info), channel attribution included.  Feed the result to
+    ``Simulator(..., frontend=FrontendConfig(pattern="trace"),
+    replay=...)`` to re-drive any memory system with the same
+    per-channel address stream."""
+    from repro.core import spec as S
+    from repro.core.frontend import ReplayStream
+    if cspec is None:
+        cspec = trace.compiled_spec()
+    fx = np.asarray(cspec.cmd_fx)[trace.cmd]
+    is_wr = (fx & S.FX_FINAL_WR) != 0
+    sel = np.nonzero((((fx & S.FX_FINAL_RD) != 0) | is_wr)
+                     & (trace.arrive >= 0))[0]
+    if len(sel) == 0:
+        raise ValueError("trace has no served column commands to replay")
+    counts = cspec.level_counts
+    b = trace.bank[sel].astype(np.int64)
+    subs = []
+    for i in range(len(counts) - 1, 0, -1):
+        subs.append(b % int(counts[i]))
+        b = b // int(counts[i])
+    i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    return ReplayStream(
+        chan=i32(trace.chan[sel]), sub=i32(np.stack(subs[::-1], axis=-1)),
+        row=i32(np.maximum(trace.row[sel], 0)),
+        col=np.zeros(len(sel), np.int32), is_write=i32(is_wr[sel]))

@@ -18,7 +18,9 @@ import numpy as np
 
 from repro.trace.capture import FIELDS, CommandTrace
 
-_FORMAT_VERSION = 1
+#: v2 added the ``chan`` (memory-system channel) column; v1 artifacts load
+#: with an all-zero channel column.
+_FORMAT_VERSION = 2
 
 
 def save(trace: CommandTrace, path: str) -> str:
@@ -42,7 +44,8 @@ def load(path: str) -> CommandTrace:
         if version > _FORMAT_VERSION:
             raise ValueError(f"trace artifact version {version} is newer "
                              f"than supported {_FORMAT_VERSION}")
-        cols = {f: np.ascontiguousarray(z[f], np.int32) for f in FIELDS}
+        cols = {f: np.ascontiguousarray(z[f], np.int32)
+                for f in FIELDS if f in z}   # v1: no chan column
         return CommandTrace(
             n_cycles=int(z["n_cycles"]),
             cmd_names=[str(n) for n in z["cmd_names"]],
@@ -62,7 +65,8 @@ def iter_records(trace: CommandTrace, start: int = 0,
     for i in range(lo, hi):
         yield {"clk": int(clk[i]), "cmd": names[int(trace.cmd[i])],
                "bank": int(trace.bank[i]), "row": int(trace.row[i]),
-               "bus": int(trace.bus[i]), "arrive": int(trace.arrive[i])}
+               "bus": int(trace.bus[i]), "arrive": int(trace.arrive[i]),
+               "chan": int(trace.chan[i])}
 
 
 def write_jsonl(trace: CommandTrace, path_or_file) -> int:
@@ -101,7 +105,8 @@ def read_jsonl(path_or_file) -> CommandTrace:
     from repro.core.compile import compile_spec
     cspec = compile_spec(meta["standard"], meta["org_preset"],
                          meta["timing_preset"],
-                         {k: int(v) for k, v in meta["timings"].items()})
+                         {k: int(v) for k, v in meta["timings"].items()},
+                         channels=int(meta.get("n_channels", 1)))
     names = list(cspec.cmd_names)
     i32 = lambda k, d=0: np.asarray([r.get(k, d) for r in recs], np.int32)
     return CommandTrace(
@@ -110,4 +115,5 @@ def read_jsonl(path_or_file) -> CommandTrace:
         bank=i32("bank"), row=i32("row"), bus=i32("bus"),
         arrive=i32("arrive", -1),
         hit_ready=np.zeros(len(recs), np.int32),   # not exported to JSONL
+        chan=i32("chan"),
         n_cycles=int(header["n_cycles"]), cmd_names=names, meta=meta)

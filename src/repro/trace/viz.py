@@ -14,9 +14,14 @@ draws exact per-command rectangles.  Payload size and draw cost are
 therefore bounded by the bin count, not the trace length.
 
 Bus-utilization denominators are *derived*, not hardcoded: a bin of
-``bw`` cycles offers ``bw x n_command_buses`` C/A slots (two for dual-C/A
-standards such as HBM3/GDDR7) and ``bw`` data-bus cycles, of which each
+``bw`` cycles offers ``bw x n_command_buses x n_channels`` C/A slots (two
+buses for dual-C/A standards such as HBM3/GDDR7, times the memory-system
+channel count) and ``bw x n_channels`` data-bus cycles, of which each
 final RD/WR occupies ``nBL``.
+
+Multi-channel traces render as stacked per-channel lane groups (each
+channel: its banks + a refresh-engine lane), labeled ``chN bM`` /
+``chN ref``; the audit-violation overlay lane is shared at the bottom.
 """
 from __future__ import annotations
 
@@ -37,16 +42,18 @@ MAX_OVERLAY_VIOLATIONS = 500
 
 
 def _lanes(trace: CommandTrace, cspec) -> np.ndarray:
-    """Display lane per command: its bank, or the refresh-engine lane
-    (index ``n_banks``) for refresh-engine commands.  Traces without
+    """Display lane per command: channel-major — each channel contributes
+    ``n_banks`` bank lanes plus one refresh-engine lane, so multi-channel
+    traces render as stacked per-channel lane groups.  Traces without
     request info (legacy 3-array captures have ``arrive == -1``
     everywhere) fall back to command kind, and negative banks are always
-    routed to the refresh lane."""
+    routed to their channel's refresh lane."""
     if bool(np.any(trace.arrive >= 0)):
         refresh = trace.arrive < 0
     else:
         refresh = np.asarray(cspec.cmd_kind)[trace.cmd] == S.KIND_REF
-    return np.where(refresh | (trace.bank < 0), cspec.n_banks, trace.bank)
+    local = np.where(refresh | (trace.bank < 0), cspec.n_banks, trace.bank)
+    return trace.chan * (cspec.n_banks + 1) + local
 
 
 def _bin_payload(trace: CommandTrace, cspec, n_bins: int) -> dict:
@@ -55,7 +62,8 @@ def _bin_payload(trace: CommandTrace, cspec, n_bins: int) -> dict:
     T = max(1, trace.n_cycles)
     bw = max(1, math.ceil(T / n_bins))
     nb = math.ceil(T / bw)
-    n_lanes = int(cspec.n_banks) + 1          # +1: refresh-engine lane
+    # per channel: n_banks bank lanes + 1 refresh-engine lane
+    n_lanes = int(cspec.n_channels) * (int(cspec.n_banks) + 1)
     b = trace.clk // bw
 
     ca = np.bincount(b, minlength=nb)
@@ -106,6 +114,7 @@ def render_html(trace: CommandTrace, cspec=None, report=None,
         "title": title or f"{cspec.name} command trace",
         "standard": cspec.name,
         "n_banks": int(cspec.n_banks),
+        "n_channels": int(cspec.n_channels),
         "n_cycles": int(trace.n_cycles),
         "n_commands": len(trace),
         "nBL": int(cspec.timings["nBL"]),
@@ -183,20 +192,27 @@ function layout(){
   busC.width = busC.clientWidth; cmdC.width = cmdC.clientWidth;
   pxPerClk = zoomVal(+document.getElementById('zoom').value); draw();
 }
+const CH_LANES = D.n_banks + 1;      // per channel: banks + refresh lane
 function laneGeom(){
-  const lanes = D.n_banks + 2;       // banks + refresh lane + violation lane
+  // channel lane groups + one shared audit-violation lane
+  const lanes = D.n_channels * CH_LANES + 1;
   const laneH = Math.max(5, Math.floor((cmdC.height-24)/lanes));
   return {lanes, laneH};
+}
+function laneName(l){
+  if (l >= D.n_channels * CH_LANES) return 'audit';
+  const c = Math.floor(l / CH_LANES), b = l % CH_LANES;
+  const bank = (b < D.n_banks) ? ('bank '+b) : 'refresh';
+  return D.n_channels > 1 ? ('ch'+c+' '+(b<D.n_banks?('b'+b):'ref')) : bank;
 }
 function drawCmds(){
   const W = cmdC.width, {lanes, laneH} = laneGeom();
   const g = cmdC.getContext('2d'); g.clearRect(0,0,W,cmdC.height);
   g.font='10px sans-serif'; g.fillStyle='#888';
-  for (let b=0;b<D.n_banks;b++)
-    g.fillText('bank '+b, 2, 8+b*laneH+laneH*0.7);
-  g.fillText('refresh', 2, 8+D.n_banks*laneH+laneH*0.7);
+  for (let l=0;l<D.n_channels*CH_LANES;l++)
+    g.fillText(laneName(l), 2, 8+l*laneH+laneH*0.7);
   g.fillStyle='#c0392b';
-  g.fillText('audit', 2, 8+(D.n_banks+1)*laneH+laneH*0.7);
+  g.fillText('audit', 2, 8+(D.n_channels*CH_LANES)*laneH+laneH*0.7);
   const x0 = clk => (clk-off)*pxPerClk + ML;
   const rawMode = D.recs && pxPerClk >= 0.5;
   if (rawMode){
@@ -227,7 +243,7 @@ function drawCmds(){
     g.globalAlpha = 1;
   }
   // audit-violation overlay lane
-  const vy = 8+(D.n_banks+1)*laneH;
+  const vy = 8+(D.n_channels*CH_LANES)*laneH;
   for (const v of D.viols){
     const x = x0(v.clk);
     if (x < ML-10 || x > W) continue;
@@ -246,8 +262,9 @@ function drawBus(){
   const bg = busC.getContext('2d');
   bg.clearRect(0,0,busC.width,busC.height);
   const B = D.bins, bw = B.bw;
-  const caCap = bw * D.n_cmd_buses;       // C/A slots per bin
-  const dataCap = bw;                     // data-bus cycles per bin
+  // derived denominators: each channel contributes its own C/A + data bus
+  const caCap = bw * D.n_cmd_buses * D.n_channels;  // C/A slots per bin
+  const dataCap = bw * D.n_channels;      // data-bus cycles per bin
   const w = Math.max(1, (busC.width-ML-10)/B.nb);
   bg.fillStyle='#888'; bg.font='10px sans-serif';
   bg.fillText('C/A bus', 2, 30); bg.fillText('data bus', 2, 100);
@@ -277,7 +294,7 @@ cmdC.onmousemove = e=>{
     const i0 = lowerBound(recs.clk, clk-1), i1 = lowerBound(recs.clk, clk+2);
     for (let i=i0;i<i1 && lines.length<8;i++)
       lines.push(D.cmd_names[recs.cmd[i]]+'@clk'+recs.clk[i]
-                 +(recs.lane[i]<D.n_banks?' bank'+recs.lane[i]:' refresh')
+                 +' '+laneName(recs.lane[i])
                  +(recs.row[i]>=0?' row'+recs.row[i]:''));
   } else {
     const B = D.bins, b = Math.floor(clk/B.bw);

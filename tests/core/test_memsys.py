@@ -1,0 +1,354 @@
+"""Multi-channel memory-system tests (the tentpole acceptance criteria):
+one compiled program regardless of channel count, per-channel + aggregate
+stats, per-channel trace audit with injected-violation sensitivity, the
+trace-driven frontend, and channel-aware DSE sweeps."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, FrontendConfig, ReplayStream,
+                        Simulator, channel_breakdown, peak_gbps,
+                        throughput_gbps)
+from repro.core import engine as E
+from repro.trace import audit, capture, to_replay
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 4-channel run compiles exactly once, per-channel stats
+# ---------------------------------------------------------------------------
+
+def test_four_channel_run_compiles_once():
+    E.RUN_CACHE.clear()
+    sim = Simulator("HBM3", "HBM3_16Gb", "HBM3_5200", channels=4)
+    t0 = E.TRACE_COUNT
+    stats = sim.run(3000, interval=1.0, read_ratio=1.0)
+    assert E.TRACE_COUNT - t0 == 1          # one jax trace for 4 channels
+    # load sweeps and re-runs reuse the same compiled program
+    sim.run(3000, interval=4.0, read_ratio=0.5)
+    Simulator("HBM3", "HBM3_16Gb", "HBM3_5200", channels=4).run(
+        3000, interval=2.0)
+    assert E.TRACE_COUNT - t0 == 1
+
+    # per-channel breakdown present, consistent with the aggregates
+    ch = stats.per_channel
+    assert ch.reads_done.shape == (4,)
+    assert ch.cmd_counts.shape == (4, sim.cspec.n_cmds)
+    assert int(ch.reads_done.sum()) == int(stats.reads_done)
+    assert int(ch.writes_done.sum()) == int(stats.writes_done)
+    np.testing.assert_array_equal(ch.cmd_counts.sum(axis=0),
+                                  stats.cmd_counts)
+    # the channel-interleaving mapper spreads traffic onto every channel
+    assert (ch.reads_done + ch.writes_done > 0).all()
+    bd = channel_breakdown(sim.cspec, stats)
+    assert set(bd) == {0, 1, 2, 3}
+    assert all(0 <= v["bus_util"] <= 1 for v in bd.values())
+
+
+def test_channel_count_splits_compile_cache():
+    E.RUN_CACHE.clear()
+    for c in (1, 2):
+        Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=c).run(200)
+    assert E.RUN_CACHE.misses == 2
+
+
+def test_multi_channel_scales_throughput():
+    """More channels => more aggregate bandwidth under a saturating load."""
+    tp = {}
+    for c in (1, 4):
+        sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=c,
+                        frontend=FrontendConfig(probes=False))
+        stats = sim.run(6000, interval=0.25, read_ratio=1.0)
+        tp[c] = throughput_gbps(sim.cspec, stats)
+        assert tp[c] <= peak_gbps(sim.cspec) * 1.001
+    assert tp[4] > 2.0 * tp[1], tp
+
+
+def test_single_channel_unchanged_shapes():
+    """channels=1 keeps the historical scalar-stats and [T, 2] trace
+    contract."""
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    stats, dense = sim.run(800, interval=4.0, trace=True)
+    assert stats.reads_done.shape == ()
+    assert stats.per_channel.reads_done.shape == (1,)
+    assert np.asarray(dense.cmd).shape == (800, 2)
+
+
+@pytest.mark.parametrize("std,org,tim", [
+    ("DDR4", "DDR4_8Gb_x8", "DDR4_2400R"),
+    ("LPDDR5", "LPDDR5_8Gb_x16", "LPDDR5_6400"),
+    ("HBM3", "HBM3_16Gb", "HBM3_5200"),
+])
+def test_earliest_table_matches_scalar(std, org, tim):
+    """The dense (n_cmds, n_banks) earliest table — the engine's hot path
+    — must agree entry-for-entry with the scalar `earliest_ready` the
+    oracle-parity tests validate."""
+    import jax.numpy as jnp
+
+    from repro.core import compile_spec
+    from repro.core import device as D
+
+    cspec = compile_spec(std, org, tim)
+    dp = D.dyn_params(cspec)
+    state = D.init_state(cspec)
+    rng = np.random.default_rng(11)
+    counts = cspec.level_counts
+    for _ in range(80):
+        sub = jnp.asarray([int(rng.integers(int(counts[i])))
+                           for i in range(1, len(counts))], jnp.int32)
+        cmd = int(rng.integers(cspec.n_cmds))
+        state = D.issue(cspec, dp, state, jnp.int32(cmd), sub,
+                        jnp.int32(int(rng.integers(64))),
+                        jnp.int32(int(rng.integers(5000))),
+                        jnp.asarray(True))
+    table = np.asarray(D.earliest_ready_table(cspec, dp, state))
+    assert table.shape == (cspec.n_cmds, cspec.n_banks)
+    for bank in range(cspec.n_banks):
+        sub = []
+        b = bank
+        for i in range(len(counts) - 1, 0, -1):
+            sub.append(b % int(counts[i]))
+            b //= int(counts[i])
+        sub = jnp.asarray(sub[::-1], jnp.int32)
+        for cmd in range(cspec.n_cmds):
+            want = int(D.earliest_ready(cspec, dp, state, jnp.int32(cmd),
+                                        sub))
+            assert table[cmd, bank] == want, (std, cmd, bank)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 2-channel capture -> per-channel audit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def two_channel_trace():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    mapper="RoBaRaCoCh")
+    _, dense = sim.run(4000, interval=1.0, read_ratio=1.0, trace=True)
+    tr = capture(sim.cspec, dense, controller=sim.controller,
+                 frontend=sim.frontend)
+    return sim, tr
+
+
+def test_two_channel_trace_audits_clean_per_channel(two_channel_trace):
+    sim, tr = two_channel_trace
+    assert np.asarray(tr.chan).max() == 1    # both channels saw commands
+    assert tr.meta["n_channels"] == 2
+    rep = audit(sim.cspec, tr)
+    assert rep.ok, [str(v) for v in rep.violations[:5]]
+    # explicit zero-violation entry for EVERY channel
+    assert rep.by_channel == {0: 0, 1: 0}
+    assert "ch0: 0" in rep.summary() and "ch1: 0" in rep.summary()
+
+
+def test_injected_cross_channel_violation_detected(two_channel_trace):
+    """Moving a channel-1 RD inside its own channel's nRCD window must be
+    flagged (with channel attribution), while the same-cycle traffic on
+    channel 0 stays clean — channels are audited independently."""
+    sim, tr = two_channel_trace
+    names = tr.cmd_names
+    i_act, i_rd = names.index("ACT"), names.index("RD")
+    nrcd = sim.cspec.timings["nRCD"]
+    a = int(np.nonzero((tr.cmd == i_act) & (tr.chan == 1))[0][0])
+    r = int(np.nonzero((tr.cmd == i_rd) & (tr.chan == 1)
+                       & (tr.bank == tr.bank[a])
+                       & (tr.clk > tr.clk[a]))[0][0])
+    clk = tr.clk.copy()
+    clk[r] = tr.clk[a] + nrcd - 1            # one cycle early on channel 1
+    order = np.argsort(clk, kind="stable")
+    bad = dataclasses.replace(
+        tr, clk=clk[order],
+        **{f: getattr(tr, f)[order]
+           for f in ("cmd", "bank", "row", "bus", "arrive", "hit_ready",
+                     "chan")})
+    rep = audit(sim.cspec, bad)
+    assert not rep.ok
+    assert rep.by_channel[1] > 0 and rep.by_channel[0] == 0
+    hit = [v for v in rep.violations if v.chan == 1 and v.cmd == "RD"]
+    assert hit and hit[0].slack == -1
+
+
+def test_same_cycle_same_bank_across_channels_not_flagged():
+    """An ACT on (ch0, bank0) and an ACT on (ch1, bank0) one cycle apart
+    would violate nRRD within one channel — across channels it is legal
+    parallelism and must NOT be flagged."""
+    from repro.trace import CommandTrace
+    cspec = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      channels=2).cspec
+    names = list(cspec.cmd_names)
+    i_act = names.index("ACT")
+    mk = lambda chans: CommandTrace(
+        clk=np.asarray([10, 11], np.int32),
+        cmd=np.asarray([i_act, i_act], np.int32),
+        bank=np.zeros(2, np.int32), row=np.asarray([3, 5], np.int32),
+        bus=np.zeros(2, np.int32), arrive=np.asarray([1, 2], np.int32),
+        hit_ready=np.zeros(2, np.int32),
+        chan=np.asarray(chans, np.int32), n_cycles=64, cmd_names=names,
+        meta={"n_channels": 2})
+    assert audit(cspec, mk([0, 1]), check_fingerprint=False).ok
+    same = audit(cspec, mk([0, 0]), check_fingerprint=False)
+    assert not same.ok                       # same channel: nRRD violated
+    assert same.by_channel[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven frontend (third request source)
+# ---------------------------------------------------------------------------
+
+def test_trace_driven_frontend_from_synthetic_addresses():
+    cspec2 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                       channels=2).cspec
+    rng = np.random.default_rng(3)
+    addrs = rng.integers(0, 1 << 24, 4000).astype(np.int64) \
+        * cspec2.access_bytes
+    rs = ReplayStream.from_addresses(cspec2, addrs,
+                                     is_write=rng.random(4000) < 0.25)
+    assert len(rs) == 4000 and set(np.unique(rs.chan)) == {0, 1}
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=rs)
+    stats = sim.run(4000, interval=2.0)
+    assert int(stats.reads_done) > 100 and int(stats.writes_done) > 30
+    assert (stats.per_channel.reads_done > 0).all()
+
+
+def test_trace_driven_frontend_from_captured_trace():
+    """Capture a streaming run, derive a ReplayStream, re-drive the memory
+    system with it — the replayed run must serve requests on the same
+    channels the capture used and audit clean."""
+    src = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    mapper="RoBaRaCoCh")
+    _, dense = src.run(2500, interval=2.0, read_ratio=0.7, trace=True)
+    tr = capture(src.cspec, dense, controller=src.controller,
+                 frontend=src.frontend)
+    rs = to_replay(tr, src.cspec)
+    assert set(np.unique(rs.chan)) == {0, 1}
+
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=rs)
+    stats, dense2 = sim.run(2500, interval=2.0, trace=True)
+    assert int(stats.reads_done) + int(stats.writes_done) > 100
+    tr2 = capture(sim.cspec, dense2, controller=sim.controller,
+                  frontend=sim.frontend)
+    assert audit(sim.cspec, tr2).ok
+
+
+def test_replay_fingerprint_keys_compile_cache():
+    cspec2 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                       channels=2).cspec
+    mk = lambda seed: ReplayStream.from_addresses(
+        cspec2, np.random.default_rng(seed).integers(0, 1 << 20, 100) * 8)
+    a, b, a2 = mk(0), mk(1), mk(0)
+    assert a.fingerprint == a2.fingerprint != b.fingerprint
+    fcfg = FrontendConfig(pattern="trace", probes=False)
+    cc = ControllerConfig()
+    k = lambda rs: E.run_key(cspec2, cc, fcfg, 100, False, False, rs)
+    assert k(a) == k(a2) and k(a) != k(b)
+
+
+def test_trace_pattern_without_replay_errors():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(pattern="trace"))
+    with pytest.raises(ValueError, match="ReplayStream"):
+        sim.run(100)
+
+
+def test_replay_channel_out_of_range_rejected():
+    """A replay stream captured on more channels than the target system
+    has would livelock (its requests route nowhere) — reject loudly."""
+    cspec4 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                       channels=4).cspec
+    rs4 = ReplayStream.from_addresses(
+        cspec4, np.arange(256, dtype=np.int64) * cspec4.access_bytes)
+    assert int(rs4.chan.max()) == 3
+    sim2 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                     frontend=FrontendConfig(pattern="trace",
+                                             probes=False),
+                     replay=rs4)
+    with pytest.raises(ValueError, match="channel 3"):
+        sim2.run(100)
+
+
+def test_default_arg_bound_predicates_keyed_by_value():
+    """The `def pred(..., t=t)` binding idiom must key the cache by the
+    bound value, exactly like closure binding."""
+    def mk(t):
+        def pred(cspec, ctx, t=t):
+            return ctx.cand_row < t
+        return pred
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    key = lambda t: E.run_key(
+        sim.cspec, ControllerConfig(extra_predicates=(mk(t),)),
+        sim.frontend, 100, False, False)
+    assert key(5) == key(5)
+    assert key(5) != key(7)
+
+
+def test_empty_replay_rejected():
+    cspec = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R").cspec
+    rs = ReplayStream.from_addresses(cspec, np.asarray([], np.int64))
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=rs)
+    with pytest.raises(ValueError, match="empty"):
+        sim.run(100)
+
+
+def test_distinct_lambdas_get_distinct_cache_keys():
+    """Two different inline lambdas share the '<lambda>' qualname and an
+    empty closure — the cache key must still distinguish them (bytecode
+    identity), or the second run would reuse the wrong predicate."""
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    a = ControllerConfig(extra_predicates=(lambda c, x: x.cand_row < 5,))
+    b = ControllerConfig(extra_predicates=(lambda c, x: x.cand_row >= 5,))
+    key = lambda cc: E.run_key(sim.cspec, cc, sim.frontend, 100, False,
+                               False)
+    assert key(a) != key(b)
+
+
+def test_single_channel_fingerprint_unchanged():
+    """Pre-multi-channel trace artifacts store single-channel
+    fingerprints; the channel count may only extend the fingerprint when
+    it is >1."""
+    c1 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R").cspec
+    c2 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2).cspec
+    f1, f2 = E.spec_fingerprint(c1), E.spec_fingerprint(c2)
+    assert f1 != f2
+    assert len(f2) == len(f1) + 1 and f2[:len(f1)] == f1
+
+
+# ---------------------------------------------------------------------------
+# Channel-aware DSE sweeps
+# ---------------------------------------------------------------------------
+
+def test_sweep_channels_and_mappers_first_class():
+    from repro.dse import SweepSpec, execute
+    spec = SweepSpec(systems=("DDR4",), intervals=(8.0, 2.0),
+                     read_ratios=(1.0,), channels=(1, 2),
+                     mappers=("RoBaRaCoCh", "RoCoBaRaCh"), n_cycles=600)
+    assert spec.grid_shape == (1, 1, 2, 2, 2, 1)
+    res = execute(spec, cache=E.RunCache())
+    # one compiled program per (channels, mapper) combination
+    assert res.meta["n_groups"] == 4
+    assert res.meta["compile_cache_misses"] == 4
+    chans = {pt.n_channels for pt in res.points}
+    maps = {pt.mapper for pt in res.points}
+    assert chans == {1, 2} and maps == {"RoBaRaCoCh", "RoCoBaRaCh"}
+    # curves split by channel count and mapper: 4 series of 2 load points
+    cvs = res.curves()
+    assert len(cvs) == 4
+    assert {cv.n_channels for cv in cvs} == {1, 2}
+    # 2-channel peak is twice the 1-channel peak
+    pk = {cv.n_channels: cv.peak_gbps for cv in cvs}
+    assert abs(pk[2] - 2 * pk[1]) < 1e-9
+
+
+def test_sweep_result_roundtrip_preserves_channels(tmp_path):
+    from repro.dse import SweepResult, SweepSpec, execute
+    spec = SweepSpec(systems=("DDR4",), intervals=(4.0,), read_ratios=(1.0,),
+                     channels=(2,), n_cycles=300)
+    res = execute(spec, cache=E.RunCache())
+    back = SweepResult.load(res.save(str(tmp_path / "s")))
+    assert back.points[0].n_channels == 2
+    assert back.points[0].mapper == res.points[0].mapper

@@ -18,7 +18,7 @@ def test_expand_full_cartesian_grid():
         intervals=(32.0, 4.0, 1.0), read_ratios=(1.0, 0.5),
         n_cycles=1000)
     pts = spec.expand()
-    assert spec.grid_shape == (2, 2, 3, 2)
+    assert spec.grid_shape == (2, 2, 1, 1, 3, 2)
     assert len(pts) == spec.n_points == 24
     combos = {(p.system.standard, p.controller.scheduler, p.interval,
                p.read_ratio) for p in pts}
@@ -148,6 +148,35 @@ def test_curves_split_distinct_controllers_sharing_scheduler():
     assert len(cvs) == 2
     for cv in cvs:
         assert list(cv.intervals) == [16.0, 2.0]
+
+
+def _make_threshold_predicate(threshold):
+    """Factory used by the extra-predicate cache-key regression test —
+    module-level so two calls yield distinct-but-equal closures."""
+    def pred(cspec, ctx):
+        return ctx.cand_row < threshold
+    return pred
+
+
+def test_extra_predicate_cache_key_by_value():
+    """Regression: `_freeze` used to hash `extra_predicates` callables by
+    identity, so two equal configs built from separate factory calls never
+    shared a cache entry.  Callables now freeze to qualname + closure
+    constants: equal closures -> equal keys, different constants -> new
+    key."""
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    mk = lambda t: ControllerConfig(
+        extra_predicates=(_make_threshold_predicate(t),))
+    key = lambda cc: E.run_key(sim.cspec, cc, sim.frontend, 300, False,
+                               False)
+    assert key(mk(5)) == key(mk(5))          # same constants: shared entry
+    assert key(mk(5)) != key(mk(7))          # different closure: distinct
+    # end-to-end: the second Simulator with an equal lambda is a cache hit
+    E.RUN_CACHE.clear()
+    Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", controller=mk(5)).run(200)
+    assert E.RUN_CACHE.misses == 1
+    Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", controller=mk(5)).run(200)
+    assert E.RUN_CACHE.misses == 1 and E.RUN_CACHE.hits >= 1
 
 
 def test_knee_index_edges():
