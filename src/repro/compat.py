@@ -1,0 +1,71 @@
+"""Version-compatibility shims for the installed jax.
+
+``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) moved/disappeared across jax releases: new jax exposes
+the enum and accepts the kwarg, while the jax pinned in some environments
+has neither.  Call :func:`ensure_jax_sharding_compat` before building
+meshes with ``axis_types`` — production code (``repro.launch.mesh``) and
+the fault-tolerance layer (``repro.runtime.fault``) invoke it at import,
+so test code written against the new API runs unmodified on both.
+
+The shim is additive only: on a jax that already has the API it does
+nothing.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+_installed = False
+
+
+def ensure_jax_sharding_compat() -> None:
+    """Install ``jax.sharding.AxisType`` + ``axis_types=``-tolerant
+    ``jax.make_mesh`` on jax versions that predate them.  Idempotent."""
+    global _installed
+    if _installed:
+        return
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            """Stand-in for ``jax.sharding.AxisType`` (old jax has only
+            implicitly 'auto' mesh axes, so every member degrades to
+            that behavior)."""
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" not in params:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None,
+                      **kwargs):
+            # old jax: every mesh axis is implicitly Auto — dropping the
+            # kwarg preserves the semantics callers ask for
+            return orig(axis_shapes, axis_names, *args, **kwargs)
+
+        jax.make_mesh = make_mesh
+
+    # Compiled.cost_analysis() returned a one-element list of dicts on old
+    # jax; new jax returns the dict itself.  Normalize to the new contract.
+    try:
+        compiled_cls = jax.stages.Compiled
+        orig_ca = compiled_cls.cost_analysis
+
+        @functools.wraps(orig_ca)
+        def cost_analysis(self):
+            out = orig_ca(self)
+            if isinstance(out, list):
+                return out[0] if out else {}
+            return out
+
+        compiled_cls.cost_analysis = cost_analysis
+    except AttributeError:
+        pass
+    _installed = True

@@ -72,6 +72,18 @@ class CompiledSpec:
     ct_win: np.ndarray
     max_window: int
 
+    # windowed-ring sub-table: deep issue history is kept ONLY for the few
+    # (prev_cmd, level) pairs with a window>1 constraint (tFAW's ACT ring);
+    # every other constraint reads the dense (num_nodes, n_cmds) last-issue
+    # table.  See build_windowed_rings for the construction.
+    ring_pairs: list            # [(cmd, level, entry_offset, n_nodes), ...]
+    ring_cmd: np.ndarray        # (R,) per-entry prev-command id
+    ring_level: np.ndarray      # (R,) per-entry hierarchy level
+    ring_node: np.ndarray       # (R,) per-entry global node id
+    ct_ring: np.ndarray         # (C,) per-constraint ring entry base, -1=dense
+    n_ring: int                 # total ring entries R (0: no windowed pairs)
+    ring_depth: int             # max window among allocated pairs (>= 1)
+
     timings: dict                   # resolved preset (cycles)
     tCK_ps: int
     read_latency: int               # RD issue -> data completion
@@ -104,6 +116,59 @@ class CompiledSpec:
         for i in range(len(counts) - 2, -1, -1):
             strides[i] = strides[i + 1] * counts[i + 1]
         return strides
+
+
+def build_windowed_rings(ct_prev, ct_level, ct_win, cmd_scope,
+                         level_counts, level_offsets) -> dict:
+    """Plan the compact windowed-ring layout for a constraint table.
+
+    Only (prev_cmd, level) pairs referenced by a ``window > 1`` constraint
+    — and reachable, i.e. ``level <= cmd_scope[prev_cmd]`` so the command
+    actually stamps that level — get a deep issue-history ring.  Each pair
+    owns one contiguous block of entries, one entry per level-``level``
+    node, so the engine can read a whole pair with a static slice.
+
+    Returns the ``ring_*`` / ``ct_ring`` / ``n_ring`` / ``ring_depth``
+    fields of :class:`CompiledSpec` as a dict.
+    """
+    node_counts = np.cumprod(np.asarray(level_counts, np.int64))
+    pairs: dict = {}            # (cmd, level) -> [entry_offset, depth]
+    n_ring = 0
+    for i in range(len(ct_prev)):
+        if int(ct_win[i]) <= 1:
+            continue
+        p, level = int(ct_prev[i]), int(ct_level[i])
+        if level > int(cmd_scope[p]):
+            continue            # the command never stamps this level
+        key = (p, level)
+        if key not in pairs:
+            pairs[key] = [n_ring, int(ct_win[i])]
+            n_ring += int(node_counts[level])
+        else:
+            pairs[key][1] = max(pairs[key][1], int(ct_win[i]))
+    ring_depth = max((d for _, d in pairs.values()), default=1)
+
+    ct_ring = np.full(len(ct_prev), -1, np.int32)
+    for i in range(len(ct_prev)):
+        key = (int(ct_prev[i]), int(ct_level[i]))
+        if int(ct_win[i]) > 1 and key in pairs:
+            ct_ring[i] = pairs[key][0]
+
+    ring_cmd = np.zeros(n_ring, np.int32)
+    ring_level = np.zeros(n_ring, np.int32)
+    ring_node = np.zeros(n_ring, np.int32)
+    ring_pairs = []
+    for (p, level), (off, _depth) in sorted(pairs.items(),
+                                            key=lambda kv: kv[1][0]):
+        n_l = int(node_counts[level])
+        ring_pairs.append((p, level, off, n_l))
+        ring_cmd[off:off + n_l] = p
+        ring_level[off:off + n_l] = level
+        ring_node[off:off + n_l] = (int(level_offsets[level])
+                                    + np.arange(n_l, dtype=np.int32))
+    return dict(ring_pairs=ring_pairs, ring_cmd=ring_cmd,
+                ring_level=ring_level, ring_node=ring_node, ct_ring=ct_ring,
+                n_ring=int(n_ring), ring_depth=int(ring_depth))
 
 
 def compile_spec(standard, org_preset: str, timing_preset: str,
@@ -153,6 +218,8 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
     ct_lat = np.array(lat, dtype=np.int32)
     ct_win = np.array(win, dtype=np.int32)
     max_window = int(ct_win.max()) if len(win) else 1
+    rings = build_windowed_rings(ct_prev, ct_level, ct_win, scope,
+                                 counts, offsets)
 
     def cid(name):
         return cmd_names.index(name) if name in cmd_names else -1
@@ -168,7 +235,7 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
         n_refresh_units=n_refresh_units, rows=org.rows, columns=org.columns,
         cmd_names=cmd_names, n_cmds=n_cmds, cmd_kind=kind, cmd_scope=scope,
         cmd_fx=fx, ct_prev=ct_prev, ct_next=ct_next, ct_level=ct_level,
-        ct_lat=ct_lat, ct_win=ct_win, max_window=max_window,
+        ct_lat=ct_lat, ct_win=ct_win, max_window=max_window, **rings,
         timings=timings, tCK_ps=timings["tCK_ps"], read_latency=read_latency,
         access_bytes=access_bytes,
         peak_bytes_per_cycle=access_bytes / nBL,

@@ -193,6 +193,10 @@ class ControllerConfig:
     refresh_enabled: bool = True
     # urgency margin: refresh becomes *blocking* this many cycles past due
     refresh_urgent_margin: int = 4
+    # stagger the initial refresh phase across channels (offset c*nREFI/C,
+    # as real controllers do) so an all-channel REF never lands on one
+    # cycle; False reproduces the historical in-phase behavior
+    refresh_stagger: bool = True
     blockhammer_threshold: int = 0     # 0 = disabled
     prac_threshold: int = 0            # 0 = disabled
     extra_predicates: tuple = ()       # user predicates (cspec, ctx)->bool[Q]

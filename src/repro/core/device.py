@@ -8,9 +8,19 @@ function `(tables, state, ...) -> ...` suitable for `jax.jit`, `jax.vmap`
 State encoding
 --------------
 row_state[bank]  : -1 closed, -2 activating (split ACT-1 issued), else open row
-last_issue[node, cmd, w] : ring buffer (most recent first) of issue clocks
+last_issue[node, cmd] : most-recent issue clock — the dense table every
+                   window=1 constraint (i.e. almost all of them) reads
+win_ring[e, w]   : issue-clock history (most recent first) ONLY for the few
+                   (prev_cmd, level) pairs with a window>1 constraint
+                   (tFAW's ACT ring); entry layout is planned at spec
+                   compile time (``CompiledSpec.ring_*`` / ``ct_ring``)
 clock_until[ru]  : WCK/RCK data clock active until this cycle (exclusive)
 last_ref[ru]     : last REFab issue clock per refresh unit
+
+Splitting the deep history out of the per-(node, cmd) state shrinks the
+``lax.scan`` carry ~4x at DDR5/HBM3 window depths — the whole timing state
+is what every cycle of every channel of every batched design point carries,
+so its footprint is the engine's cache-pressure knob.
 """
 from __future__ import annotations
 
@@ -49,7 +59,8 @@ def dyn_params(cspec: CompiledSpec) -> DynParams:
 
 
 class DeviceState(NamedTuple):
-    last_issue: jnp.ndarray      # (num_nodes, n_cmds, W) int32
+    last_issue: jnp.ndarray      # (num_nodes, n_cmds) int32 — window=1 table
+    win_ring: jnp.ndarray        # (max(n_ring,1), ring_depth) int32
     row_state: jnp.ndarray       # (n_banks,) int32
     act1_row: jnp.ndarray        # (n_banks,) int32
     act1_clk: jnp.ndarray        # (n_banks,) int32
@@ -59,14 +70,31 @@ class DeviceState(NamedTuple):
 
 def init_state(cspec: CompiledSpec) -> DeviceState:
     return DeviceState(
-        last_issue=jnp.full((cspec.num_nodes, cspec.n_cmds, cspec.max_window),
-                            NEG, jnp.int32),
+        last_issue=jnp.full((cspec.num_nodes, cspec.n_cmds), NEG, jnp.int32),
+        # a standard with no windowed constraints keeps a 1x1 dummy ring so
+        # the pytree structure (and gather shapes) stay uniform
+        win_ring=jnp.full((max(cspec.n_ring, 1), cspec.ring_depth),
+                          NEG, jnp.int32),
         row_state=jnp.full((cspec.n_banks,), ROW_CLOSED, jnp.int32),
         act1_row=jnp.zeros((cspec.n_banks,), jnp.int32),
         act1_clk=jnp.full((cspec.n_banks,), NEG, jnp.int32),
         clock_until=jnp.zeros((cspec.n_refresh_units,), jnp.int32),
         last_ref=jnp.zeros((cspec.n_refresh_units,), jnp.int32),
     )
+
+
+def carry_nbytes(cspec: CompiledSpec) -> int:
+    """Per-channel scan-carry bytes of the timing state (the cache-pressure
+    number the windowed-ring split optimizes)."""
+    state = init_state(cspec)
+    return sum(int(np.prod(a.shape)) * 4
+               for a in (state.last_issue, state.win_ring))
+
+
+def dense_ring_nbytes(cspec: CompiledSpec) -> int:
+    """What the pre-split layout — a ``max_window``-deep ring for every
+    (node, cmd) pair — would carry.  Kept as the benchmark baseline."""
+    return cspec.num_nodes * cspec.n_cmds * cspec.max_window * 4
 
 
 # --------------------------------------------------------------------------
@@ -112,9 +140,20 @@ def earliest_ready(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
     ct_prev = jnp.asarray(cspec.ct_prev)             # (C,)
     ct_next = jnp.asarray(cspec.ct_next)
     ct_level = jnp.asarray(cspec.ct_level)
-    ct_win = jnp.asarray(cspec.ct_win)
     node = nodes[ct_level]                           # (C,)
-    t_prev = state.last_issue[node, ct_prev, ct_win - 1]
+    t_prev = state.last_issue[node, ct_prev]
+    if cspec.n_ring:
+        # windowed rows read the pair's ring entry for this level node;
+        # rows with ct_ring == -1 (window=1, or a window the command never
+        # stamps) keep the dense-table value / NEG
+        ct_ring = jnp.asarray(cspec.ct_ring)
+        lvl_off = jnp.asarray(np.asarray(cspec.level_offsets,
+                                         np.int32)[cspec.ct_level])
+        ridx = jnp.clip(ct_ring + node - lvl_off, 0, cspec.n_ring - 1)
+        t_ring = state.win_ring[ridx, jnp.asarray(cspec.ct_win) - 1]
+        t_prev = jnp.where(ct_ring >= 0, t_ring, t_prev)
+    # window>1 rows at a level the command never stamps have ct_ring == -1
+    # AND a never-written dense slot, so they correctly stay NEG
     allowed = jnp.where((ct_next == cmd) & (t_prev > NEG),
                         t_prev + dp.ct_lat, NEG)
     return jnp.max(allowed, initial=NEG)
@@ -146,8 +185,15 @@ def earliest_ready_table(cspec: CompiledSpec, dp: DynParams,
             continue        # preceding command never stamps this level
         n_l = int(node_counts[level])
         off = int(offs[level])
-        # static slice: the level's nodes for (prev cmd, window position)
-        t_nodes = state.last_issue[off:off + n_l, p, w]          # (n_l,)
+        if w == 0:
+            # static slice of the dense table: the level's nodes for prev
+            t_nodes = state.last_issue[off:off + n_l, p]         # (n_l,)
+        else:
+            # windowed constraint: the pair's contiguous ring block holds
+            # exactly this level's nodes, so the read stays a static slice
+            ro = int(cspec.ct_ring[i])
+            assert ro >= 0, "reachable window>1 constraint without a ring"
+            t_nodes = state.win_ring[ro:ro + n_l, w]             # (n_l,)
         t_banks = jnp.repeat(t_nodes, n_banks // n_l)            # (n_banks,)
         allowed = jnp.where(t_banks > NEG, t_banks + dp.ct_lat[i], NEG)
         acc[f] = allowed if acc[f] is None else jnp.maximum(acc[f], allowed)
@@ -215,23 +261,33 @@ def issue(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
     select over the full array) instead of a scatter: scatters serialize
     under the engine's (batch x channel) vmap nesting on CPU/TPU backends,
     while these elementwise forms vectorize across all batch dimensions.
-    The arrays are small (nodes x cmds x window), so the extra flops are
-    noise next to the removed gather/scatter loops.
+    The arrays are small (nodes x cmds, plus the tiny windowed ring), so
+    the extra flops are noise next to the removed gather/scatter loops.
     """
     nodes = node_per_level(cspec, addr_sub)                    # (L,)
     scope = jnp.asarray(cspec.cmd_scope)[cmd]
     lvl_idx = jnp.arange(len(cspec.levels), dtype=jnp.int32)
     upd_mask = (lvl_idx <= scope) & enable                     # ancestors+self
 
-    li = state.last_issue                                      # (N, cmds, W)
+    li = state.last_issue                                      # (N, cmds)
     node_ids = jnp.arange(cspec.num_nodes, dtype=jnp.int32)
     node_hit = jnp.any((node_ids[:, None] == nodes[None, :])
                        & upd_mask[None, :], axis=1)            # (N,)
     cmd_hit = jnp.arange(cspec.n_cmds, dtype=jnp.int32) == cmd  # (cmds,)
-    shifted = jnp.concatenate(
-        [jnp.full_like(li[:, :, :1], clk), li[:, :, :-1]], axis=2)
-    li = jnp.where((node_hit[:, None] & cmd_hit[None, :])[:, :, None],
-                   shifted, li)
+    li = jnp.where(node_hit[:, None] & cmd_hit[None, :], clk, li)
+
+    ring = state.win_ring
+    if cspec.n_ring:
+        # shift-insert only the ring entries owned by (cmd, its level node);
+        # a ring pair exists only for levels the command stamps, so the
+        # scope mask is implied by ring_cmd == cmd
+        r_cmd = jnp.asarray(cspec.ring_cmd)
+        r_node = jnp.asarray(cspec.ring_node)
+        r_level = jnp.asarray(cspec.ring_level)
+        entry_hit = (r_cmd == cmd) & (nodes[r_level] == r_node) & enable
+        shifted = jnp.concatenate(
+            [jnp.full_like(ring[:, :1], clk), ring[:, :-1]], axis=1)
+        ring = jnp.where(entry_hit[:, None], shifted, ring)
 
     fx = jnp.asarray(cspec.cmd_fx)[cmd]
     bank = flat_bank(cspec, addr_sub)
@@ -267,5 +323,6 @@ def issue(cspec: CompiledSpec, dp: DynParams, state: DeviceState,
     lr = jnp.where((cmd == jnp.int32(cspec.id_REFab)) & enable & ru_hit,
                    clk, lr)
 
-    return DeviceState(last_issue=li, row_state=rs, act1_row=a1r,
-                       act1_clk=a1c, clock_until=cu, last_ref=lr)
+    return DeviceState(last_issue=li, win_ring=ring, row_state=rs,
+                       act1_row=a1r, act1_clk=a1c, clock_until=cu,
+                       last_ref=lr)

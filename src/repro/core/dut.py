@@ -48,8 +48,12 @@ class DeviceUnderTest:
                                                 timing_overrides)
         cs = self.cspec
         self.timings = cs.timings
-        self.last_issue = np.full((cs.num_nodes, cs.n_cmds, cs.max_window),
-                                  NEG, np.int64)
+        # mirror of the engine's split timing state: dense most-recent
+        # table + compact windowed ring (DUT-replay cross-checks must see
+        # the exact same layout semantics)
+        self.last_issue = np.full((cs.num_nodes, cs.n_cmds), NEG, np.int64)
+        self.win_ring = np.full((max(cs.n_ring, 1), cs.ring_depth),
+                                NEG, np.int64)
         self.row_state = np.full((cs.n_banks,), -1, np.int64)
         self.act1_row = np.zeros((cs.n_banks,), np.int64)
         self.act1_clk = np.full((cs.n_banks,), NEG, np.int64)
@@ -94,7 +98,14 @@ class DeviceUnderTest:
             if cs.ct_next[i] != c:
                 continue
             node = nodes[cs.ct_level[i]]
-            prev_t = self.last_issue[node, cs.ct_prev[i], cs.ct_win[i] - 1]
+            if cs.ct_win[i] > 1:
+                ro = int(cs.ct_ring[i])
+                if ro < 0:
+                    continue    # window the preceding command never stamps
+                e = ro + node - int(cs.level_offsets[cs.ct_level[i]])
+                prev_t = self.win_ring[e, cs.ct_win[i] - 1]
+            else:
+                prev_t = self.last_issue[node, cs.ct_prev[i]]
             if prev_t > NEG:
                 t = max(t, prev_t + int(cs.ct_lat[i]))
         return t
@@ -151,7 +162,12 @@ class DeviceUnderTest:
         nodes = self._nodes(addr)
         scope = cs.cmd_scope[c]
         for lvl in range(scope + 1):
-            ring = self.last_issue[nodes[lvl], c]
+            self.last_issue[nodes[lvl], c] = clk
+        for pcmd, plvl, eoff, _n_l in cs.ring_pairs:
+            if pcmd != c:       # pair levels are <= the command's scope
+                continue
+            e = eoff + nodes[plvl] - int(cs.level_offsets[plvl])
+            ring = self.win_ring[e]
             ring[1:] = ring[:-1]
             ring[0] = clk
         fx = int(cs.cmd_fx[c])

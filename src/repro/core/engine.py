@@ -316,6 +316,12 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
     if replay is not None:
         if len(replay) == 0:
             raise ValueError("replay stream is empty — nothing to replay")
+        if replay.arrive is not None \
+                and np.any(np.diff(np.asarray(replay.arrive)) < 0):
+            raise ValueError(
+                "replay arrive column must be non-decreasing (injection "
+                "is index-ordered) — sort the stream into arrival order "
+                "as trace.to_replay does")
         top = int(np.max(replay.chan))
         if top >= nch or int(np.min(replay.chan)) < 0:
             raise ValueError(
@@ -327,6 +333,9 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
         chan=jnp.asarray(replay.chan), sub=jnp.asarray(replay.sub),
         row=jnp.asarray(replay.row), col=jnp.asarray(replay.col),
         is_write=jnp.asarray(replay.is_write),
+        # arrive stays host-side numpy: the frontend derives static pacing
+        # scalars (base / span / wrap gap) from it at trace time
+        arrive=replay.arrive,
         fingerprint=replay.fingerprint)
 
     def cycle(sim: SimState, _, dp, fp):
@@ -372,6 +381,16 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
         cs1 = C.init_ctrl_state(cspec, ccfg.queue_depth)
         css = jax.tree.map(lambda a: jnp.broadcast_to(a, (nch,) + a.shape),
                            cs1)
+        if ccfg.refresh_stagger and nch > 1:
+            # phase-shift each channel's refresh epoch by c*nREFI/C (real
+            # controllers stagger REF so the channels' refresh windows —
+            # and their bandwidth dips — never align); channel 0 keeps the
+            # historical phase, so single-channel runs are bit-identical
+            nrefi = int(cspec.timings["nREFI"])
+            offs = jnp.asarray([-(c * nrefi // nch) for c in range(nch)],
+                               jnp.int32)
+            css = css._replace(dev=css.dev._replace(
+                last_ref=css.dev.last_ref + offs[:, None]))
         init = SimState(cs=css, fs=F.init_front(),
                         ch=_zero_channel_stats(cspec), clk=jnp.int32(0))
         init = init._replace(fs=init.fs._replace(rng=seed | jnp.uint32(1)))

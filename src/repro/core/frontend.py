@@ -109,22 +109,31 @@ class ReplayStream:
 
     Columns are host-side numpy int32 arrays of equal length N: target
     ``chan``, per-channel ``sub`` level indices ``(N, L-1)``, ``row``,
-    ``col``, and ``is_write``.  The engine closes over them as constants;
-    ``fingerprint`` (a digest of the columns) keys the compile cache so
-    two different streams never alias one compiled program.
+    ``col``, and ``is_write``.  ``arrive`` (optional) carries the captured
+    arrival clock of each request: when present, replay honors the
+    captured inter-arrival gaps instead of the streaming interval — the
+    deltas (and, on wrap-around, the stream's span) pace the injection, so
+    a capture→replay round trip preserves the traffic's time structure.
+    The engine closes over the columns as constants; ``fingerprint`` (a
+    digest of the columns, ``arrive`` included when present) keys the
+    compile cache so two different streams never alias one compiled
+    program.
     """
     chan: np.ndarray
     sub: np.ndarray
     row: np.ndarray
     col: np.ndarray
     is_write: np.ndarray
+    arrive: np.ndarray | None = None
     fingerprint: str = ""
 
     def __post_init__(self):
         if not self.fingerprint:
             h = hashlib.sha256()
-            for a in (self.chan, self.sub, self.row, self.col,
-                      self.is_write):
+            cols = (self.chan, self.sub, self.row, self.col, self.is_write)
+            if self.arrive is not None:
+                cols = cols + (self.arrive,)
+            for a in cols:
                 h.update(np.ascontiguousarray(a, np.int32).tobytes())
             object.__setattr__(self, "fingerprint", h.hexdigest()[:16])
 
@@ -234,18 +243,33 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
         probe_busy = fs.probe_busy
 
     if cfg.stream:
+        if cfg.pattern == "trace" and replay is None:
+            raise ValueError('pattern="trace" needs a ReplayStream '
+                             "(Simulator(..., replay=...))")
+        paced_by_arrive = (cfg.pattern == "trace"
+                           and replay.arrive is not None)
         accum = jnp.minimum(accum + jnp.int32(256),
                             jnp.int32(cfg.max_backlog_fp))
         want = accum >= fp.interval_fp
         if cfg.pattern == "trace":
-            if replay is None:
-                raise ValueError('pattern="trace" needs a ReplayStream '
-                                 "(Simulator(..., replay=...))")
             n = replay.chan.shape[0]
             idx = seq % jnp.int32(n)
             chan, sub = replay.chan[idx], replay.sub[idx]
             row, col = replay.row[idx], replay.col[idx]
             is_write = replay.is_write[idx] != 0
+            if paced_by_arrive:
+                # honor captured inter-arrival gaps: request k is due at
+                # its captured arrival clock (rebased to the stream start);
+                # when the stream wraps, later laps repeat the same gap
+                # pattern shifted by the stream's span.  ``arrive`` is
+                # host-side numpy, so the pacing scalars are static.
+                arr_np = np.asarray(replay.arrive)
+                base = int(arr_np[0])
+                span = int(arr_np[-1]) - base
+                gap = max(span // max(int(n) - 1, 1), 1)
+                arr = jnp.asarray(arr_np - base, jnp.int32)
+                lap = seq // jnp.int32(n)
+                want = clk >= arr[idx] + lap * jnp.int32(span + gap)
         else:
             if cfg.pattern == "sequential":
                 chan, sub, row, col = _seq_addr(cspec, layout, seq)
@@ -256,7 +280,8 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
                         ) >= fp.read_ratio_fp
         queues, ok = route_insert(queues, chan, is_write, jnp.asarray(False),
                                   sub, row, col, clk, want)
-        accum = jnp.where(ok, accum - fp.interval_fp, accum)
+        if not paced_by_arrive:
+            accum = jnp.where(ok, accum - fp.interval_fp, accum)
         seq = seq + ok.astype(jnp.int32)
         sent = sent + ok.astype(jnp.int32)
         dropped = dropped + (want & ~ok).astype(jnp.int32)

@@ -30,6 +30,7 @@ class TimingKeys(NamedTuple):
     key_level: np.ndarray    # (K,)
     key_cmd: np.ndarray      # (K,)
     key_win: np.ndarray      # (K,)
+    key_ring: np.ndarray     # (K,) windowed-ring entry base, -1 = dense
     ct_key: np.ndarray       # (C,) constraint -> key index
 
 
@@ -48,10 +49,15 @@ def build_keys(cspec: CompiledSpec) -> TimingKeys:
              int(cspec.ct_win[i]))
         ct_key[i] = triples.setdefault(t, len(triples))
     keys = sorted(triples, key=triples.get)
+    # windowed keys resolve through the compact ring planned by the spec
+    # compiler; ordinary keys read the dense (node, cmd) last-issue table
+    pair_off = {(p, lvl): off for p, lvl, off, _ in cspec.ring_pairs}
     return TimingKeys(
         key_level=np.array([k[0] for k in keys], np.int32),
         key_cmd=np.array([k[1] for k in keys], np.int32),
         key_win=np.array([k[2] for k in keys], np.int32),
+        key_ring=np.array([pair_off.get((k[1], k[0]), -1) if k[2] > 1
+                           else -1 for k in keys], np.int32),
         ct_key=ct_key)
 
 
@@ -67,12 +73,24 @@ def build_A(cspec: CompiledSpec, keys: TimingKeys, ct_lat) -> jnp.ndarray:
 
 def gather_T(cspec: CompiledSpec, keys: TimingKeys, state: D.DeviceState,
              subs: jnp.ndarray) -> jnp.ndarray:
-    """T[q, k] = last_issue[node(q, level_k), cmd_k, win_k-1] for all slots."""
+    """T[q, k]: key_k's issue timestamp at slot q's level-``level_k`` node —
+    the dense last-issue table for window=1 keys, the windowed ring for
+    window>1 keys (split state layout, see ``core.device``)."""
     nodes = jax.vmap(functools.partial(D.node_per_level, cspec))(subs)  # (Q, L)
     kl = jnp.asarray(keys.key_level)
     kc = jnp.asarray(keys.key_cmd)
-    kw = jnp.asarray(keys.key_win) - 1
-    T = state.last_issue[nodes[:, kl], kc[None, :], kw[None, :]]
+    T = state.last_issue[nodes[:, kl], kc[None, :]]             # (Q, K)
+    if np.any(keys.key_ring >= 0):
+        kr = jnp.asarray(keys.key_ring)
+        kw = jnp.asarray(keys.key_win) - 1
+        lvl_off = jnp.asarray(
+            np.asarray(cspec.level_offsets, np.int32)[keys.key_level])
+        ridx = jnp.clip(kr[None, :] + nodes[:, kl] - lvl_off[None, :],
+                        0, cspec.n_ring - 1)
+        T = jnp.where((kr >= 0)[None, :], state.win_ring[ridx, kw[None, :]],
+                      T)
+    # a window>1 key the command never stamps (key_ring == -1) falls back
+    # to a dense slot that is never written at that level, i.e. stays NEG
     # never-issued slots map to the max-plus identity so that `ts + lat`
     # cannot surface as a bogus finite bound (matches engine semantics)
     return jnp.where(T <= NEG, jnp.float32(-3e38), T.astype(jnp.float32))

@@ -213,10 +213,12 @@ def capture(cspec: CompiledSpec, trace, *, point: int | None = None,
 def to_replay(trace: CommandTrace, cspec: CompiledSpec | None = None):
     """Derive a trace-driven-frontend :class:`repro.core.ReplayStream`
     from a captured trace's served column commands (final RD/WR with
-    request info), channel attribution included.  Feed the result to
-    ``Simulator(..., frontend=FrontendConfig(pattern="trace"),
-    replay=...)`` to re-drive any memory system with the same
-    per-channel address stream."""
+    request info), channel attribution included.  The captured ``arrive``
+    clocks ride along (sorted into arrival order), so replay paces
+    injection by the original inter-arrival gaps rather than the
+    streaming interval.  Feed the result to ``Simulator(...,
+    frontend=FrontendConfig(pattern="trace"), replay=...)`` to re-drive
+    any memory system with the same per-channel address stream."""
     from repro.core import spec as S
     from repro.core.frontend import ReplayStream
     if cspec is None:
@@ -227,6 +229,10 @@ def to_replay(trace: CommandTrace, cspec: CompiledSpec | None = None):
                      & (trace.arrive >= 0))[0]
     if len(sel) == 0:
         raise ValueError("trace has no served column commands to replay")
+    # the frontend injects sequentially, so replay requests in ARRIVAL
+    # order (issue order is scheduler-permuted under FR-FCFS) — this is
+    # also what makes the arrive column a monotone pacing schedule
+    sel = sel[np.argsort(trace.arrive[sel], kind="stable")]
     counts = cspec.level_counts
     b = trace.bank[sel].astype(np.int64)
     subs = []
@@ -237,4 +243,5 @@ def to_replay(trace: CommandTrace, cspec: CompiledSpec | None = None):
     return ReplayStream(
         chan=i32(trace.chan[sel]), sub=i32(np.stack(subs[::-1], axis=-1)),
         row=i32(np.maximum(trace.row[sel], 0)),
-        col=np.zeros(len(sel), np.int32), is_write=i32(is_wr[sel]))
+        col=np.zeros(len(sel), np.int32), is_write=i32(is_wr[sel]),
+        arrive=i32(trace.arrive[sel]))

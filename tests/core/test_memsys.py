@@ -319,6 +319,145 @@ def test_single_channel_fingerprint_unchanged():
 
 
 # ---------------------------------------------------------------------------
+# Per-channel refresh staggering
+# ---------------------------------------------------------------------------
+
+def _ref_clocks_per_channel(sim, tr):
+    i_ref = tr.cmd_names.index("REFab")
+    return {c: tr.clk[(tr.cmd == i_ref) & (tr.chan == c)]
+            for c in range(sim.cspec.n_channels)}
+
+
+def _all_channel_refresh_overlap(sim, tr, n_cycles):
+    """Cycles during which EVERY channel sits inside a refresh (nRFC)
+    window — the all-channel bandwidth dip refresh staggering removes."""
+    nrfc = sim.cspec.timings["nRFC"]
+    busy = np.zeros((sim.cspec.n_channels, n_cycles), bool)
+    for c, clks in _ref_clocks_per_channel(sim, tr).items():
+        for t in clks:
+            busy[c, t:t + nrfc] = True
+    return int(np.count_nonzero(busy.all(axis=0)))
+
+
+def test_refresh_stagger_phase_shifts_channels():
+    """Channel c's refresh epoch must lead by c*nREFI/C — REF issue clocks
+    are phase-shifted instead of landing on one cycle; the simultaneous
+    all-channel refresh window (the bandwidth dip) disappears."""
+    n_cycles, C = 24000, 4
+    mk = lambda stagger: Simulator(
+        "DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=C,
+        controller=ControllerConfig(refresh_stagger=stagger))
+    sim = mk(True)
+    _, dense = sim.run(n_cycles, interval=4.0, trace=True)
+    tr = capture(sim.cspec, dense)
+    nrefi = sim.cspec.timings["nREFI"]
+    refs = _ref_clocks_per_channel(sim, tr)
+    first = {c: int(refs[c][0]) for c in range(C)}
+    for c in range(1, C):
+        want_lead = c * nrefi // C
+        got_lead = first[0] - first[c]
+        # opportunistic refresh may slip a few cycles past due
+        assert abs(got_lead - want_lead) <= 64, (c, got_lead, want_lead)
+    # steady state keeps the phases apart too: no two channels refresh
+    # within a quarter phase of each other
+    for c in range(C):
+        assert len(refs[c]) >= 2                 # periodic, not one-shot
+
+    base = mk(False)
+    _, dense0 = base.run(n_cycles, interval=4.0, trace=True)
+    tr0 = capture(base.cspec, dense0)
+    dip0 = _all_channel_refresh_overlap(base, tr0, n_cycles)
+    dip1 = _all_channel_refresh_overlap(sim, tr, n_cycles)
+    assert dip0 > 0, "in-phase baseline shows no all-channel refresh dip"
+    assert dip1 < dip0, (dip1, dip0)
+    assert dip1 == 0    # nREFI/C >> nRFC: staggered windows never align
+
+
+# ---------------------------------------------------------------------------
+# Replay pacing: captured inter-arrival gaps survive capture -> replay
+# ---------------------------------------------------------------------------
+
+def test_replay_honors_captured_arrival_gaps():
+    src = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    mapper="RoBaRaCoCh")
+    _, dense = src.run(2500, interval=5.0, read_ratio=0.7, trace=True)
+    tr = capture(src.cspec, dense, controller=src.controller,
+                 frontend=src.frontend)
+    rs = to_replay(tr, src.cspec)
+    assert rs.arrive is not None
+    assert (np.diff(rs.arrive) >= 0).all()       # arrival order
+
+    # replay with a WILDLY different streaming interval: pacing must come
+    # from the captured arrive deltas, not interval_fp
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=rs)
+    _, dense2 = sim.run(2500, interval=1.0, trace=True)
+    tr2 = capture(sim.cspec, dense2, controller=sim.controller,
+                  frontend=sim.frontend)
+    rs2 = to_replay(tr2, sim.cspec)
+
+    n = min(len(rs), len(rs2))
+    assert n > 100
+    d1 = np.diff(rs.arrive[:n] - rs.arrive[0])
+    d2 = np.diff(rs2.arrive[:n] - rs2.arrive[0])
+    # one injection per cycle max => at most 1 cycle of slip per request
+    assert np.abs(d1 - d2).max() <= 1
+    assert np.mean(d1 == d2) > 0.9
+    # and decidedly NOT the replay sim's own interval of 1.0
+    assert abs(float(np.mean(d2)) - float(np.mean(d1))) < 0.5
+    assert float(np.mean(d2)) > 3.0
+
+
+def test_replay_without_arrive_paces_by_interval():
+    """ReplayStreams built from raw addresses (no captured arrivals) keep
+    the historical streaming-interval pacing."""
+    cspec2 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                       channels=2).cspec
+    rs = ReplayStream.from_addresses(
+        cspec2, np.arange(4000, dtype=np.int64) * cspec2.access_bytes)
+    assert rs.arrive is None
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=rs)
+    _, dense = sim.run(2000, interval=8.0, trace=True)
+    tr = capture(sim.cspec, dense, controller=sim.controller,
+                 frontend=sim.frontend)
+    rs2 = to_replay(tr, sim.cspec)
+    gaps = np.diff(np.sort(rs2.arrive))
+    assert 7.0 <= float(np.mean(gaps[gaps > 0])) <= 9.0
+
+
+def test_replay_unsorted_arrive_rejected():
+    """Injection is index-ordered, so a non-monotone arrive column cannot
+    honor its own gaps — reject loudly instead of pacing nonsense."""
+    cspec = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R").cspec
+    rs = ReplayStream.from_addresses(
+        cspec, np.arange(8, dtype=np.int64) * cspec.access_bytes)
+    bad = dataclasses.replace(
+        rs, arrive=np.asarray([0, 5, 3, 9, 12, 15, 18, 21], np.int32),
+        fingerprint="")
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=bad)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        sim.run(100)
+
+
+def test_replay_arrive_in_fingerprint():
+    """Two streams differing only in arrival pacing must not alias one
+    compiled program."""
+    cspec = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R").cspec
+    addrs = np.arange(64, dtype=np.int64) * cspec.access_bytes
+    a = ReplayStream.from_addresses(cspec, addrs)
+    b = dataclasses.replace(
+        a, arrive=np.arange(64, dtype=np.int32) * 7, fingerprint="")
+    c = dataclasses.replace(
+        a, arrive=np.arange(64, dtype=np.int32) * 3, fingerprint="")
+    assert a.fingerprint != b.fingerprint != c.fingerprint
+
+
+# ---------------------------------------------------------------------------
 # Channel-aware DSE sweeps
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,74 @@
+"""Bench-smoke regression gate for the channel-scaling benchmark.
+
+Compares a freshly measured ``BENCH_engine.json`` against the committed
+baseline:
+
+  * the fresh 1->4 channel aggregate cycles/sec speedup must not drop
+    below the noise-padded floor recorded at merge time
+    (``speedup_floor_1_to_4``, derived from the merge-time 1->2/1->4
+    speedups — the cliff this guards against is PR 3's 4-channel collapse);
+  * the scan-carry reduction of the windowed-ring split must stay >= 3x
+    vs the dense-ring baseline for DDR5 and HBM3.
+
+Usage: python tools/check_bench_regression.py --baseline BENCH_engine.json \
+           --fresh results/bench_fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline: dict, fresh: dict) -> list:
+    errors = []
+    floor = baseline.get("speedup_floor_1_to_4")
+    s14 = fresh.get("channel_scaling_speedup_1_to_4")
+    if floor is None:
+        errors.append("baseline has no speedup_floor_1_to_4 "
+                      "(re-run benchmarks/run.py --only engine)")
+    elif s14 is None:
+        errors.append("fresh results have no channel_scaling_speedup_1_to_4")
+    elif s14 < floor:
+        errors.append(
+            f"1->4 channel speedup regressed: {s14} < merge-time floor "
+            f"{floor} (baseline measured "
+            f"{baseline.get('channel_scaling_speedup_1_to_4')})")
+
+    for std in ("DDR5", "HBM3"):
+        cb = fresh.get("carry_bytes", {}).get(std)
+        if cb is None:
+            errors.append(f"fresh results carry no carry_bytes for {std}")
+        elif cb["reduction"] < 3.0:
+            errors.append(
+                f"{std} scan-carry reduction {cb['reduction']}x < 3x "
+                f"(table+ring {cb['table_ring']}B vs dense ring "
+                f"{cb['dense_ring_baseline']}B)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_engine.json (merge-time floors)")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_engine.json from this run")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    errors = check(baseline, fresh)
+    s = fresh.get("channel_scaling_speedup_1_to_4")
+    print(f"fresh 1->4 speedup: {s}  "
+          f"(floor {baseline.get('speedup_floor_1_to_4')});  carry: "
+          + ", ".join(f"{k} {v['reduction']}x"
+                      for k, v in fresh.get("carry_bytes", {}).items()))
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
