@@ -135,6 +135,42 @@ def run(report, n_cycles: int = 20_000, json_path: str = "BENCH_engine.json"):
             "wall_s": round(best[c], 3),
             "aggregate_channel_cycles_per_sec": int(agg),
             "carry_bytes_per_channel": D.carry_nbytes(sims[c].cspec)}
+    # heterogeneous composition: DDR5x2 + CXL-attached DDR4x2 (link 80)
+    # behind one mapper — the 2-spec-group scenario of the hetero-smoke CI
+    # job, measured the same interleaved best-of-N way and recorded so
+    # future PRs gate on it (tools/check_bench_regression.py).
+    from repro.core import compile_system
+    hsys = compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=2),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=2, link_latency=80),
+    ])
+    hsim = Simulator(system=hsys, frontend=FrontendConfig(probes=False))
+    hsim.run_batch(bcycles, b_intervals, [1.0])          # warm the program
+    best_h = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        hsim.run_batch(bcycles, b_intervals, [1.0])
+        best_h = min(best_h, time.perf_counter() - t0)
+    h_agg = len(b_intervals) * bcycles * hsys.n_channels / best_h
+    homo4 = results["channel_scaling"]["4"][
+        "aggregate_channel_cycles_per_sec"]
+    h_ratio = h_agg / max(homo4, 1)
+    report("hetero_2grp_cycles_per_sec", int(h_agg),
+           f"{hsys.label}: {len(b_intervals)} load points x {bcycles} "
+           f"cycles x {hsys.n_channels} channels in {best_h:.2f}s "
+           f"({100 * h_ratio:.0f}% of the homogeneous 4ch rate)")
+    results["hetero"] = {
+        "label": hsys.label,
+        "wall_s": round(best_h, 3),
+        "aggregate_channel_cycles_per_sec": int(h_agg),
+        "vs_4ch_homogeneous": round(h_ratio, 3),
+    }
+    # noise-padded floor for the gate: the 2-group engine may never fall
+    # below half its merge-time rate relative to the homogeneous 4ch run
+    results["hetero_floor_vs_4ch"] = round(0.5 * h_ratio, 3)
+
     cs = results["channel_scaling"]
     for hi in (2, 4):
         speedup = (cs[str(hi)]["aggregate_channel_cycles_per_sec"]

@@ -8,7 +8,8 @@ Public surface:
   * ``ControllerConfig`` / filtering predicates — paper §2
 """
 from repro.core import standards  # noqa: F401  (populates the registry)
-from repro.core.compile import CompiledSpec, compile_spec
+from repro.core.compile import (CompiledSpec, MemorySystemSpec, SpecGroup,
+                                as_system, compile_spec, compile_system)
 from repro.core.controller import ControllerConfig
 from repro.core.dut import DeviceUnderTest
 from repro.core.engine import (Simulator, avg_probe_latency_ns,
@@ -24,4 +25,5 @@ __all__ = [
     "TimingConstraint", "all_standards", "get_standard", "standards",
     "throughput_gbps", "peak_gbps", "avg_probe_latency_ns",
     "channel_breakdown", "ReplayStream",
+    "MemorySystemSpec", "SpecGroup", "compile_system", "as_system",
 ]

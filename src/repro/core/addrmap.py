@@ -89,6 +89,17 @@ def decode_fields(layout, value):
     return out
 
 
+def encode_fields(layout, fields):
+    """Inverse of :func:`decode_fields`: fold a field dict back into the
+    line index (MSB-first accumulate) — the single encode implementation
+    shared by :meth:`AddressMapper.encode` and the system mapper."""
+    a = None
+    for name, count in reversed(layout):    # MSB first
+        f = fields[name]
+        a = f if a is None else a * count + f
+    return 0 if a is None else a
+
+
 class AddressMapper:
     """Decode/encode linear addresses through a mapper layout.
 
@@ -110,11 +121,7 @@ class AddressMapper:
 
     def encode(self, fields: dict):
         """Inverse of :meth:`map`: field dict -> linear byte address."""
-        a = None
-        for name, count in reversed(self.layout):   # MSB first
-            f = fields[name]
-            a = f if a is None else a * count + f
-        return a << self.tx_bits
+        return encode_fields(self.layout, fields) << self.tx_bits
 
     def to_chan_sub_row_col(self, addr):
         """addr -> (channel, sub[levels-1], row, col) numpy arrays, the
@@ -134,3 +141,129 @@ class AddressMapper:
 #: channels then columns fastest (row-buffer friendly, channel-parallel);
 #: ``RoCoBaRaCh`` rotates banks fastest (bank-parallel streaming).
 MAPPERS = ["RoBaRaCoCh", "RoRaBaCoCh", "RoCoBaRaCh"]
+
+
+# --------------------------------------------------------------------------
+# System-level mapping: one channel digit routing across spec groups
+# --------------------------------------------------------------------------
+#
+# A heterogeneous memory system (repro.core.compile.MemorySystemSpec) has
+# groups with possibly different bank/row/column radices, so one global
+# mixed-radix layout cannot exist.  Instead the mapper gains a *system-level
+# channel digit*: the linear line index is first split as
+#
+#     chan_sys = q % n_channels ; q' = q // n_channels
+#
+# and the remainder q' is decoded through the *owning group's* own layout
+# (its mapper order minus the channel field).  Every supported order keeps
+# the channel field least significant, which is exactly what makes this
+# split well-defined; for a 1-group system the split degenerates to the
+# group's ordinary layout, bit for bit.
+
+
+def make_system_layout(msys, order: str):
+    """Lower a mapper order for a memory system.
+
+    Returns ``("single", layout)`` for 1-group systems (the group's
+    ordinary :func:`make_layout` layout, any order allowed) or
+    ``("multi", n_channels, bases, sublayouts)`` where ``sublayouts[g]``
+    is group ``g``'s LSB-first layout *without* the channel field and
+    ``bases[g]`` its first system channel id.
+    """
+    if msys.n_groups == 1:
+        return ("single", make_layout(msys.groups[0].cspec, order))
+    toks = [order[i:i + 2] for i in range(0, len(order), 2)]
+    if toks[-1] != "Ch":
+        raise ValueError(
+            f"mapper order {order!r} puts the channel field above the LSB "
+            "— heterogeneous systems need channel-least-significant orders "
+            f"(supported: {MAPPERS}) so the post-channel remainder can be "
+            "decoded per spec group")
+    subs = []
+    for g in msys.groups:
+        lay = [(n, c) for (n, c) in make_layout(g.cspec, order)
+               if n != "channel"]
+        subs.append(tuple(lay))
+    return ("multi", int(msys.n_channels),
+            tuple(int(b) for b in msys.chan_base), tuple(subs))
+
+
+class SystemAddressMapper:
+    """Decode/encode linear addresses across a heterogeneous memory system.
+
+    Consecutive transaction-sized lines interleave across ALL system
+    channels (the system channel digit is least significant); the
+    remainder of the line index is decoded through the owning group's own
+    mixed-radix layout.  ``tx_bytes`` defaults to the largest group
+    ``access_bytes`` so one line granularity covers every group.
+    """
+
+    def __init__(self, msys, order: str = "RoBaRaCoCh",
+                 tx_bytes: int | None = None):
+        from repro.core.compile import as_system
+        self.msys = as_system(msys)
+        self.order = order
+        self.tx_bits = _field_bits(
+            tx_bytes or max(g.cspec.access_bytes for g in self.msys.groups))
+        kind = make_system_layout(self.msys, order)
+        if kind[0] == "single":
+            self._single = AddressMapper(self.msys.groups[0].cspec, order,
+                                         tx_bytes)
+        else:
+            self._single = None
+            _, self.n_channels, self.bases, self.sublayouts = kind
+
+    def to_chan_sub_row_col(self, addr):
+        """addr (bytes) -> (chan, sub, row, col) numpy arrays.
+
+        ``chan`` is the system channel id; ``sub`` is padded to the widest
+        group's sub-level count (group ``g`` consumes its first
+        ``len(levels_g) - 1`` entries, the rest are zero)."""
+        if self._single is not None:
+            return self._single.to_chan_sub_row_col(addr)
+        a = np.asarray(addr, np.int64) >> self.tx_bits
+        chan = a % self.n_channels
+        q = a // self.n_channels
+        groups = self.msys.groups
+        gid = self.msys.chan_group[chan]
+        width = max(len(g.cspec.levels) - 1 for g in groups)
+        sub = np.zeros(a.shape + (width,), np.int64)
+        row = np.zeros_like(a)
+        col = np.zeros_like(a)
+        for g, (grp, lay) in enumerate(zip(groups, self.sublayouts)):
+            m = gid == g
+            if not np.any(m):
+                continue
+            f = decode_fields(lay, q[m])
+            for i, lv in enumerate(grp.cspec.levels[1:]):
+                sub[m, i] = f.get(lv, 0)
+            row[m] = f["row"]
+            col[m] = f["col"]
+        return chan, sub, row, col
+
+    def encode(self, chan, sub, row, col):
+        """Inverse of :meth:`to_chan_sub_row_col` -> linear byte address."""
+        if self._single is not None:
+            fields = {"channel": np.asarray(chan, np.int64),
+                      "row": np.asarray(row, np.int64),
+                      "col": np.asarray(col, np.int64)}
+            sub = np.asarray(sub, np.int64)
+            for i, lv in enumerate(self.msys.groups[0].cspec.levels[1:]):
+                fields[lv] = sub[..., i]
+            return self._single.encode(fields)
+        chan = np.asarray(chan, np.int64)
+        sub = np.asarray(sub, np.int64)
+        row = np.asarray(row, np.int64)
+        col = np.asarray(col, np.int64)
+        gid = self.msys.chan_group[chan]
+        q = np.zeros_like(chan)
+        for g, (grp, lay) in enumerate(zip(self.msys.groups,
+                                           self.sublayouts)):
+            m = gid == g
+            if not np.any(m):
+                continue
+            fields = {"row": row[m], "col": col[m]}
+            for i, lv in enumerate(grp.cspec.levels[1:]):
+                fields[lv] = sub[m, i]
+            q[m] = encode_fields(lay, fields)
+        return (q * self.n_channels + chan) << self.tx_bits

@@ -30,7 +30,37 @@ import jax.numpy as jnp
 from repro.core import device as D
 from repro.core import spec as S
 from repro.core.compile import CompiledSpec
-from repro.core.scheduler import SCHEDULERS
+
+# --------------------------------------------------------------------------
+# Request schedulers: masked-priority selection over the request queue
+# --------------------------------------------------------------------------
+#
+# A scheduler is a pure function `(mask, row_hit, arrive) -> (slot, ok)` that
+# picks at most one queue slot among those allowed by `mask`.  The paper's
+# base workflow runs the *same* selection pipeline for every controller; the
+# controllers differ only in the predicate masks they inject (paper §2).
+
+I32_MAX = jnp.int32(2**31 - 1)
+
+
+def _oldest(mask, arrive):
+    key = jnp.where(mask, arrive, I32_MAX)
+    return jnp.argmin(key), jnp.any(mask)
+
+
+def frfcfs(mask, row_hit, arrive):
+    """First-Ready FCFS: ready row hits first, then oldest ready."""
+    hit_mask = mask & row_hit
+    use_hits = jnp.any(hit_mask)
+    m = jnp.where(use_hits, hit_mask, mask)
+    return _oldest(m, arrive)
+
+
+def fcfs(mask, row_hit, arrive):
+    return _oldest(mask, arrive)
+
+
+SCHEDULERS = {"FRFCFS": frfcfs, "FCFS": fcfs}
 
 # --------------------------------------------------------------------------
 # Queue / controller state
@@ -319,9 +349,16 @@ def _try_issue_refresh(cspec, dp, cs, clk, due, urgent, ref_cmd,
     return cs._replace(dev=dev, prac_count=prac), do, cmd, ref_bank
 
 
-def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
+def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn,
+                      link_latency: int = 0):
     """One pass of the base pipeline restricted to commands with
-    kind_ok[kind] == True (dual C/A runs this twice, paper §2)."""
+    kind_ok[kind] == True (dual C/A runs this twice, paper §2).
+
+    ``link_latency`` (static, cycles) models a CXL-style link in front of
+    this channel: a request is not visible to the controller until
+    ``arrive + link_latency``, and read data takes another
+    ``link_latency`` cycles to cross back — probe completions therefore
+    carry ``2 * link_latency`` of round-trip link time end to end."""
     q = cs.queue
     bank = jax.vmap(partial(D.flat_bank, cspec))(q.sub)
     cand_cmd, cand_row, open_hit, timing_ready, table = _candidates(
@@ -337,6 +374,12 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
     cand_kind_ok = kind_ok[kind_mask[cand_cmd]]
 
     mask = q.valid & timing_ready & cand_kind_ok
+    if link_latency:
+        # enqueue-boundary link latency: the request only becomes a
+        # candidate once it has crossed the link (clk >= arrive + L);
+        # zero-link groups skip the op entirely, keeping their traced
+        # program — and command streams — bit-identical
+        mask = mask & (clk >= q.arrive + jnp.int32(link_latency))
     pre_pred = mask
     for p in preds:
         mask = mask & p(cspec, ctx)
@@ -387,6 +430,9 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn):
 
     probe = fin_rd & q.is_probe[slot]
     completion = clk + dp.read_latency
+    if link_latency:
+        # completion-boundary link latency: the data crosses the link back
+        completion = completion + jnp.int32(link_latency)
     ev = dict(
         cmd=jnp.where(do, cmd,
                       jnp.where(ref_issued, ref_cmd_done, jnp.int32(-1))),
@@ -437,11 +483,13 @@ def _pack_events(ev_col: dict, ev_row: dict | None = None) -> StepEvents:
 
 
 def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
-                    cs: CtrlState, clk) -> tuple:
+                    cs: CtrlState, clk, link_latency: int = 0) -> tuple:
     """One controller cycle for ONE channel.  Dual-C/A standards run the
     selection pipeline twice — a column pass and a row pass (paper §2);
-    others run it once.  The engine vmaps this function across the
-    memory system's channels inside its cycle scan."""
+    others run it once.  The engine vmaps this function across each spec
+    group's channels inside its cycle scan; CXL-attached groups pass their
+    static ``link_latency``, applied at the enqueue boundary (request
+    visibility) and the completion boundary (read-data return)."""
     preds = cfg.predicates()
     sched_fn = SCHEDULERS[cfg.scheduler]
     n_kinds = 4
@@ -452,13 +500,13 @@ def controller_step(cspec: CompiledSpec, dp: D.DynParams, cfg: ControllerConfig,
         row_ok = jnp.asarray(
             [k in (S.KIND_ROW, S.KIND_REF) for k in range(n_kinds)])
         cs, ev_col = _select_and_issue(cspec, dp, cs, clk, cfg, preds,
-                                       col_ok, sched_fn)
+                                       col_ok, sched_fn, link_latency)
         cs, ev_row = _select_and_issue(cspec, dp, cs, clk, cfg, preds,
-                                       row_ok, sched_fn)
+                                       row_ok, sched_fn, link_latency)
         events = _pack_events(ev_col, ev_row)
     else:
         all_ok = jnp.ones((n_kinds,), bool)
         cs, ev = _select_and_issue(cspec, dp, cs, clk, cfg, preds, all_ok,
-                                   sched_fn)
+                                   sched_fn, link_latency)
         events = _pack_events(ev)
     return cs, events

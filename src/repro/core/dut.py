@@ -40,12 +40,16 @@ class ProbeResult:
 
 class DeviceUnderTest:
     def __init__(self, standard, org_preset: str, timing_preset: str,
-                 timing_overrides: dict | None = None):
-        if not isinstance(standard, (str, type)):
-            raise TypeError("pass a standard class or name")
-        self.cspec: CompiledSpec = compile_spec(standard, org_preset,
-                                                timing_preset,
-                                                timing_overrides)
+                 timing_overrides: dict | None = None,
+                 _cspec: CompiledSpec | None = None):
+        if _cspec is not None:
+            self.cspec = _cspec
+        else:
+            if not isinstance(standard, (str, type)):
+                raise TypeError("pass a standard class or name")
+            self.cspec: CompiledSpec = compile_spec(standard, org_preset,
+                                                    timing_preset,
+                                                    timing_overrides)
         cs = self.cspec
         self.timings = cs.timings
         # mirror of the engine's split timing state: dense most-recent
@@ -59,6 +63,14 @@ class DeviceUnderTest:
         self.act1_clk = np.full((cs.n_banks,), NEG, np.int64)
         self.clock_until = np.zeros((cs.n_refresh_units,), np.int64)
         self.history: list = []
+
+    @classmethod
+    def from_compiled(cls, cspec: CompiledSpec) -> "DeviceUnderTest":
+        """Build the oracle directly from a compiled spec — e.g. one spec
+        group of a heterogeneous ``MemorySystemSpec``, timing overrides
+        and post-compile geometry edits included — so every channel of
+        every group can be cross-checked against its OWN device model."""
+        return cls(None, "", "", _cspec=cspec)
 
     # ---- addressing -------------------------------------------------------
     def addr_vec(self, **kw) -> dict:

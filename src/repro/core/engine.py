@@ -27,7 +27,8 @@ import numpy as np
 from repro.core import controller as C
 from repro.core import device as D
 from repro.core import frontend as F
-from repro.core.compile import CompiledSpec, compile_spec
+from repro.core.compile import (CompiledSpec, MemorySystemSpec, SpecGroup,
+                                as_system, compile_spec, compile_system)
 
 
 class ChannelStats(NamedTuple):
@@ -45,9 +46,16 @@ class ChannelStats(NamedTuple):
 class Stats(NamedTuple):
     """Aggregate run statistics plus the per-channel breakdown.
 
-    The scalar fields sum across channels (identical to the historical
-    single-channel semantics); ``per_channel`` holds the same counters
-    split by channel.
+    The scalar fields sum across channels — and, for a heterogeneous
+    system, across all spec groups (identical to the historical
+    single-channel semantics when there is one group of one channel).
+    ``per_channel`` holds the same counters split by *system* channel
+    (group-major order); its ``cmd_counts`` are expressed in the system's
+    merged command namespace (``MemorySystemSpec.cmd_names``), which for a
+    homogeneous system IS the spec's own namespace.  ``per_group`` holds
+    each spec group's native-namespace :class:`ChannelStats` — the
+    group-correct view heterogeneous metrics (``throughput_gbps``,
+    ``channel_breakdown``) are derived from.
     """
     cycles: jnp.ndarray
     reads_done: jnp.ndarray
@@ -55,9 +63,10 @@ class Stats(NamedTuple):
     probe_lat_sum: jnp.ndarray
     probe_cnt: jnp.ndarray
     data_bus_busy: jnp.ndarray      # cycles any data bus carried data
-    cmd_counts: jnp.ndarray         # (n_cmds,)
+    cmd_counts: jnp.ndarray         # (n_cmds,) merged namespace
     deferred: jnp.ndarray           # predicate-masked candidate count
     per_channel: ChannelStats
+    per_group: tuple                # per-group native ChannelStats
 
 
 def _zero_channel_stats(cspec: CompiledSpec) -> ChannelStats:
@@ -67,10 +76,19 @@ def _zero_channel_stats(cspec: CompiledSpec) -> ChannelStats:
                         z(nch, cspec.n_cmds), z(nch))
 
 
-class SimState(NamedTuple):
-    cs: C.CtrlState              # every leaf has a leading channel axis
-    fs: F.FrontState
+class GroupState(NamedTuple):
+    """Scan-carried state of ONE spec group: controller+device state and
+    running stats, every leaf with a leading group-channel axis."""
+    cs: C.CtrlState
     ch: ChannelStats
+
+
+class SimState(NamedTuple):
+    """Group-indexed scan carry: ``gs`` is a static-length tuple with one
+    :class:`GroupState` per spec group (the homogeneous path is the
+    1-tuple special case)."""
+    gs: tuple
+    fs: F.FrontState
     clk: jnp.ndarray
 
 
@@ -80,9 +98,13 @@ class TraceArrays(NamedTuple):
     Single-channel systems emit ``[T, 2]`` fields ([cycles, bus slots];
     slot 0 is the column C/A bus, slot 1 the row bus — single-bus
     standards only use slot 0).  Multi-channel systems emit ``[T, C, 2]``
-    with the channel axis in the middle.  ``cmd`` is -1 on idle slots.
-    ``repro.trace.capture`` compacts these dense arrays into a columnar
-    :class:`repro.trace.CommandTrace` (with a ``chan`` column).
+    with the *system* channel axis in the middle (heterogeneous systems
+    concatenate their groups' channels in group-major order; ``cmd`` ids
+    are then GROUP-LOCAL — ``repro.trace.capture`` resolves them into the
+    system's merged command namespace using the channel→group map).
+    ``cmd`` is -1 on idle slots.  ``repro.trace.capture`` compacts these
+    dense arrays into a columnar :class:`repro.trace.CommandTrace` (with
+    ``chan`` and ``group`` columns).
     """
     cmd: jnp.ndarray         # issued command id, -1 == idle
     bank: jnp.ndarray        # flat bank id (refresh: representative bank)
@@ -171,7 +193,26 @@ def spec_fingerprint(cspec: CompiledSpec):
     return base if cspec.n_channels == 1 else base + (cspec.n_channels,)
 
 
-def run_key(cspec: CompiledSpec, ccfg: C.ControllerConfig,
+def system_fingerprint(spec):
+    """Hashable identity of a memory system *as the engine traces it*.
+
+    A bare :class:`CompiledSpec` — and the 1-group, zero-link system it is
+    equivalent to — keeps the historical :func:`spec_fingerprint` value,
+    so every stored trace artifact and cached program stays verifiable
+    (and ``Simulator(system=[one group])`` aliases the very same compiled
+    program as ``Simulator(..., channels=N)``).  A genuine composition
+    keys on the ordered tuple of (group fingerprint, channels,
+    link_latency)."""
+    if isinstance(spec, CompiledSpec):
+        return spec_fingerprint(spec)
+    msys = as_system(spec)
+    if msys.homogeneous:
+        return spec_fingerprint(msys.groups[0].cspec)
+    return tuple((spec_fingerprint(g.cspec), g.channels, g.link_latency)
+                 for g in msys.groups)
+
+
+def run_key(spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
             batched: bool, replay: F.ReplayStream | None = None):
     # interval/read_ratio reach the traced program only through FrontParams
@@ -183,7 +224,7 @@ def run_key(cspec: CompiledSpec, ccfg: C.ControllerConfig,
     fkey = tuple(kv for kv in _freeze(fcfg)
                  if not (isinstance(kv, tuple)
                          and kv[0] in ("interval", "read_ratio")))
-    return (spec_fingerprint(cspec), _freeze(ccfg), fkey,
+    return (system_fingerprint(spec), _freeze(ccfg), fkey,
             int(n_cycles), bool(trace), bool(batched),
             None if replay is None else replay.fingerprint)
 
@@ -208,10 +249,12 @@ class RunCache:
         self._runs.clear()
         self.hits = self.misses = 0
 
-    def get(self, cspec: CompiledSpec, ccfg: C.ControllerConfig,
+    def get(self, spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool = False,
             batched: bool = False, replay: F.ReplayStream | None = None):
-        key = run_key(cspec, ccfg, fcfg, n_cycles, trace, batched, replay)
+        """``spec`` may be a :class:`CompiledSpec` (homogeneous system) or
+        a :class:`MemorySystemSpec` (heterogeneous composition)."""
+        key = run_key(spec, ccfg, fcfg, n_cycles, trace, batched, replay)
         fn = self._runs.get(key)
         if fn is not None:
             self.hits += 1
@@ -219,10 +262,15 @@ class RunCache:
         self.misses += 1
         # Close over a snapshot, not the caller's object: jit may re-trace
         # this closure much later (new batch shape), and by then the caller
-        # may have mutated its cspec in place — the snapshot keeps every
+        # may have mutated its cspec(s) in place — the snapshot keeps every
         # retrace consistent with the fingerprint taken above.
-        cspec = dataclasses.replace(cspec)
-        fn = make_run(cspec, ccfg, fcfg, n_cycles, trace, replay)
+        if isinstance(spec, CompiledSpec):
+            spec = dataclasses.replace(spec)
+        else:
+            spec = MemorySystemSpec(tuple(
+                SpecGroup(dataclasses.replace(g.cspec), g.channels,
+                          g.link_latency) for g in as_system(spec).groups))
+        fn = make_run(spec, ccfg, fcfg, n_cycles, trace, replay)
         if batched:
             fn = jax.vmap(fn, in_axes=(None, 0, None))
         fn = jax.jit(fn)
@@ -236,17 +284,29 @@ RUN_CACHE = RunCache()
 
 @dataclasses.dataclass
 class Simulator:
-    """User-facing memory-system handle for one (standard, org, timing)
-    triple, with a configurable channel count and address-mapper order.
+    """User-facing memory-system handle: one (standard, org, timing)
+    triple with a channel count and mapper order, OR an explicit
+    heterogeneous composition via ``system=``.
 
     >>> sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
     >>> stats = sim.run(100_000, interval=4.0, read_ratio=1.0)
     >>> quad = Simulator("HBM3", "HBM3_16Gb", "HBM3_5200", channels=4)
     >>> stats = quad.run(50_000)      # stats.per_channel: (4,) breakdowns
+    >>> cxl = Simulator(system=[
+    ...     dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+    ...          timing_preset="DDR5_4800B", channels=2),
+    ...     dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+    ...          timing_preset="DDR4_2400R", channels=2, link_latency=80),
+    ... ])
+    >>> stats = cxl.run(50_000)       # 4 system channels, 2 spec groups
+
+    Every system — homogeneous or not — compiles exactly once: the whole
+    composition is one ``lax.scan`` program keyed in the process-wide
+    :class:`RunCache` on the system tuple.
     """
-    standard: str
-    org_preset: str
-    timing_preset: str
+    standard: str | None = None
+    org_preset: str | None = None
+    timing_preset: str | None = None
     controller: C.ControllerConfig = dataclasses.field(
         default_factory=C.ControllerConfig)
     frontend: F.FrontendConfig = dataclasses.field(
@@ -258,14 +318,51 @@ class Simulator:
     mapper: str | None = None
     #: replay source for ``FrontendConfig(pattern="trace")``
     replay: F.ReplayStream | None = None
+    #: heterogeneous composition: a :class:`MemorySystemSpec` or a list of
+    #: group descriptors (see :func:`repro.core.compile.compile_system`);
+    #: mutually exclusive with the (standard, org, timing) triple
+    system: object = None
 
     def __post_init__(self):
-        self.cspec = compile_spec(self.standard, self.org_preset,
-                                  self.timing_preset, self.timing_overrides,
-                                  channels=self.channels)
+        if self.system is not None:
+            if self.standard is not None:
+                raise ValueError("pass either a (standard, org_preset, "
+                                 "timing_preset) triple or system=..., "
+                                 "not both")
+            if self.channels != 1 or self.timing_overrides is not None:
+                raise ValueError(
+                    "channels=/timing_overrides= apply to the (standard, "
+                    "org, timing) path only — a system=... composition "
+                    "carries its own per-group channel counts and timing "
+                    "overrides (see compile_system)")
+            self.msys = as_system(self.system)
+            # the 1-group zero-link composition IS the classic path: hand
+            # the cache the bare CompiledSpec so both spellings alias one
+            # compiled program (and one fingerprint)
+            self.cspec = self.msys.groups[0].cspec \
+                if self.msys.n_groups == 1 else None
+        else:
+            if self.standard is None:
+                raise ValueError("Simulator needs a (standard, org_preset, "
+                                 "timing_preset) triple or system=...")
+            self.cspec = compile_spec(self.standard, self.org_preset,
+                                      self.timing_preset,
+                                      self.timing_overrides,
+                                      channels=self.channels)
+            self.msys = as_system(self.cspec)
         if self.mapper is not None:
             self.frontend = dataclasses.replace(self.frontend,
                                                 mapper=self.mapper)
+
+    @property
+    def _cache_spec(self):
+        """What the run cache is keyed/traced on: the bare CompiledSpec
+        for homogeneous systems (historical key), the MemorySystemSpec
+        otherwise."""
+        return self.cspec if self.msys.homogeneous else self.msys
+
+    def _dyn_params(self):
+        return tuple(D.dyn_params(g.cspec) for g in self.msys.groups)
 
     # -- single-config run ------------------------------------------------
     def run(self, n_cycles: int, interval: float | None = None,
@@ -278,38 +375,112 @@ class Simulator:
                 interval=interval if interval is not None else fcfg.interval,
                 read_ratio=(read_ratio if read_ratio is not None
                             else fcfg.read_ratio))
-        dp = D.dyn_params(self.cspec)
         fp = fcfg.params()
-        run_fn = RUN_CACHE.get(self.cspec, self.controller, fcfg, n_cycles,
-                               trace=trace, replay=self.replay)
-        out = run_fn(dp, fp, jnp.uint32(seed))
+        run_fn = RUN_CACHE.get(self._cache_spec, self.controller, fcfg,
+                               n_cycles, trace=trace, replay=self.replay)
+        out = run_fn(self._dyn_params(), fp, jnp.uint32(seed))
         return jax.tree.map(np.asarray, out)
 
     # -- batched DSE run ---------------------------------------------------
     def run_batch(self, n_cycles: int, intervals, read_ratios,
                   seed: int = 0x1234):
         """Simulate the outer product of load points in one vmapped program."""
-        dp = D.dyn_params(self.cspec)
         pts = [(i, r) for i in intervals for r in read_ratios]
         fp = F.stack_params(pts, self.frontend.probe_gap)
-        batched = RUN_CACHE.get(self.cspec, self.controller, self.frontend,
-                                n_cycles, batched=True, replay=self.replay)
-        out = batched(dp, fp, jnp.uint32(seed))
+        batched = RUN_CACHE.get(self._cache_spec, self.controller,
+                                self.frontend, n_cycles, batched=True,
+                                replay=self.replay)
+        out = batched(self._dyn_params(), fp, jnp.uint32(seed))
         return pts, jax.tree.map(np.asarray, out)
 
 
-def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
+def _accum_channel_stats(cspec: CompiledSpec, ch: ChannelStats,
+                         ev: C.StepEvents) -> ChannelStats:
+    """Fold one cycle's channel-stacked events into the running stats of
+    ONE spec group (counts in the group's native command namespace)."""
+    nBL = jnp.int32(cspec.timings["nBL"])
+    rd = ev.served_read.astype(jnp.int32)          # (C,)
+    wr = ev.served_write.astype(jnp.int32)
+    counts = ch.cmd_counts                          # (C, n_cmds)
+    cmd_ids = jnp.arange(cspec.n_cmds, dtype=jnp.int32)
+    for i in range(2):
+        # dense one-hot add (idle slots are -1: no match, no count)
+        counts = counts + (cmd_ids[None, :]
+                           == ev.cmd[:, i:i + 1]).astype(jnp.int32)
+    return ChannelStats(
+        reads_done=ch.reads_done + rd,
+        writes_done=ch.writes_done + wr,
+        probe_lat_sum=ch.probe_lat_sum + ev.probe_latency,
+        probe_cnt=ch.probe_cnt + ev.served_probe.astype(jnp.int32),
+        data_bus_busy=ch.data_bus_busy + nBL * (rd + wr),
+        cmd_counts=counts,
+        deferred=ch.deferred + ev.deferred,
+    )
+
+
+def _aggregate_stats(msys: MemorySystemSpec, chs: list, clk) -> Stats:
+    """Fold the per-group running stats into the uniform :class:`Stats`.
+
+    The 1-group path is bit-identical to the historical aggregation; for
+    a composition the per-channel view concatenates the groups' channels
+    (group-major) and lifts each group's command counts into the merged
+    namespace via its local→global id map."""
+    if msys.n_groups == 1:
+        ch = chs[0]
+        per_channel = ch
+        cmd_counts = jnp.sum(ch.cmd_counts, axis=0)
+    else:
+        n_global = msys.n_cmds
+        lifted = []
+        for g, ch in enumerate(chs):
+            gmap = jnp.asarray(msys.group_cmd_maps[g], jnp.int32)
+            c_g = ch.cmd_counts.shape[0]
+            lift = jnp.zeros((c_g, n_global), jnp.int32)
+            lifted.append(lift.at[:, gmap].set(ch.cmd_counts))
+        cat = lambda f: jnp.concatenate([getattr(ch, f) for ch in chs])
+        per_channel = ChannelStats(
+            reads_done=cat("reads_done"), writes_done=cat("writes_done"),
+            probe_lat_sum=cat("probe_lat_sum"), probe_cnt=cat("probe_cnt"),
+            data_bus_busy=cat("data_bus_busy"),
+            cmd_counts=jnp.concatenate(lifted, axis=0),
+            deferred=cat("deferred"))
+        cmd_counts = jnp.sum(per_channel.cmd_counts, axis=0)
+    return Stats(
+        cycles=clk,
+        reads_done=jnp.sum(per_channel.reads_done),
+        writes_done=jnp.sum(per_channel.writes_done),
+        probe_lat_sum=jnp.sum(per_channel.probe_lat_sum),
+        probe_cnt=jnp.sum(per_channel.probe_cnt),
+        data_bus_busy=jnp.sum(per_channel.data_bus_busy),
+        cmd_counts=cmd_counts,
+        deferred=jnp.sum(per_channel.deferred),
+        per_channel=per_channel,
+        per_group=tuple(chs),
+    )
+
+
+def make_run(spec, ccfg: C.ControllerConfig,
              fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
              replay: F.ReplayStream | None = None):
-    """Build the pure run function (dp, fp, seed) -> Stats [, trace].
+    """Build the pure run function (dps, fp, seed) -> Stats [, trace].
 
-    One compiled program per (spec, configs, n_cycles, trace, replay)
-    regardless of channel count: the frontend routes decoded requests to
-    per-channel queues and ``controller_step`` runs across all channels
-    via an inner ``jax.vmap`` inside the single ``lax.scan`` body.
+    ``spec`` is a :class:`CompiledSpec` or a :class:`MemorySystemSpec`;
+    ``dps`` is the per-group tuple of :class:`repro.core.device.DynParams`
+    (a bare ``DynParams`` is accepted for the 1-group case).  One compiled
+    program per (system, configs, n_cycles, trace, replay) regardless of
+    group or channel count: the frontend routes decoded requests to
+    per-(group, channel) queues, ``controller_step`` runs across each
+    group's channels via an inner ``jax.vmap``, and the groups advance as
+    parallel branches of the single ``lax.scan`` body, their states living
+    in the group-indexed :class:`SimState` carry.  CXL-attached groups
+    (``link_latency > 0``) see requests ``link_latency`` cycles after
+    arrival and return read data ``link_latency`` cycles late.
     """
-    nch = cspec.n_channels
-    layout = F.make_layout(cspec, fcfg.mapper)
+    msys = as_system(spec)
+    groups = msys.groups
+    n_groups = msys.n_groups
+    n_chan_total = msys.n_channels
+    sys_layout = F.make_system_layout(msys, fcfg.mapper)
     if fcfg.stream and fcfg.pattern == "trace" and replay is None:
         raise ValueError('FrontendConfig(pattern="trace") needs a '
                          "ReplayStream (Simulator(..., replay=...))")
@@ -323,12 +494,19 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
                 "is index-ordered) — sort the stream into arrival order "
                 "as trace.to_replay does")
         top = int(np.max(replay.chan))
-        if top >= nch or int(np.min(replay.chan)) < 0:
+        if top >= n_chan_total or int(np.min(replay.chan)) < 0:
             raise ValueError(
                 f"replay stream targets channel {top} but the memory "
-                f"system has {nch} channel(s) — re-encode the stream "
-                "through this system's mapper (ReplayStream."
+                f"system has {n_chan_total} channel(s) — re-encode the "
+                "stream through this system's mapper (ReplayStream."
                 "from_addresses) instead of reusing captured channels")
+        max_sub = max(len(g.cspec.levels) - 1 for g in groups)
+        if replay.sub.shape[1] != max_sub:
+            raise ValueError(
+                f"replay sub columns are {replay.sub.shape[1]} wide but "
+                f"this system needs {max_sub} sub-level indices — rebuild "
+                "the stream against this system (ReplayStream."
+                "from_addresses / trace.to_replay)")
     rp = None if replay is None else F.ReplayStream(
         chan=jnp.asarray(replay.chan), sub=jnp.asarray(replay.sub),
         row=jnp.asarray(replay.row), col=jnp.asarray(replay.col),
@@ -336,78 +514,74 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
         # arrive stays host-side numpy: the frontend derives static pacing
         # scalars (base / span / wrap gap) from it at trace time
         arrive=replay.arrive,
-        fingerprint=replay.fingerprint)
+        fingerprint=replay.fingerprint,
+        dep=None if replay.dep is None else jnp.asarray(replay.dep))
 
-    def cycle(sim: SimState, _, dp, fp):
-        queues, fs = F.frontend_step(cspec, fcfg, fp, sim.fs, sim.cs.queue,
-                                     sim.clk, layout, rp)
-        cs = sim.cs._replace(queue=queues)
-        cs, ev = jax.vmap(
-            lambda s: C.controller_step(cspec, dp, ccfg, s, sim.clk))(cs)
-        fs = F.frontend_absorb(fs, fp, ev)
-
-        ch = sim.ch
-        nBL = jnp.int32(cspec.timings["nBL"])
-        rd = ev.served_read.astype(jnp.int32)          # (C,)
-        wr = ev.served_write.astype(jnp.int32)
-        counts = ch.cmd_counts                          # (C, n_cmds)
-        cmd_ids = jnp.arange(cspec.n_cmds, dtype=jnp.int32)
-        for i in range(2):
-            # dense one-hot add (idle slots are -1: no match, no count)
-            counts = counts + (cmd_ids[None, :]
-                               == ev.cmd[:, i:i + 1]).astype(jnp.int32)
-        ch = ChannelStats(
-            reads_done=ch.reads_done + rd,
-            writes_done=ch.writes_done + wr,
-            probe_lat_sum=ch.probe_lat_sum + ev.probe_latency,
-            probe_cnt=ch.probe_cnt + ev.served_probe.astype(jnp.int32),
-            data_bus_busy=ch.data_bus_busy + nBL * (rd + wr),
-            cmd_counts=counts,
-            deferred=ch.deferred + ev.deferred,
-        )
-        out = SimState(cs=cs, fs=fs, ch=ch, clk=sim.clk + 1)
+    def cycle(sim: SimState, _, dps, fp):
+        queues, fs = F.system_frontend_step(
+            msys, fcfg, fp, sim.fs, tuple(g.cs.queue for g in sim.gs),
+            sim.clk, sys_layout, rp)
+        new_gs, evs = [], []
+        for gi, (grp, dp) in enumerate(zip(groups, dps)):
+            cs = sim.gs[gi].cs._replace(queue=queues[gi])
+            cs, ev = jax.vmap(
+                lambda s: C.controller_step(grp.cspec, dp, ccfg, s, sim.clk,
+                                            grp.link_latency))(cs)
+            ch = _accum_channel_stats(grp.cspec, sim.gs[gi].ch, ev)
+            new_gs.append(GroupState(cs=cs, ch=ch))
+            evs.append(ev)
+        for ev in evs:
+            fs = F.frontend_absorb(fs, fp, ev)
+        out = SimState(gs=tuple(new_gs), fs=fs, clk=sim.clk + 1)
         if trace:
-            # single-channel systems keep the historical [2] slot shape
-            sq = (lambda a: a[0]) if nch == 1 else (lambda a: a)
-            ys = TraceArrays(sq(ev.cmd), sq(ev.bank), sq(ev.row),
-                             sq(ev.arrive), sq(ev.hit_ready))
+            if n_chan_total == 1:
+                # single-channel systems keep the historical [2] slot shape
+                e = evs[0]
+                ys = TraceArrays(e.cmd[0], e.bank[0], e.row[0],
+                                 e.arrive[0], e.hit_ready[0])
+            else:
+                # system channel axis: groups' channels, group-major
+                cat = (lambda f: getattr(evs[0], f)) if n_groups == 1 \
+                    else (lambda f: jnp.concatenate(
+                        [getattr(e, f) for e in evs], axis=0))
+                ys = TraceArrays(cat("cmd"), cat("bank"), cat("row"),
+                                 cat("arrive"), cat("hit_ready"))
         else:
             ys = None
         return out, ys
 
-    def run(dp, fp, seed):
+    def run(dps, fp, seed):
         global TRACE_COUNT
         TRACE_COUNT += 1            # runs once per jax trace, not per call
-        cs1 = C.init_ctrl_state(cspec, ccfg.queue_depth)
-        css = jax.tree.map(lambda a: jnp.broadcast_to(a, (nch,) + a.shape),
-                           cs1)
-        if ccfg.refresh_stagger and nch > 1:
-            # phase-shift each channel's refresh epoch by c*nREFI/C (real
-            # controllers stagger REF so the channels' refresh windows —
-            # and their bandwidth dips — never align); channel 0 keeps the
-            # historical phase, so single-channel runs are bit-identical
-            nrefi = int(cspec.timings["nREFI"])
-            offs = jnp.asarray([-(c * nrefi // nch) for c in range(nch)],
-                               jnp.int32)
-            css = css._replace(dev=css.dev._replace(
-                last_ref=css.dev.last_ref + offs[:, None]))
-        init = SimState(cs=css, fs=F.init_front(),
-                        ch=_zero_channel_stats(cspec), clk=jnp.int32(0))
+        if isinstance(dps, D.DynParams):
+            dps = (dps,)            # 1-group back-compat
+        if len(dps) != n_groups:
+            raise ValueError(f"expected {n_groups} DynParams (one per spec "
+                             f"group), got {len(dps)}")
+        gs = []
+        for grp in groups:
+            cspec, nch = grp.cspec, grp.channels
+            cs1 = C.init_ctrl_state(cspec, ccfg.queue_depth)
+            css = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nch,) + a.shape), cs1)
+            if ccfg.refresh_stagger and nch > 1:
+                # phase-shift each channel's refresh epoch by c*nREFI/C
+                # (real controllers stagger REF so the channels' refresh
+                # windows — and their bandwidth dips — never align);
+                # channel 0 keeps the historical phase, so single-channel
+                # groups are bit-identical.  Staggering is group-local:
+                # each group phases its own nREFI.
+                nrefi = int(cspec.timings["nREFI"])
+                offs = jnp.asarray([-(c * nrefi // nch) for c in range(nch)],
+                                   jnp.int32)
+                css = css._replace(dev=css.dev._replace(
+                    last_ref=css.dev.last_ref + offs[:, None]))
+            gs.append(GroupState(cs=css, ch=_zero_channel_stats(cspec)))
+        init = SimState(gs=tuple(gs), fs=F.init_front(), clk=jnp.int32(0))
         init = init._replace(fs=init.fs._replace(rng=seed | jnp.uint32(1)))
-        final, ys = jax.lax.scan(partial(cycle, dp=dp, fp=fp), init, None,
+        final, ys = jax.lax.scan(partial(cycle, dps=dps, fp=fp), init, None,
                                  length=n_cycles)
-        ch = final.ch
-        stats = Stats(
-            cycles=final.clk,
-            reads_done=jnp.sum(ch.reads_done),
-            writes_done=jnp.sum(ch.writes_done),
-            probe_lat_sum=jnp.sum(ch.probe_lat_sum),
-            probe_cnt=jnp.sum(ch.probe_cnt),
-            data_bus_busy=jnp.sum(ch.data_bus_busy),
-            cmd_counts=jnp.sum(ch.cmd_counts, axis=0),
-            deferred=jnp.sum(ch.deferred),
-            per_channel=ch,
-        )
+        stats = _aggregate_stats(msys, [g.ch for g in final.gs], final.clk)
         if trace:
             return stats, ys
         return stats
@@ -424,50 +598,93 @@ def make_run(cspec: CompiledSpec, ccfg: C.ControllerConfig,
 # `run_batch` / `repro.dse` produce.  For batched stats either index one
 # point out first (`jax.tree.map(lambda a: a[i], stats)`) or use the
 # vectorized equivalents in `repro.dse.results`.
+#
+# Every helper accepts either a CompiledSpec (homogeneous system) or a
+# MemorySystemSpec.  For heterogeneous systems the math is GROUP-CORRECT:
+# each group's bytes/cycle-time come from its own spec — never one spec's
+# bandwidth multiplied by the total channel count — and a spec/stats
+# mismatch raises instead of silently aggregating wrong numbers.
 
-def throughput_gbps(cspec: CompiledSpec, stats) -> float:
+
+def _check_system_stats(msys: MemorySystemSpec, stats):
+    got = len(getattr(stats, "per_group", ()) or ())
+    if got != msys.n_groups:
+        raise ValueError(
+            f"stats carry {got} spec group(s) but the system has "
+            f"{msys.n_groups} — these stats were produced by a different "
+            "memory system (pass the matching spec/system)")
+
+
+def throughput_gbps(spec, stats) -> float:
     """Achieved data throughput in GB/s (1e9 bytes per second).
 
-    bytes moved = (reads + writes) * access_bytes; wall time =
-    cycles * tCK_ps.  Scalar stats only — see the batched-stats caveat above.
+    Homogeneous: bytes moved = (reads + writes) * access_bytes; wall time
+    = cycles * tCK_ps.  Heterogeneous: each group's bytes and clock come
+    from its own spec (``sum_g bytes_g / (cycles * tCK_g)``).  Scalar
+    stats only — see the batched-stats caveat above.
     """
-    bytes_moved = float(stats.reads_done + stats.writes_done) * cspec.access_bytes
-    seconds = float(stats.cycles) * cspec.tCK_ps * 1e-12
-    return bytes_moved / seconds / 1e9 if seconds else 0.0
+    msys = as_system(spec)
+    _check_system_stats(msys, stats)
+    total = 0.0
+    for grp, ch in zip(msys.groups, stats.per_group):
+        moved = float(np.sum(np.asarray(ch.reads_done))
+                      + np.sum(np.asarray(ch.writes_done))) \
+            * grp.cspec.access_bytes
+        seconds = float(stats.cycles) * grp.cspec.tCK_ps * 1e-12
+        total += moved / seconds / 1e9 if seconds else 0.0
+    return total
 
 
-def peak_gbps(cspec: CompiledSpec) -> float:
+def peak_gbps(spec) -> float:
     """Theoretical peak throughput of the memory *system* in GB/s:
-    access_bytes / nBL per cycle sustained on every cycle of every
-    channel's data bus (scales with ``n_channels``)."""
-    per_chan = cspec.peak_bytes_per_cycle / (cspec.tCK_ps * 1e-12) / 1e9
-    return cspec.n_channels * per_chan
+    each group sustains access_bytes / nBL per cycle on every cycle of
+    every one of its channels' data buses, on its own clock — summed
+    across groups (the homogeneous case degenerates to the historical
+    ``n_channels * per_channel_peak``)."""
+    msys = as_system(spec)
+    total = 0.0
+    for grp in msys.groups:
+        per_chan = grp.cspec.peak_bytes_per_cycle \
+            / (grp.cspec.tCK_ps * 1e-12) / 1e9
+        total += grp.channels * per_chan
+    return total
 
 
-def channel_breakdown(cspec: CompiledSpec, stats) -> dict:
-    """Per-channel summary of one scalar run's ``stats.per_channel``:
-    ``{channel: {reads_done, writes_done, throughput_gbps, bus_util}}``."""
-    ch = stats.per_channel
-    seconds = float(stats.cycles) * cspec.tCK_ps * 1e-12
+def channel_breakdown(spec, stats) -> dict:
+    """Per-system-channel summary of one scalar run's ``stats``:
+    ``{channel: {group, standard, reads_done, writes_done,
+    throughput_gbps, bus_util}}`` — each channel's conversion uses its own
+    group's access_bytes and tCK."""
+    msys = as_system(spec)
+    _check_system_stats(msys, stats)
     out = {}
-    for c in range(cspec.n_channels):
-        moved = (int(ch.reads_done[c]) + int(ch.writes_done[c])) \
-            * cspec.access_bytes
-        out[c] = {
-            "reads_done": int(ch.reads_done[c]),
-            "writes_done": int(ch.writes_done[c]),
-            "throughput_gbps": moved / seconds / 1e9 if seconds else 0.0,
-            "bus_util": (float(ch.data_bus_busy[c]) / float(stats.cycles)
-                         if int(stats.cycles) else 0.0),
-        }
+    c_sys = 0
+    for g, (grp, ch) in enumerate(zip(msys.groups, stats.per_group)):
+        seconds = float(stats.cycles) * grp.cspec.tCK_ps * 1e-12
+        for c in range(grp.channels):
+            moved = (int(ch.reads_done[c]) + int(ch.writes_done[c])) \
+                * grp.cspec.access_bytes
+            out[c_sys] = {
+                "group": g,
+                "standard": grp.cspec.standard or grp.cspec.name,
+                "reads_done": int(ch.reads_done[c]),
+                "writes_done": int(ch.writes_done[c]),
+                "throughput_gbps": moved / seconds / 1e9 if seconds else 0.0,
+                "bus_util": (float(ch.data_bus_busy[c]) / float(stats.cycles)
+                             if int(stats.cycles) else 0.0),
+            }
+            c_sys += 1
     return out
 
 
-def avg_probe_latency_ns(cspec: CompiledSpec, stats) -> float:
+def avg_probe_latency_ns(spec, stats) -> float:
     """Mean random-probe read latency in nanoseconds (arrival to data
-    completion), NaN when no probe finished.  Scalar stats only — see the
-    batched-stats caveat above."""
+    completion — CXL-attached groups include the round-trip link time),
+    NaN when no probe finished.  Probe latencies are counted on the
+    system's shared cycle index and converted with the reference clock
+    (group 0's tCK).  Scalar stats only — see the batched-stats caveat
+    above."""
     if int(stats.probe_cnt) == 0:
         return float("nan")
     cycles = float(stats.probe_lat_sum) / float(stats.probe_cnt)
-    return cycles * cspec.tCK_ps * 1e-3
+    return cycles * as_system(spec).tCK_ps * 1e-3

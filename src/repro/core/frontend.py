@@ -32,7 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as C
-from repro.core.addrmap import AddressMapper, decode_fields, make_layout
+from repro.core.addrmap import (AddressMapper, decode_fields, make_layout,
+                                make_system_layout)
 from repro.core.compile import CompiledSpec
 
 
@@ -51,6 +52,7 @@ class FrontState(NamedTuple):
     probe_next: jnp.ndarray      # earliest clock for the next probe
     sent: jnp.ndarray            # streaming requests injected
     dropped_backpressure: jnp.ndarray
+    served: jnp.ndarray          # non-probe requests served (dep tracking)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,7 +97,8 @@ def init_front(seed: int = 0x1234) -> FrontState:
     return FrontState(accum_fp=jnp.int32(0), rng=jnp.uint32(seed | 1),
                       seq=jnp.int32(0), probe_busy=jnp.asarray(False),
                       probe_next=jnp.int32(0), sent=jnp.int32(0),
-                      dropped_backpressure=jnp.int32(0))
+                      dropped_backpressure=jnp.int32(0),
+                      served=jnp.int32(0))
 
 
 # --------------------------------------------------------------------------
@@ -109,15 +112,23 @@ class ReplayStream:
 
     Columns are host-side numpy int32 arrays of equal length N: target
     ``chan``, per-channel ``sub`` level indices ``(N, L-1)``, ``row``,
-    ``col``, and ``is_write``.  ``arrive`` (optional) carries the captured
-    arrival clock of each request: when present, replay honors the
-    captured inter-arrival gaps instead of the streaming interval — the
-    deltas (and, on wrap-around, the stream's span) pace the injection, so
-    a capture→replay round trip preserves the traffic's time structure.
-    The engine closes over the columns as constants; ``fingerprint`` (a
-    digest of the columns, ``arrive`` included when present) keys the
-    compile cache so two different streams never alias one compiled
-    program.
+    ``col``, and ``is_write``.  For heterogeneous systems ``chan`` is the
+    *system* channel id and ``sub`` is padded to the widest group's
+    sub-level count.  ``arrive`` (optional) carries the captured arrival
+    clock of each request: when present, replay honors the captured
+    inter-arrival gaps instead of the streaming interval — the deltas
+    (and, on wrap-around, the stream's span) pace the injection, so a
+    capture→replay round trip preserves the traffic's time structure.
+    ``dep`` (optional) carries same-address RAW/WAR dependencies: request
+    ``k`` with ``dep[k] = j >= 0`` has producer ``j`` (always earlier in
+    the stream) and is held at the frontend until every earlier stream
+    request — its producer included — has been served (a conservative
+    release that stays sound under FR-FCFS reordering), so replayed
+    requests respect read-after-write / write-after-read ordering instead
+    of arriving independently.  The engine closes over
+    the columns as constants; ``fingerprint`` (a digest of the columns,
+    ``arrive``/``dep`` included when present) keys the compile cache so
+    two different streams never alias one compiled program.
     """
     chan: np.ndarray
     sub: np.ndarray
@@ -126,6 +137,7 @@ class ReplayStream:
     is_write: np.ndarray
     arrive: np.ndarray | None = None
     fingerprint: str = ""
+    dep: np.ndarray | None = None
 
     def __post_init__(self):
         if not self.fingerprint:
@@ -133,6 +145,8 @@ class ReplayStream:
             cols = (self.chan, self.sub, self.row, self.col, self.is_write)
             if self.arrive is not None:
                 cols = cols + (self.arrive,)
+            if self.dep is not None:
+                cols = cols + (self.dep,)
             for a in cols:
                 h.update(np.ascontiguousarray(a, np.int32).tobytes())
             object.__setattr__(self, "fingerprint", h.hexdigest()[:16])
@@ -141,11 +155,24 @@ class ReplayStream:
         return int(self.chan.shape[0])
 
     @classmethod
-    def from_addresses(cls, cspec: CompiledSpec, addrs, is_write=None,
+    def from_addresses(cls, spec, addrs, is_write=None,
                        order: str = "RoBaRaCoCh") -> "ReplayStream":
-        """Decode a linear byte-address stream through ``order``."""
-        chan, sub, row, col = AddressMapper(cspec, order).to_chan_sub_row_col(
-            np.asarray(addrs, np.int64))
+        """Decode a linear byte-address stream through ``order``.
+
+        ``spec`` may be a :class:`repro.core.compile.CompiledSpec`
+        (homogeneous system) or a
+        :class:`repro.core.compile.MemorySystemSpec` — heterogeneous
+        streams decode through the system-level channel digit
+        (:class:`repro.core.addrmap.SystemAddressMapper`)."""
+        from repro.core.addrmap import SystemAddressMapper
+        from repro.core.compile import MemorySystemSpec
+        if isinstance(spec, MemorySystemSpec):
+            mapper = SystemAddressMapper(spec, order)
+            chan, sub, row, col = mapper.to_chan_sub_row_col(
+                np.asarray(addrs, np.int64))
+        else:
+            chan, sub, row, col = AddressMapper(
+                spec, order).to_chan_sub_row_col(np.asarray(addrs, np.int64))
         n = len(chan)
         wr = np.zeros(n, np.int32) if is_write is None \
             else np.asarray(is_write, np.int32)
@@ -161,6 +188,37 @@ class ReplayStream:
 
 def _lcg(rng):
     return rng * jnp.uint32(1664525) + jnp.uint32(1013904223)
+
+
+def _replay_want(want, replay, fs: FrontState, seq, idx, clk, n):
+    """Injection gate for the trace-driven stream source — the ONE home of
+    the pacing + dependency-hold rules (shared by the single-spec and
+    system frontends).
+
+    * Arrive pacing: when the stream carries captured ``arrive`` clocks,
+      request k is due at its captured arrival clock rebased to the
+      stream start (wrapped laps repeat the gap pattern shifted by the
+      stream's span) — this REPLACES the interval-accumulator gate.
+    * Dependency hold (``dep`` column): a request with a RAW/WAR producer
+      is additionally held until every earlier stream request has been
+      served (``fs.served >= seq``, the absolute injection position).
+      Injection is sequential, so this prefix-served condition implies
+      the producer itself was served — a conservative release that stays
+      sound under FR-FCFS reordering of the in-flight window.
+    """
+    if replay.arrive is not None:
+        # ``arrive`` is host-side numpy, so the pacing scalars are static
+        arr_np = np.asarray(replay.arrive)
+        base = int(arr_np[0])
+        span = int(arr_np[-1]) - base
+        gap = max(span // max(int(n) - 1, 1), 1)
+        arr = jnp.asarray(arr_np - base, jnp.int32)
+        lap = seq // jnp.int32(n)
+        want = clk >= arr[idx] + lap * jnp.int32(span + gap)
+    if replay.dep is not None:
+        prod = replay.dep[idx]
+        want = want & ((prod < 0) | (fs.served >= seq))
+    return want
 
 
 def _pack_fields(cspec: CompiledSpec, fields: dict):
@@ -257,19 +315,7 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
             chan, sub = replay.chan[idx], replay.sub[idx]
             row, col = replay.row[idx], replay.col[idx]
             is_write = replay.is_write[idx] != 0
-            if paced_by_arrive:
-                # honor captured inter-arrival gaps: request k is due at
-                # its captured arrival clock (rebased to the stream start);
-                # when the stream wraps, later laps repeat the same gap
-                # pattern shifted by the stream's span.  ``arrive`` is
-                # host-side numpy, so the pacing scalars are static.
-                arr_np = np.asarray(replay.arrive)
-                base = int(arr_np[0])
-                span = int(arr_np[-1]) - base
-                gap = max(span // max(int(n) - 1, 1), 1)
-                arr = jnp.asarray(arr_np - base, jnp.int32)
-                lap = seq // jnp.int32(n)
-                want = clk >= arr[idx] + lap * jnp.int32(span + gap)
+            want = _replay_want(want, replay, fs, seq, idx, clk, n)
         else:
             if cfg.pattern == "sequential":
                 chan, sub, row, col = _seq_addr(cspec, layout, seq)
@@ -289,17 +335,169 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
     return queues, FrontState(accum_fp=accum, rng=rng, seq=seq,
                               probe_busy=probe_busy,
                               probe_next=fs.probe_next, sent=sent,
-                              dropped_backpressure=dropped)
+                              dropped_backpressure=dropped,
+                              served=fs.served)
+
+
+# --------------------------------------------------------------------------
+# System-level frontend: one mapper routing across heterogeneous spec groups
+# --------------------------------------------------------------------------
+
+
+def _group_pack(cspec: CompiledSpec, fields: dict):
+    """(sub, row, col) of one group's decoded fields (no channel digit)."""
+    sub = jnp.stack([jnp.asarray(fields.get(lv, jnp.int32(0)), jnp.int32)
+                     for lv in cspec.levels[1:]])
+    return sub, fields["row"], fields["col"]
+
+
+def _seq_addr_system(msys, sublayouts, seq):
+    """Sequential pattern across a heterogeneous system: the linear
+    request counter's system channel digit is least significant; the
+    remainder decodes through every group's own layout (the router then
+    picks the owning group's decode)."""
+    chan = seq % jnp.int32(msys.n_channels)
+    q = seq // jnp.int32(msys.n_channels)
+    per_group = []
+    for grp, lay in zip(msys.groups, sublayouts):
+        per_group.append(_group_pack(grp.cspec, decode_fields(lay, q)))
+    return chan, per_group
+
+
+def _rand_addr_system(msys, sublayouts, rng):
+    """Random pattern across a heterogeneous system.
+
+    One LCG draw picks the system channel; then one draw per field *slot*
+    (the widest group's field count) feeds every group's fields — the rng
+    therefore advances by a static amount per request, independent of
+    which group ends up owning the address."""
+    r = _lcg(rng)
+    chan = ((r >> jnp.uint32(8)).astype(jnp.int32)
+            % jnp.int32(msys.n_channels))
+    n_slots = max(len(lay) for lay in sublayouts)
+    draws = []
+    for _ in range(n_slots):
+        r = _lcg(r)
+        draws.append((r >> jnp.uint32(8)).astype(jnp.int32))
+    per_group = []
+    for grp, lay in zip(msys.groups, sublayouts):
+        fields = {name: draws[i] % jnp.int32(count)
+                  for i, (name, count) in enumerate(lay)}
+        per_group.append(_group_pack(grp.cspec, fields))
+    return chan, per_group, r
+
+
+def _system_route(msys, queues: tuple, chan, is_write, is_probe, per_group,
+                  clk, want):
+    """Insert one request into the owning group's owning channel.
+
+    ``queues`` is the per-group tuple of channel-stacked queues; ``chan``
+    is the system channel id.  Exactly one (group, local channel) can
+    accept; a full target queue refuses (per-channel backpressure)."""
+    new_q, oks = [], []
+    base = 0
+    for grp, q_g, (sub, row, col) in zip(msys.groups, queues, per_group):
+        in_g = (chan >= jnp.int32(base)) \
+            & (chan < jnp.int32(base + grp.channels))
+        local = jnp.clip(chan - jnp.int32(base), 0, grp.channels - 1)
+        q_g, ok = route_insert(q_g, local, is_write, is_probe, sub, row,
+                               col, clk, want & in_g)
+        new_q.append(q_g)
+        oks.append(ok)
+        base += grp.channels
+    return tuple(new_q), jnp.any(jnp.stack(oks))
+
+
+def system_frontend_step(msys, cfg: FrontendConfig, fp: FrontParams,
+                         fs: FrontState, queues: tuple, clk, sys_layout,
+                         replay=None):
+    """Multi-group twin of :func:`frontend_step`.
+
+    ``queues`` is a per-group tuple (each leaf channel-stacked ``(C_g,
+    Q)``); ``sys_layout`` is :func:`repro.core.addrmap.make_system_layout`
+    output.  1-group systems delegate to :func:`frontend_step` verbatim,
+    so the homogeneous path's traced program is untouched.
+    """
+    if sys_layout[0] == "single":
+        q0, fs = frontend_step(msys.groups[0].cspec, cfg, fp, fs,
+                               queues[0], clk, sys_layout[1], replay)
+        return (q0,), fs
+    _, _n_channels, _bases, sublayouts = sys_layout
+    rng = fs.rng
+    accum = fs.accum_fp
+    sent = fs.sent
+    seq = fs.seq
+    dropped = fs.dropped_backpressure
+
+    if cfg.probes:
+        want_p = (~fs.probe_busy) & (clk >= fs.probe_next)
+        chan, per_group, rng = _rand_addr_system(msys, sublayouts, rng)
+        queues, okp = _system_route(msys, queues, chan, jnp.asarray(False),
+                                    jnp.asarray(True), per_group, clk,
+                                    want_p)
+        probe_busy = fs.probe_busy | okp
+    else:
+        probe_busy = fs.probe_busy
+
+    if cfg.stream:
+        if cfg.pattern == "trace" and replay is None:
+            raise ValueError('pattern="trace" needs a ReplayStream '
+                             "(Simulator(..., replay=...))")
+        paced_by_arrive = (cfg.pattern == "trace"
+                           and replay.arrive is not None)
+        accum = jnp.minimum(accum + jnp.int32(256),
+                            jnp.int32(cfg.max_backlog_fp))
+        want = accum >= fp.interval_fp
+        if cfg.pattern == "trace":
+            n = replay.chan.shape[0]
+            idx = seq % jnp.int32(n)
+            chan = replay.chan[idx]
+            row, col = replay.row[idx], replay.col[idx]
+            sub_all = replay.sub[idx]          # padded to the widest group
+            per_group = []
+            for grp in msys.groups:
+                n_sub = len(grp.cspec.levels) - 1
+                per_group.append((sub_all[:n_sub], row, col))
+            is_write = replay.is_write[idx] != 0
+            want = _replay_want(want, replay, fs, seq, idx, clk, n)
+        else:
+            if cfg.pattern == "sequential":
+                chan, per_group = _seq_addr_system(msys, sublayouts, seq)
+            else:
+                chan, per_group, rng = _rand_addr_system(msys, sublayouts,
+                                                         rng)
+            rng = _lcg(rng)
+            is_write = ((rng >> jnp.uint32(9)).astype(jnp.int32) % 256
+                        ) >= fp.read_ratio_fp
+        queues, ok = _system_route(msys, queues, chan, is_write,
+                                   jnp.asarray(False), per_group, clk, want)
+        if not paced_by_arrive:
+            accum = jnp.where(ok, accum - fp.interval_fp, accum)
+        seq = seq + ok.astype(jnp.int32)
+        sent = sent + ok.astype(jnp.int32)
+        dropped = dropped + (want & ~ok).astype(jnp.int32)
+
+    return queues, FrontState(accum_fp=accum, rng=rng, seq=seq,
+                              probe_busy=probe_busy,
+                              probe_next=fs.probe_next, sent=sent,
+                              dropped_backpressure=dropped,
+                              served=fs.served)
 
 
 def frontend_absorb(fs: FrontState, fp: FrontParams,
                     events: C.StepEvents) -> FrontState:
-    """Consume completion events (closes the probe loop).  Works on both
-    single-channel (scalar) and channel-stacked ``(C,)`` events: at most
-    one channel can complete the single in-flight probe."""
+    """Consume completion events (closes the probe loop and advances the
+    served-request counter the replay dependency hold reads).  Works on
+    both single-channel (scalar) and channel-stacked ``(C,)`` events: at
+    most one channel can complete the single in-flight probe.  For a
+    multi-group system the engine folds this once per spec group."""
     done = jnp.any(events.served_probe)
     completion = jnp.max(events.probe_completion)
+    served = (jnp.sum((events.served_read & ~events.served_probe)
+                      .astype(jnp.int32))
+              + jnp.sum(events.served_write.astype(jnp.int32)))
     return fs._replace(
         probe_busy=jnp.where(done, False, fs.probe_busy),
         probe_next=jnp.where(done, completion + fp.probe_gap,
-                             fs.probe_next))
+                             fs.probe_next),
+        served=fs.served + served)

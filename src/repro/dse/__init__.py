@@ -17,11 +17,12 @@ from repro.dse.executor import compile_group_key, execute, group_points
 from repro.dse.results import (Curve, SweepResult,
                                avg_probe_latency_ns_array, knee_index,
                                throughput_gbps_array)
-from repro.dse.spec import (DEFAULT_SYSTEMS, RunPoint, SweepSpec, System,
-                            system)
+from repro.dse.spec import (DEFAULT_SYSTEMS, Composition, RunPoint,
+                            SweepSpec, System, SystemGroup, system)
 
 __all__ = [
     "SweepSpec", "System", "RunPoint", "system", "DEFAULT_SYSTEMS",
+    "Composition", "SystemGroup",
     "execute", "group_points", "compile_group_key",
     "SweepResult", "Curve", "knee_index",
     "throughput_gbps_array", "avg_probe_latency_ns_array",

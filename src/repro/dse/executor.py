@@ -35,9 +35,26 @@ import numpy as np
 from repro.core import device as D
 from repro.core import engine as E
 from repro.core import frontend as F
-from repro.core.compile import compile_spec
+from repro.core.compile import as_system, compile_spec, compile_system
 from repro.dse import results as R
-from repro.dse.spec import SweepSpec
+from repro.dse.spec import Composition, SweepSpec
+
+
+def _compile_point_system(pt):
+    """Compile a RunPoint's memory system: a plain `System` becomes the
+    (1-group) CompiledSpec the historical cache key expects; a
+    `Composition` becomes a MemorySystemSpec with one compiled spec per
+    group."""
+    if isinstance(pt.system, Composition):
+        return compile_system([
+            dict(standard=g.system.standard, org_preset=g.system.org_preset,
+                 timing_preset=g.system.timing_preset,
+                 timing_overrides=g.system.overrides_dict,
+                 channels=g.channels, link_latency=g.link_latency)
+            for g in pt.system.groups])
+    return compile_spec(pt.system.standard, pt.system.org_preset,
+                        pt.system.timing_preset, pt.system.overrides_dict,
+                        channels=pt.n_channels)
 
 
 def compile_group_key(pt) -> tuple:
@@ -117,10 +134,9 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         idx = [i for i, _ in members]
         pts = [pt for _, pt in members]
         sy, ccfg, fcfg = pts[0].system, pts[0].controller, pts[0].frontend
-        cspec = compile_spec(sy.standard, sy.org_preset, sy.timing_preset,
-                             sy.overrides_dict,
-                             channels=pts[0].n_channels)
-        dp = D.dyn_params(cspec)
+        cspec = _compile_point_system(pts[0])
+        msys = as_system(cspec)
+        dp = tuple(D.dyn_params(g.cspec) for g in msys.groups)
         fp = _front_params(pts, fcfg)
         fp, pad = _shard_batch(fp, devices)
         fn = cache.get(cspec, ccfg, fcfg, pts[0].n_cycles,
@@ -146,17 +162,18 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
                         tr, os.path.join(trace_dir, f"point_{i:04d}.npz"))
         group_meta.append({"system": sy.label, "n_points": len(pts),
                            "n_channels": pts[0].n_channels,
+                           "n_spec_groups": msys.n_groups,
                            "mapper": fcfg.mapper,
                            "wall_s": round(time.perf_counter() - tg, 3)})
 
-        cols["throughput_gbps"][idx] = R.throughput_gbps_array(cspec, stats)
-        cols["latency_ns"][idx] = R.avg_probe_latency_ns_array(cspec, stats)
-        cols["peak_gbps"][idx] = E.peak_gbps(cspec)
+        cols["throughput_gbps"][idx] = R.throughput_gbps_array(msys, stats)
+        cols["latency_ns"][idx] = R.avg_probe_latency_ns_array(msys, stats)
+        cols["peak_gbps"][idx] = E.peak_gbps(msys)
         for k in ints:
             ints[k][idx] = np.asarray(getattr(stats, k))
         for j, i in enumerate(idx):
             cmd_counts[i] = np.asarray(stats.cmd_counts[j])
-            cmd_names[i] = list(cspec.cmd_names)
+            cmd_names[i] = list(msys.cmd_names)
 
     meta = {
         "n_points": n,

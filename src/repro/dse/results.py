@@ -25,23 +25,39 @@ from repro.trace.capture import config_doc
 # --------------------------------------------------------------------------
 
 
-def throughput_gbps_array(cspec: CompiledSpec, stats) -> np.ndarray:
-    """Achieved GB/s per batched point; works on (B,) or scalar stats."""
-    bytes_moved = (np.asarray(stats.reads_done, np.float64)
-                   + np.asarray(stats.writes_done)) * cspec.access_bytes
-    seconds = np.asarray(stats.cycles, np.float64) * cspec.tCK_ps * 1e-12
-    return np.divide(bytes_moved / 1e9, seconds,
-                     out=np.zeros_like(bytes_moved), where=seconds > 0)
+def throughput_gbps_array(spec, stats) -> np.ndarray:
+    """Achieved GB/s per batched point; works on (B,) or scalar stats.
+
+    ``spec`` may be a CompiledSpec or a MemorySystemSpec — heterogeneous
+    systems aggregate each group's bytes on that group's own clock
+    (group-correct, never one spec's bandwidth times total channels)."""
+    from repro.core.compile import as_system
+    from repro.core.engine import _check_system_stats
+    msys = as_system(spec)
+    _check_system_stats(msys, stats)
+    total = None
+    for grp, ch in zip(msys.groups, stats.per_group):
+        moved = (np.asarray(ch.reads_done, np.float64).sum(axis=-1)
+                 + np.asarray(ch.writes_done, np.float64).sum(axis=-1)) \
+            * grp.cspec.access_bytes
+        seconds = np.asarray(stats.cycles, np.float64) \
+            * grp.cspec.tCK_ps * 1e-12
+        tp = np.divide(moved / 1e9, seconds,
+                       out=np.zeros_like(moved), where=seconds > 0)
+        total = tp if total is None else total + tp
+    return total
 
 
-def avg_probe_latency_ns_array(cspec: CompiledSpec, stats) -> np.ndarray:
+def avg_probe_latency_ns_array(spec, stats) -> np.ndarray:
     """Mean probe latency in ns per batched point; NaN where no probe
-    finished."""
+    finished.  Probe latencies count on the system's shared cycle index
+    and convert with the reference clock (group 0's tCK)."""
+    from repro.core.compile import as_system
     cnt = np.asarray(stats.probe_cnt, np.float64)
     lat_sum = np.asarray(stats.probe_lat_sum, np.float64)
     cycles = np.divide(lat_sum, cnt, out=np.full_like(lat_sum, np.nan),
                        where=cnt > 0)
-    return cycles * cspec.tCK_ps * 1e-3
+    return cycles * as_system(spec).tCK_ps * 1e-3
 
 
 def knee_index(latency_ns, knee_factor: float = 2.0) -> int:
@@ -193,11 +209,24 @@ class SweepResult:
 
 
 def _point_doc(pt: RunPoint) -> dict:
+    from repro.dse.spec import Composition
+    if isinstance(pt.system, Composition):
+        sy_doc = {"composition": [
+            {"standard": g.system.standard,
+             "org_preset": g.system.org_preset,
+             "timing_preset": g.system.timing_preset,
+             "timing_overrides": list(g.system.timing_overrides),
+             "channels": g.channels, "link_latency": g.link_latency}
+            for g in pt.system.groups]}
+    else:
+        sy_doc = {
+            "standard": pt.system.standard,
+            "org_preset": pt.system.org_preset,
+            "timing_preset": pt.system.timing_preset,
+            "timing_overrides": list(pt.system.timing_overrides),
+        }
     return {
-        "standard": pt.system.standard,
-        "org_preset": pt.system.org_preset,
-        "timing_preset": pt.system.timing_preset,
-        "timing_overrides": list(pt.system.timing_overrides),
+        **sy_doc,
         "controller": config_doc(pt.controller),
         "frontend": config_doc(pt.frontend),
         "n_cycles": pt.n_cycles,
@@ -210,8 +239,19 @@ def _point_doc(pt: RunPoint) -> dict:
 def _point_from_doc(p: dict) -> RunPoint:
     from repro.core import controller as C
     from repro.core import frontend as F
-    sy = System(p["standard"], p["org_preset"], p["timing_preset"],
-                tuple(tuple(kv) for kv in p.get("timing_overrides", [])))
+    from repro.dse.spec import Composition, SystemGroup
+    if "composition" in p:
+        sy = Composition(tuple(
+            SystemGroup(System(g["standard"], g["org_preset"],
+                               g["timing_preset"],
+                               tuple(tuple(kv) for kv
+                                     in g.get("timing_overrides", []))),
+                        int(g.get("channels", 1)),
+                        int(g.get("link_latency", 0)))
+            for g in p["composition"]))
+    else:
+        sy = System(p["standard"], p["org_preset"], p["timing_preset"],
+                    tuple(tuple(kv) for kv in p.get("timing_overrides", [])))
     return RunPoint(system=sy,
                     controller=C.ControllerConfig(**p.get("controller", {})),
                     frontend=F.FrontendConfig(**p.get("frontend", {})),

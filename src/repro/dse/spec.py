@@ -84,11 +84,77 @@ def system(standard: str, timing_overrides: dict | None = None) -> System:
 
 
 @dataclasses.dataclass(frozen=True)
-class RunPoint:
-    """One concrete simulation: a system + controller + channel/mapper
-    configuration + one load point.  The mapper order rides inside
-    ``frontend.mapper``."""
+class SystemGroup:
+    """One spec group of a heterogeneous composition: a `System` fanned
+    out over `channels` identical channels, optionally behind a CXL-style
+    link adding `link_latency` cycles each way."""
     system: System
+    channels: int = 1
+    link_latency: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "system", System.make(self.system))
+
+    @property
+    def label(self) -> str:
+        lbl = f"{self.system.label}x{self.channels}"
+        if self.link_latency:
+            lbl += f"@{self.link_latency}"
+        return lbl
+
+
+@dataclasses.dataclass(frozen=True)
+class Composition:
+    """A heterogeneous memory system as a first-class sweep axis: an
+    ordered tuple of :class:`SystemGroup`s (e.g. DDR5 channels plus
+    CXL-attached DDR4 channels behind one mapper).  Compositions go into
+    ``SweepSpec.systems`` alongside plain systems; each composition is
+    its own compile group.  Entries coerce from `SystemGroup`, a
+    ``(standard_or_system, channels[, link_latency])`` tuple, or a bare
+    standard name / `System` (one channel, no link).
+
+    >>> Composition((("DDR5", 2), ("DDR4", 2, 80))).label
+    'DDR5x2+DDR4x2@80'
+    """
+    groups: tuple
+
+    def __post_init__(self):
+        out = []
+        for g in self.groups:
+            if isinstance(g, SystemGroup):
+                out.append(g)
+            elif isinstance(g, (str, System)):
+                out.append(SystemGroup(System.make(g)))
+            else:
+                sy, *rest = g
+                out.append(SystemGroup(
+                    System.make(sy),
+                    int(rest[0]) if rest else 1,
+                    int(rest[1]) if len(rest) > 1 else 0))
+        if not out:
+            raise ValueError("Composition needs at least one group")
+        object.__setattr__(self, "groups", tuple(out))
+
+    @property
+    def n_channels(self) -> int:
+        return sum(g.channels for g in self.groups)
+
+    @property
+    def label(self) -> str:
+        return "+".join(g.label for g in self.groups)
+
+    @property
+    def standard(self) -> str:      # mirror of System.standard for tables
+        return self.label
+
+
+@dataclasses.dataclass(frozen=True)
+class RunPoint:
+    """One concrete simulation: a system (plain `System` or heterogeneous
+    `Composition`) + controller + channel/mapper configuration + one load
+    point.  The mapper order rides inside ``frontend.mapper``; for a
+    composition ``n_channels`` is the system-wide channel total."""
+    system: object                  # System | Composition
     controller: C.ControllerConfig
     frontend: F.FrontendConfig
     n_cycles: int
@@ -113,16 +179,23 @@ class SweepSpec:
     intervals x read ratios.
 
     `systems` entries may be `System` objects, bare standard names (resolved
-    via `DEFAULT_SYSTEMS`), or (standard, org, timing[, overrides]) tuples.
-    ``channels`` sweeps the memory-system channel count and ``mappers``
-    the address-mapper order (see ``repro.core.addrmap.MAPPERS``) — both
-    are compile-group axes: each combination is its own compiled program,
-    with the whole load grid still vmapped inside it.
+    via `DEFAULT_SYSTEMS`), (standard, org, timing[, overrides]) tuples, or
+    heterogeneous `Composition`s (e.g. DDR5:CXL-DDR4 ratios / link
+    latencies as first-class sweep entries).  ``channels`` sweeps the
+    memory-system channel count of the PLAIN systems (compositions carry
+    their own per-group fan-out and ignore the axis) and ``mappers`` the
+    address-mapper order (see ``repro.core.addrmap.MAPPERS``) — all of
+    these are compile-group axes: each combination is its own compiled
+    program, with the whole load grid still vmapped inside it.
 
     >>> spec = SweepSpec(systems=("DDR4", "DDR5"),
     ...                  intervals=(16.0, 4.0, 1.0), read_ratios=(1.0, 0.5))
     >>> len(spec.expand())      # 2 * 1 * 1 * 1 * 3 * 2
     12
+    >>> hetero = SweepSpec(
+    ...     systems=(Composition((("DDR5", 2), ("DDR4", 2, 80))),
+    ...              Composition((("DDR5", 2), ("DDR4", 2, 160)))),
+    ...     intervals=(4.0, 1.0))        # link latency as a sweep axis
     """
     systems: tuple
     intervals: tuple = (64.0, 16.0, 8.0, 4.0, 2.0, 1.0)
@@ -144,7 +217,8 @@ class SweepSpec:
 
     def __post_init__(self):
         object.__setattr__(self, "systems",
-                           tuple(System.make(s) for s in self.systems))
+                           tuple(s if isinstance(s, Composition)
+                                 else System.make(s) for s in self.systems))
         object.__setattr__(self, "intervals",
                            tuple(float(i) for i in self.intervals))
         object.__setattr__(self, "read_ratios",
@@ -182,20 +256,26 @@ class SweepSpec:
 
     @property
     def n_points(self) -> int:
-        n = 1
-        for d in self.grid_shape:
-            n *= d
-        return n
+        return len(self.expand())
 
     def expand(self) -> list:
         """The full cartesian grid, in (system, controller, channels,
         mapper, interval, read_ratio) row-major order — the executor
-        relies on the load points of one compile group being contiguous."""
-        return [RunPoint(system=sy, controller=ct,
-                         frontend=dataclasses.replace(self.frontend,
-                                                      mapper=mp),
-                         n_cycles=self.n_cycles, interval=iv, read_ratio=rr,
-                         n_channels=nc)
-                for sy, ct, nc, mp, iv, rr in itertools.product(
-                    self.systems, self.controllers, self.channels,
-                    self.mappers, self.intervals, self.read_ratios)]
+        relies on the load points of one compile group being contiguous.
+        Compositions fix their own channel fan-out, so they expand once
+        per (controller, mapper, load point) regardless of the
+        ``channels`` axis."""
+        out = []
+        for sy, ct, nc, mp, iv, rr in itertools.product(
+                self.systems, self.controllers, self.channels,
+                self.mappers, self.intervals, self.read_ratios):
+            if isinstance(sy, Composition):
+                if nc != self.channels[0]:
+                    continue        # the channels axis is a no-op here
+                nc = sy.n_channels
+            out.append(RunPoint(
+                system=sy, controller=ct,
+                frontend=dataclasses.replace(self.frontend, mapper=mp),
+                n_cycles=self.n_cycles, interval=iv, read_ratio=rr,
+                n_channels=nc))
+        return out

@@ -4,6 +4,11 @@
     PYTHONPATH=src python -m repro.trace --standard DDR4 --cycles 20000 \\
         --out trace.npz --html trace.html
 
+    # heterogeneous (CXL-style) composition: repeatable --group
+    # STD[:CHANNELS[:LINK_LATENCY]] — per-group zero-violation audit
+    PYTHONPATH=src python -m repro.trace --group DDR5:2 --group DDR4:2:80 \\
+        --cycles 20000 --fail-on-violations
+
     # re-audit and re-render a saved artifact
     PYTHONPATH=src python -m repro.trace --load trace.npz --html trace.html
 
@@ -34,6 +39,13 @@ def build_parser() -> argparse.ArgumentParser:
     src.add_argument("--cycles", default=20_000, type=int)
     src.add_argument("--channels", default=1, type=int,
                      help="memory-system channel count")
+    src.add_argument("--group", default=None, action="append",
+                     metavar="STD[:CHANNELS[:LINK]]",
+                     help="heterogeneous spec group (repeatable): standard"
+                          " name from the default systems, channel count, "
+                          "CXL link latency in cycles — e.g. "
+                          "--group DDR5:2 --group DDR4:2:80.  Overrides "
+                          "--standard/--channels")
     src.add_argument("--mapper", default=None,
                      help="address-mapper order (see repro.core.addrmap."
                           "MAPPERS); default: the frontend's")
@@ -60,6 +72,46 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-violations", default=20, type=int,
                     help="violations to print (report stores up to 256)")
     return ap
+
+
+def _parse_group(text: str) -> dict:
+    parts = text.split(":")
+    std = parts[0]
+    if std not in DEFAULT_SYSTEMS:
+        raise SystemExit(f"no default org/timing for {std!r}; known: "
+                         f"{sorted(DEFAULT_SYSTEMS)}")
+    org, tim = DEFAULT_SYSTEMS[std]
+    return dict(standard=std, org_preset=org, timing_preset=tim,
+                channels=int(parts[1]) if len(parts) > 1 else 1,
+                link_latency=int(parts[2]) if len(parts) > 2 else 0)
+
+
+def _simulate_system(args):
+    from repro.core import ControllerConfig, Simulator, compile_system
+    from repro.trace.capture import capture
+    msys = compile_system([_parse_group(g) for g in args.group])
+    sim = Simulator(system=msys,
+                    controller=ControllerConfig(scheduler=args.scheduler),
+                    mapper=args.mapper)
+    stats, dense = sim.run(args.cycles, interval=args.interval,
+                           read_ratio=args.ratio, trace=True,
+                           seed=args.seed)
+    trace = capture(
+        msys, dense, controller=sim.controller, frontend=sim.frontend,
+        n_cycles_requested=args.cycles, interval=args.interval,
+        read_ratio=args.ratio, seed=args.seed)
+    print(f"simulated {args.cycles} cycles of {msys.label} "
+          f"({msys.n_channels} channels, {msys.n_groups} spec groups): "
+          f"{len(trace)} commands, {int(stats.reads_done)} reads / "
+          f"{int(stats.writes_done)} writes served")
+    ch = stats.per_channel
+    for c in range(msys.n_channels):
+        grp = msys.groups[msys.group_of_channel(c)]
+        std = grp.cspec.standard
+        link = f" (link {grp.link_latency})" if grp.link_latency else ""
+        print(f"  ch{c} [{std}{link}]: {int(ch.reads_done[c])} reads / "
+              f"{int(ch.writes_done[c])} writes")
+    return msys, trace
 
 
 def _simulate(args):
@@ -105,10 +157,14 @@ def main(argv=None) -> int:
 
     if args.load:
         trace = T.load(args.load)
-        cspec = trace.compiled_spec()
+        cspec = trace.compiled_system()
+        label = cspec.label if "system" in trace.meta \
+            else trace.meta["standard"]
         print(f"loaded {args.load}: {len(trace)} commands over "
-              f"{trace.n_cycles} cycles of {trace.meta['standard']} "
+              f"{trace.n_cycles} cycles of {label} "
               f"(fingerprint {trace.fingerprint})")
+    elif args.group:
+        cspec, trace = _simulate_system(args)
     else:
         cspec, trace = _simulate(args)
 

@@ -19,8 +19,12 @@ id — the trace's issue order is already time-sorted), and one
 traces are thereby audited per channel in the same vectorized pass —
 commands on different channels never constrain each other — and the
 report carries an explicit per-channel violation count (``by_channel``).
-Cost is O(n_constraints · N log N) for N commands, independent of cycle
-count and channel count.
+Heterogeneous traces (``group`` column, npz v3) are split by spec group
+first: every channel replays against its OWN group's constraint table
+(merged command ids mapped back to the group's local namespace), and the
+report additionally carries a per-group count (``by_group``).  Cost is
+O(n_constraints · N log N) for N commands, independent of cycle count and
+channel count.
 
 Scheduler checks replay two invariants of the modeled schedulers over the
 request information embedded in the trace:
@@ -40,7 +44,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import spec as S
-from repro.core.compile import CompiledSpec
+from repro.core.compile import CompiledSpec, MemorySystemSpec, as_system
 from repro.trace.capture import CommandTrace, spec_fingerprint_hex
 
 
@@ -48,7 +52,8 @@ from repro.trace.capture import CommandTrace, spec_fingerprint_hex
 class Violation:
     """One audit finding.  ``slack`` is issue clock minus earliest legal
     clock — negative means the command issued ``-slack`` cycles early.
-    ``chan`` is the memory-system channel the command issued on."""
+    ``chan`` is the memory-system channel the command issued on and
+    ``group`` its spec group (0 for homogeneous systems)."""
     check: str          # "timing" | "scheduler"
     constraint: str     # e.g. "ACT->RD @ bank lat=22" or "row_hit_first"
     clk: int            # cycle the offending command issued
@@ -59,6 +64,7 @@ class Violation:
     prev_clk: int = -1
     slack: int = 0
     chan: int = 0
+    group: int = 0
 
     def __str__(self):
         s = (f"[{self.check}] {self.constraint}: {self.cmd} @ clk "
@@ -80,6 +86,11 @@ class AuditReport:
     #: channel -> total violation count (every audited channel appears,
     #: so a clean multi-channel report shows an explicit zero per channel)
     by_channel: dict = dataclasses.field(default_factory=dict)
+    #: spec group -> total violation count (heterogeneous systems: every
+    #: group appears, each replayed against its OWN constraint table)
+    by_group: dict = dataclasses.field(default_factory=dict)
+    #: spec group -> display label ("DDR5", "DDR4@ll80", ...)
+    group_labels: dict = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -98,6 +109,11 @@ class AuditReport:
             parts = [f"{n} {name}" for name, n in sorted(self.checks.items())
                      if n]
             tail = f"{self.n_violations} violations ({', '.join(parts)})"
+        if len(self.by_group) > 1:
+            per = ", ".join(
+                f"g{g} {self.group_labels.get(g, '')}: {n}".replace("  ", " ")
+                for g, n in sorted(self.by_group.items()))
+            tail += f" [{per}]"
         if len(self.by_channel) > 1:
             per = ", ".join(f"ch{c}: {n}"
                             for c, n in sorted(self.by_channel.items()))
@@ -248,27 +264,10 @@ def _audit_age_order(cspec: CompiledSpec, trace: CommandTrace,
     return int(np.count_nonzero(regress))
 
 
-def audit(cspec: CompiledSpec | None, trace: CommandTrace, *,
-          check_fingerprint: bool = True, scheduler: str | None = None,
-          max_violations: int = 256) -> AuditReport:
-    """Audit a captured trace against ``cspec``'s constraint table.
-
-    ``cspec`` may be None — the spec is then recompiled from the trace's
-    embedded provenance.  When ``check_fingerprint`` is set (default), a
-    provided ``cspec`` must match the fingerprint the trace was captured
-    under.  ``scheduler`` defaults to the controller scheduler recorded in
-    the trace metadata; the row-hit-first check only applies to FR-FCFS.
-    """
-    if cspec is None:
-        cspec = trace.compiled_spec()
-    elif check_fingerprint and trace.fingerprint:
-        got = spec_fingerprint_hex(cspec)
-        if got != trace.fingerprint:
-            raise ValueError(
-                f"spec fingerprint {got} does not match trace fingerprint "
-                f"{trace.fingerprint}; audit would be meaningless "
-                "(pass check_fingerprint=False to override)")
-
+def _audit_one_spec(cspec: CompiledSpec, trace: CommandTrace,
+                    scheduler: str | None, max_violations: int):
+    """Run the three checks of one homogeneous (sub-)trace against one
+    constraint table.  Returns (checks, n_pairs, violations, ch_counts)."""
     n_channels = max(int(getattr(cspec, "n_channels", 1)),
                      int(trace.chan.max()) + 1 if len(trace) else 1)
     ch_counts = np.zeros(n_channels, np.int64)
@@ -277,8 +276,6 @@ def audit(cspec: CompiledSpec | None, trace: CommandTrace, *,
     checks["timing"], n_pairs = _audit_timing(cspec, trace, violations,
                                               max_violations, ch_counts)
 
-    if scheduler is None:
-        scheduler = trace.meta.get("controller", {}).get("scheduler")
     has_requests = bool(np.any(trace.arrive >= 0))
     if has_requests and scheduler == "FRFCFS":
         checks["row_hit_first"] = _audit_row_hit_first(
@@ -286,10 +283,108 @@ def audit(cspec: CompiledSpec | None, trace: CommandTrace, *,
     if has_requests and scheduler in ("FRFCFS", "FCFS"):
         checks["age_order"] = _audit_age_order(cspec, trace, violations,
                                                max_violations, ch_counts)
+    return checks, n_pairs, violations, ch_counts
 
+
+def _audit_system(msys: MemorySystemSpec, trace: CommandTrace,
+                  scheduler: str | None,
+                  max_violations: int) -> AuditReport:
+    """Heterogeneous audit: each spec group's commands are carved out of
+    the system trace (``group`` column), mapped back from the merged
+    command namespace into the group's local ids, and replayed against
+    the group's OWN constraint table — commands on different groups (or
+    different channels of one group) never constrain each other.  Channel
+    attribution in the merged report is system-wide."""
+    n_names = len(trace.cmd_names)
+    checks: dict = {}
+    n_pairs = 0
+    violations: list = []
+    ch_counts = np.zeros(msys.n_channels, np.int64)
+    by_group: dict = {}
+    labels: dict = {}
+    for g, grp in enumerate(msys.groups):
+        base = int(msys.chan_base[g])
+        labels[g] = grp.cspec.standard or grp.cspec.name
+        if grp.link_latency:
+            labels[g] += f"@ll{grp.link_latency}"
+        m = np.nonzero(trace.group == g)[0]
+        # merged-id -> group-local-id map; commands of other groups never
+        # appear under this group's mask, so -1 entries are unreachable
+        to_local = np.full(n_names, -1, np.int64)
+        to_local[msys.group_cmd_maps[g]] = np.arange(
+            len(msys.group_cmd_maps[g]))
+        local_cmd = to_local[trace.cmd[m]]
+        if np.any(local_cmd < 0):
+            raise ValueError(
+                f"trace rows of group {g} carry command ids outside the "
+                "group's namespace — group column and cmd ids disagree")
+        sub = CommandTrace(
+            clk=trace.clk[m], cmd=local_cmd.astype(np.int32),
+            bank=trace.bank[m], row=trace.row[m], bus=trace.bus[m],
+            arrive=trace.arrive[m], hit_ready=trace.hit_ready[m],
+            chan=(trace.chan[m] - base).astype(np.int32),
+            n_cycles=trace.n_cycles, cmd_names=list(grp.cspec.cmd_names),
+            meta=dict(trace.meta, n_channels=grp.channels))
+        g_checks, g_pairs, g_viols, g_counts = _audit_one_spec(
+            grp.cspec, sub, scheduler, max_violations - len(violations))
+        for v in g_viols:
+            v.chan += base
+            v.group = g
+        violations.extend(g_viols)
+        n_pairs += g_pairs
+        for k, n in g_checks.items():
+            checks[k] = checks.get(k, 0) + n
+        by_group[g] = int(sum(g_checks.values()))
+        ch_counts[base:base + grp.channels] += g_counts[:grp.channels]
     total = sum(checks.values())
     return AuditReport(n_commands=len(trace), n_pairs_checked=n_pairs,
                        checks=checks, violations=violations,
                        truncated=total > len(violations),
                        by_channel={c: int(n)
-                                   for c, n in enumerate(ch_counts)})
+                                   for c, n in enumerate(ch_counts)},
+                       by_group=by_group, group_labels=labels)
+
+
+def audit(spec, trace: CommandTrace, *,
+          check_fingerprint: bool = True, scheduler: str | None = None,
+          max_violations: int = 256) -> AuditReport:
+    """Audit a captured trace against its constraint table(s).
+
+    ``spec`` may be a :class:`CompiledSpec`, a heterogeneous
+    :class:`repro.core.compile.MemorySystemSpec` (each channel is then
+    replayed against its own group's constraint table), or None — the
+    spec/system is then recompiled from the trace's embedded provenance.
+    When ``check_fingerprint`` is set (default), a provided spec must
+    match the fingerprint the trace was captured under.  ``scheduler``
+    defaults to the controller scheduler recorded in the trace metadata;
+    the row-hit-first check only applies to FR-FCFS.
+    """
+    if spec is None:
+        spec = trace.compiled_system() if trace.n_groups > 1 \
+            else trace.compiled_spec()
+    elif check_fingerprint and trace.fingerprint:
+        got = spec_fingerprint_hex(spec)
+        if got != trace.fingerprint:
+            raise ValueError(
+                f"spec fingerprint {got} does not match trace fingerprint "
+                f"{trace.fingerprint}; audit would be meaningless "
+                "(pass check_fingerprint=False to override)")
+
+    if scheduler is None:
+        scheduler = trace.meta.get("controller", {}).get("scheduler")
+
+    if isinstance(spec, MemorySystemSpec):
+        if spec.n_groups > 1:
+            return _audit_system(spec, trace, scheduler, max_violations)
+        spec = spec.groups[0].cspec
+    cspec = spec
+
+    checks, n_pairs, violations, ch_counts = _audit_one_spec(
+        cspec, trace, scheduler, max_violations)
+    total = sum(checks.values())
+    return AuditReport(n_commands=len(trace), n_pairs_checked=n_pairs,
+                       checks=checks, violations=violations,
+                       truncated=total > len(violations),
+                       by_channel={c: int(n)
+                                   for c, n in enumerate(ch_counts)},
+                       by_group={0: total})

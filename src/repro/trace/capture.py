@@ -26,18 +26,22 @@ import hashlib
 import numpy as np
 
 from repro.core import engine as E
-from repro.core.compile import CompiledSpec, compile_spec
+from repro.core.compile import (CompiledSpec, MemorySystemSpec, compile_spec,
+                                compile_system)
 
-#: Columnar int32 fields of a CommandTrace, in save/load order.
+#: Columnar int32 fields of a CommandTrace, in save/load order.  The
+#: ``group`` column (npz format v3) is persisted separately so v1/v2
+#: hashes over these fields stay stable.
 FIELDS = ("clk", "cmd", "bank", "row", "bus", "arrive", "hit_ready", "chan")
 
 
-def spec_fingerprint_hex(cspec: CompiledSpec) -> str:
-    """Stable hex digest of the compiled-spec identity the engine keys
-    compilations on (standard/org/timing names + resolved timing table +
-    geometry)."""
+def spec_fingerprint_hex(spec) -> str:
+    """Stable hex digest of the compiled-spec — or memory-system — identity
+    the engine keys compilations on (per group: standard/org/timing names +
+    resolved timing table + geometry + channels + link latency).  A
+    1-group zero-link system digests identically to its bare spec."""
     return hashlib.sha256(
-        repr(E.spec_fingerprint(cspec)).encode()).hexdigest()[:16]
+        repr(E.system_fingerprint(spec)).encode()).hexdigest()[:16]
 
 
 @dataclasses.dataclass
@@ -66,10 +70,17 @@ class CommandTrace:
     #: traces; defaults to zeros when omitted for backward compatibility)
     chan: np.ndarray | None = None
     meta: dict = dataclasses.field(default_factory=dict)
+    #: spec group of each command (npz v3; all-zero for homogeneous
+    #: traces and when loading v1/v2 artifacts).  For heterogeneous
+    #: systems ``cmd`` ids index the MERGED ``cmd_names`` table; the
+    #: auditor maps them back to each group's local namespace.
+    group: np.ndarray | None = None
 
     def __post_init__(self):
         if self.chan is None:
             self.chan = np.zeros_like(np.asarray(self.clk, np.int32))
+        if self.group is None:
+            self.group = np.zeros_like(np.asarray(self.clk, np.int32))
 
     def __len__(self) -> int:
         return int(self.clk.shape[0])
@@ -77,6 +88,10 @@ class CommandTrace:
     @property
     def n_channels(self) -> int:
         return int(self.meta.get("n_channels", 1))
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.meta.get("system", ())) or 1
 
     @property
     def fingerprint(self) -> str:
@@ -90,7 +105,17 @@ class CommandTrace:
     def compiled_spec(self) -> CompiledSpec:
         """Recompile the spec this trace was captured from.  The stored
         resolved timing table is replayed as overrides, so post-hoc preset
-        edits round-trip exactly; the result is fingerprint-checked."""
+        edits round-trip exactly; the result is fingerprint-checked.
+        Heterogeneous traces have no single spec — use
+        :meth:`compiled_system`."""
+        if self.n_groups > 1:
+            raise ValueError(
+                "this trace was captured from a heterogeneous memory "
+                "system — use compiled_system()")
+        if "system" in self.meta:
+            # 1-group system capture (e.g. an all-CXL group with link
+            # latency): provenance lives in the system block
+            return self.compiled_system().groups[0].cspec
         m = self.meta
         cspec = compile_spec(m["standard"], m["org_preset"],
                              m["timing_preset"],
@@ -108,6 +133,22 @@ class CommandTrace:
                 "capture")
         return cspec
 
+    def compiled_system(self) -> MemorySystemSpec:
+        """Recompile the (possibly heterogeneous) memory system this trace
+        was captured from, fingerprint-checked — the system twin of
+        :meth:`compiled_spec` (which it wraps for plain-spec traces)."""
+        from repro.core.compile import as_system
+        if "system" not in self.meta:
+            return as_system(self.compiled_spec())
+        msys = system_from_meta(self.meta)
+        got = spec_fingerprint_hex(msys)
+        if self.fingerprint and got != self.fingerprint:
+            raise ValueError(
+                f"recompiled system fingerprint {got} != captured "
+                f"{self.fingerprint} — a standard definition changed "
+                "since capture")
+        return msys
+
 
 def config_doc(cfg) -> dict:
     """JSON-representable scalar fields of a config dataclass (callables —
@@ -123,23 +164,72 @@ def config_doc(cfg) -> dict:
     return out
 
 
-def base_meta(cspec: CompiledSpec, controller=None, frontend=None,
-              **extra) -> dict:
-    """Metadata block embedded in every capture: provenance + resolved
-    timings + fingerprint + optional run configuration."""
-    meta = {
+def system_from_meta(meta: dict) -> MemorySystemSpec:
+    """Rebuild a memory system from a capture's ``meta["system"]`` block
+    (the one shared reconstruction used by :meth:`CommandTrace.
+    compiled_system` and ``repro.trace.format.read_jsonl``).  Post-compile
+    geometry edits (rows/columns) are replayed per group."""
+    msys = compile_system([
+        dict(standard=g["standard"], org_preset=g["org_preset"],
+             timing_preset=g["timing_preset"],
+             timing_overrides={k: int(v) for k, v in g["timings"].items()},
+             channels=int(g["channels"]),
+             link_latency=int(g.get("link_latency", 0)))
+        for g in meta["system"]])
+    for g, doc in zip(msys.groups, meta["system"]):
+        g.cspec.rows = int(doc.get("rows", g.cspec.rows))
+        g.cspec.columns = int(doc.get("columns", g.cspec.columns))
+    return msys
+
+
+def _group_doc(cspec: CompiledSpec, channels: int, link_latency: int) -> dict:
+    return {
         "standard": cspec.standard or cspec.name,
         "org_preset": cspec.org_preset,
         "timing_preset": cspec.timing_preset,
         "timings": {k: int(v) for k, v in cspec.timings.items()},
-        "fingerprint": spec_fingerprint_hex(cspec),
         "rows": int(cspec.rows),
         "columns": int(cspec.columns),
         "tCK_ps": int(cspec.tCK_ps),
         "n_banks": int(cspec.n_banks),
-        "n_channels": int(cspec.n_channels),
+        "channels": int(channels),
+        "link_latency": int(link_latency),
         "dual_command_bus": bool(cspec.dual_command_bus),
     }
+
+
+def base_meta(spec, controller=None, frontend=None, **extra) -> dict:
+    """Metadata block embedded in every capture: provenance + resolved
+    timings + fingerprint + optional run configuration.  ``spec`` may be a
+    :class:`CompiledSpec` or a :class:`repro.core.compile.MemorySystemSpec`
+    — any non-trivial system (multiple groups, or a link latency) embeds
+    one provenance block per spec group under ``"system"``; the
+    homogeneous zero-link case keeps the historical flat spec block."""
+    if isinstance(spec, MemorySystemSpec) and not spec.homogeneous:
+        meta = {
+            "system": [_group_doc(g.cspec, g.channels, g.link_latency)
+                       for g in spec.groups],
+            "fingerprint": spec_fingerprint_hex(spec),
+            "n_channels": int(spec.n_channels),
+            "n_groups": int(spec.n_groups),
+        }
+    else:
+        if isinstance(spec, MemorySystemSpec):
+            spec = spec.groups[0].cspec
+        cspec = spec
+        meta = {
+            "standard": cspec.standard or cspec.name,
+            "org_preset": cspec.org_preset,
+            "timing_preset": cspec.timing_preset,
+            "timings": {k: int(v) for k, v in cspec.timings.items()},
+            "fingerprint": spec_fingerprint_hex(cspec),
+            "rows": int(cspec.rows),
+            "columns": int(cspec.columns),
+            "tCK_ps": int(cspec.tCK_ps),
+            "n_banks": int(cspec.n_banks),
+            "n_channels": int(cspec.n_channels),
+            "dual_command_bus": bool(cspec.dual_command_bus),
+        }
     if controller is not None:
         meta["controller"] = config_doc(controller)
     if frontend is not None:
@@ -161,18 +251,31 @@ def _normalize(trace):
     return cmd, bank, row, arrive, hit_ready
 
 
-def capture(cspec: CompiledSpec, trace, *, point: int | None = None,
+def capture(spec, trace, *, point: int | None = None,
             controller=None, frontend=None, **extra_meta) -> CommandTrace:
     """Compact dense engine trace arrays into a :class:`CommandTrace`.
 
+    ``spec`` is the :class:`CompiledSpec` (homogeneous) or
+    :class:`repro.core.compile.MemorySystemSpec` the run was built from.
     ``trace`` is the second element of ``Simulator.run(..., trace=True)``
     (dense ``[T, 2]`` arrays), or the vmapped ``[B, T, 2]`` stack a batched
     sweep produces — pass ``point=j`` to extract sweep point ``j``.
     Compaction is one vectorized ``nonzero`` over the issued mask; the
     resulting row order (cycle-major, bus 0 before bus 1) is exactly the
     order the engine applied the commands to device state in, which the
-    auditor relies on.
+    auditor relies on.  Heterogeneous captures resolve the engine's
+    group-local command ids into the system's merged ``cmd_names`` table
+    and attach the ``group`` column.
     """
+    if isinstance(spec, MemorySystemSpec):
+        if not spec.homogeneous:
+            # multiple groups, or a 1-group system behind a link: the
+            # identity (fingerprint, provenance) is the SYSTEM tuple
+            return _capture_system(spec, trace, point=point,
+                                   controller=controller, frontend=frontend,
+                                   **extra_meta)
+        spec = spec.groups[0].cspec
+    cspec = spec
     cmd, bank, row, arrive, hit_ready = _normalize(trace)
     n_channels = int(getattr(cspec, "n_channels", 1))
     # single-channel traces are [T, 2] (batched: [B, T, 2]); multi-channel
@@ -210,20 +313,124 @@ def capture(cspec: CompiledSpec, trace, *, point: int | None = None,
                        **extra_meta))
 
 
-def to_replay(trace: CommandTrace, cspec: CompiledSpec | None = None):
+def _capture_system(msys: MemorySystemSpec, trace, *, point=None,
+                    controller=None, frontend=None,
+                    **extra_meta) -> CommandTrace:
+    """System twin of :func:`capture`: dense ``[T, C_total, 2]`` arrays
+    whose command ids are group-local, resolved per event through the
+    channel→group map into the merged namespace."""
+    cmd, bank, row, arrive, hit_ready = _normalize(trace)
+    if msys.n_channels == 1:
+        # single-channel systems keep the engine's squeezed [T, 2]
+        # ([B, T, 2] batched) shape — restore the channel axis
+        expand = lambda a: np.expand_dims(a, axis=-2)
+        cmd, bank, row = expand(cmd), expand(bank), expand(row)
+        arrive, hit_ready = expand(arrive), expand(hit_ready)
+    if cmd.ndim == 4:
+        if point is None:
+            raise ValueError("batched [B, T, C, 2] trace: pass "
+                             "point=<batch index>")
+        sel = lambda a: a[point] if a.ndim == 4 else a
+        cmd, bank, row = sel(cmd), sel(bank), sel(row)
+        arrive, hit_ready = sel(arrive), sel(hit_ready)
+    if cmd.ndim != 3 or cmd.shape[1] != msys.n_channels:
+        raise ValueError(
+            f"expected [T, {msys.n_channels}, 2] trace arrays for "
+            f"{msys.label}, got {cmd.shape}")
+    n_cycles = int(cmd.shape[0])
+    idx = np.nonzero(cmd >= 0)               # cycle-major, channel, bus
+    t_idx, chan, bus_idx = idx
+    group = msys.chan_group[chan]
+    # lift group-local command ids into the merged namespace: one lut row
+    # per group, indexed per event by (group, local id)
+    max_local = max(len(m) for m in msys.group_cmd_maps)
+    lut = np.zeros((msys.n_groups, max_local), np.int64)
+    for g, m in enumerate(msys.group_cmd_maps):
+        lut[g, :len(m)] = m
+    gcmd = lut[group, cmd[idx]]
+    i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    return CommandTrace(
+        clk=i32(t_idx), cmd=i32(gcmd),
+        bank=i32(bank[idx]), row=i32(row[idx]),
+        bus=i32(bus_idx), arrive=i32(arrive[idx]),
+        hit_ready=i32(hit_ready[idx].astype(np.int32)),
+        chan=i32(chan), group=i32(group),
+        n_cycles=n_cycles, cmd_names=list(msys.cmd_names),
+        meta=base_meta(msys, controller=controller, frontend=frontend,
+                       **extra_meta))
+
+
+def _unflatten_banks(cspec: CompiledSpec, bank: np.ndarray,
+                     width: int) -> np.ndarray:
+    """Flat bank ids -> (N, width) sub-level indices (zero-padded)."""
+    counts = cspec.level_counts
+    b = bank.astype(np.int64)
+    subs = []
+    for i in range(len(counts) - 1, 0, -1):
+        subs.append(b % int(counts[i]))
+        b = b // int(counts[i])
+    sub = np.stack(subs[::-1], axis=-1)
+    if sub.shape[-1] < width:
+        pad = np.zeros(sub.shape[:-1] + (width - sub.shape[-1],), np.int64)
+        sub = np.concatenate([sub, pad], axis=-1)
+    return sub
+
+
+def _replay_deps(chan, bank, row, is_wr) -> np.ndarray:
+    """Same-address RAW/WAR dependency index per request, -1 = none.
+
+    Addresses are (chan, bank, row) — ``to_replay`` zeroes the column, so
+    the dependency granularity is the DRAM row.  A read depends on the
+    most recent earlier write to its row (RAW); a write depends on the
+    most recent earlier read (WAR).  Producers always precede their
+    dependents in the (arrival-ordered) stream."""
+    dep = np.full(len(chan), -1, np.int64)
+    last_w: dict = {}
+    last_r: dict = {}
+    for k in range(len(chan)):
+        key = (int(chan[k]), int(bank[k]), int(row[k]))
+        if is_wr[k]:
+            dep[k] = last_r.get(key, -1)
+            last_w[key] = k
+        else:
+            dep[k] = last_w.get(key, -1)
+            last_r[key] = k
+    return dep
+
+
+def to_replay(trace: CommandTrace, spec=None, *, deps: bool = False):
     """Derive a trace-driven-frontend :class:`repro.core.ReplayStream`
     from a captured trace's served column commands (final RD/WR with
-    request info), channel attribution included.  The captured ``arrive``
-    clocks ride along (sorted into arrival order), so replay paces
-    injection by the original inter-arrival gaps rather than the
-    streaming interval.  Feed the result to ``Simulator(...,
-    frontend=FrontendConfig(pattern="trace"), replay=...)`` to re-drive
-    any memory system with the same per-channel address stream."""
+    request info), channel — and, for heterogeneous traces, spec-group —
+    attribution included.  The captured ``arrive`` clocks ride along
+    (sorted into arrival order), so replay paces injection by the
+    original inter-arrival gaps rather than the streaming interval.  With
+    ``deps=True`` the stream additionally carries same-address RAW/WAR
+    dependencies (``ReplayStream.dep``): the frontend then holds each
+    dependent request until its producer has been served (conservatively:
+    until every earlier stream request has been — sound under FR-FCFS
+    reordering), instead of replaying them as independent arrivals.  Feed
+    the result to
+    ``Simulator(..., frontend=FrontendConfig(pattern="trace"),
+    replay=...)`` to re-drive any memory system with the same per-channel
+    address stream."""
     from repro.core import spec as S
+    from repro.core.compile import as_system
     from repro.core.frontend import ReplayStream
-    if cspec is None:
-        cspec = trace.compiled_spec()
-    fx = np.asarray(cspec.cmd_fx)[trace.cmd]
+    if spec is None:
+        msys = trace.compiled_system()
+    else:
+        msys = as_system(spec)
+    # per-event fx flags in the trace's command namespace: for a system
+    # trace the namespace is merged, so resolve fx through each group
+    if msys.n_groups == 1:
+        fx = np.asarray(msys.groups[0].cspec.cmd_fx)[trace.cmd]
+    else:
+        n_names = len(trace.cmd_names)
+        fx_lut = np.zeros((msys.n_groups, n_names), np.int64)
+        for g, grp in enumerate(msys.groups):
+            fx_lut[g, msys.group_cmd_maps[g]] = grp.cspec.cmd_fx
+        fx = fx_lut[trace.group, trace.cmd]
     is_wr = (fx & S.FX_FINAL_WR) != 0
     sel = np.nonzero((((fx & S.FX_FINAL_RD) != 0) | is_wr)
                      & (trace.arrive >= 0))[0]
@@ -233,15 +440,24 @@ def to_replay(trace: CommandTrace, cspec: CompiledSpec | None = None):
     # order (issue order is scheduler-permuted under FR-FCFS) — this is
     # also what makes the arrive column a monotone pacing schedule
     sel = sel[np.argsort(trace.arrive[sel], kind="stable")]
-    counts = cspec.level_counts
-    b = trace.bank[sel].astype(np.int64)
-    subs = []
-    for i in range(len(counts) - 1, 0, -1):
-        subs.append(b % int(counts[i]))
-        b = b // int(counts[i])
+    width = max(len(g.cspec.levels) - 1 for g in msys.groups)
+    if msys.n_groups == 1:
+        sub = _unflatten_banks(msys.groups[0].cspec, trace.bank[sel], width)
+    else:
+        sub = np.zeros((len(sel), width), np.int64)
+        gsel = trace.group[sel]
+        for g, grp in enumerate(msys.groups):
+            m = gsel == g
+            if np.any(m):
+                sub[m] = _unflatten_banks(grp.cspec, trace.bank[sel][m],
+                                          width)
     i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    chan = i32(trace.chan[sel])
+    row = i32(np.maximum(trace.row[sel], 0))
+    dep = None
+    if deps:
+        dep = i32(_replay_deps(chan, trace.bank[sel], row, is_wr[sel]))
     return ReplayStream(
-        chan=i32(trace.chan[sel]), sub=i32(np.stack(subs[::-1], axis=-1)),
-        row=i32(np.maximum(trace.row[sel], 0)),
+        chan=chan, sub=i32(sub), row=row,
         col=np.zeros(len(sel), np.int32), is_write=i32(is_wr[sel]),
-        arrive=i32(trace.arrive[sel]))
+        arrive=i32(trace.arrive[sel]), dep=dep)

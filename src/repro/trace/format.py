@@ -7,8 +7,7 @@ attached to a CI run as a single object.  ``save``/``load`` are exact
 round-trips (tested field-for-field).
 
 JSONL export streams one record per issued command for interop with external
-trace tooling; ``iter_records`` is the shared record iterator the legacy
-``core/viz`` shim also uses.
+trace tooling; ``iter_records`` is the shared record iterator.
 """
 from __future__ import annotations
 
@@ -18,9 +17,10 @@ import numpy as np
 
 from repro.trace.capture import FIELDS, CommandTrace
 
-#: v2 added the ``chan`` (memory-system channel) column; v1 artifacts load
-#: with an all-zero channel column.
-_FORMAT_VERSION = 2
+#: v2 added the ``chan`` (memory-system channel) column; v3 added the
+#: ``group`` (spec group) column for heterogeneous systems.  v1/v2
+#: artifacts load with all-zero channel/group columns.
+_FORMAT_VERSION = 3
 
 
 def save(trace: CommandTrace, path: str) -> str:
@@ -33,12 +33,14 @@ def save(trace: CommandTrace, path: str) -> str:
         n_cycles=np.int64(trace.n_cycles),
         cmd_names=np.array(trace.cmd_names),   # numpy infers the U width
         meta_json=np.array(json.dumps(trace.meta)),
+        group=trace.group,
         **{f: getattr(trace, f) for f in FIELDS})
     return path
 
 
 def load(path: str) -> CommandTrace:
-    """Load a trace artifact written by :func:`save`."""
+    """Load a trace artifact written by :func:`save` (any version up to
+    the current one)."""
     with np.load(path, allow_pickle=False) as z:
         version = int(z["__version__"])
         if version > _FORMAT_VERSION:
@@ -46,6 +48,8 @@ def load(path: str) -> CommandTrace:
                              f"than supported {_FORMAT_VERSION}")
         cols = {f: np.ascontiguousarray(z[f], np.int32)
                 for f in FIELDS if f in z}   # v1: no chan column
+        if "group" in z:                     # v3: spec-group column
+            cols["group"] = np.ascontiguousarray(z["group"], np.int32)
         return CommandTrace(
             n_cycles=int(z["n_cycles"]),
             cmd_names=[str(n) for n in z["cmd_names"]],
@@ -66,7 +70,7 @@ def iter_records(trace: CommandTrace, start: int = 0,
         yield {"clk": int(clk[i]), "cmd": names[int(trace.cmd[i])],
                "bank": int(trace.bank[i]), "row": int(trace.row[i]),
                "bus": int(trace.bus[i]), "arrive": int(trace.arrive[i]),
-               "chan": int(trace.chan[i])}
+               "chan": int(trace.chan[i]), "group": int(trace.group[i])}
 
 
 def write_jsonl(trace: CommandTrace, path_or_file) -> int:
@@ -101,13 +105,17 @@ def read_jsonl(path_or_file) -> CommandTrace:
     finally:
         if own:
             f.close()
-    # command names come from the resolved spec in the metadata
-    from repro.core.compile import compile_spec
-    cspec = compile_spec(meta["standard"], meta["org_preset"],
-                         meta["timing_preset"],
-                         {k: int(v) for k, v in meta["timings"].items()},
-                         channels=int(meta.get("n_channels", 1)))
-    names = list(cspec.cmd_names)
+    # command names come from the resolved spec/system in the metadata
+    if "system" in meta:
+        from repro.trace.capture import system_from_meta
+        names = list(system_from_meta(meta).cmd_names)
+    else:
+        from repro.core.compile import compile_spec
+        cspec = compile_spec(meta["standard"], meta["org_preset"],
+                             meta["timing_preset"],
+                             {k: int(v) for k, v in meta["timings"].items()},
+                             channels=int(meta.get("n_channels", 1)))
+        names = list(cspec.cmd_names)
     i32 = lambda k, d=0: np.asarray([r.get(k, d) for r in recs], np.int32)
     return CommandTrace(
         clk=i32("clk"), cmd=np.asarray([names.index(r["cmd"]) for r in recs],
@@ -115,5 +123,5 @@ def read_jsonl(path_or_file) -> CommandTrace:
         bank=i32("bank"), row=i32("row"), bus=i32("bus"),
         arrive=i32("arrive", -1),
         hit_ready=np.zeros(len(recs), np.int32),   # not exported to JSONL
-        chan=i32("chan"),
+        chan=i32("chan"), group=i32("group"),
         n_cycles=int(header["n_cycles"]), cmd_names=names, meta=meta)

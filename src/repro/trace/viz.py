@@ -31,6 +31,7 @@ import math
 import numpy as np
 
 from repro.core import spec as S
+from repro.core.compile import as_system
 from repro.trace.capture import CommandTrace
 
 PALETTE = ["#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f",
@@ -41,41 +42,92 @@ PALETTE = ["#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f",
 MAX_OVERLAY_VIOLATIONS = 500
 
 
-def _lanes(trace: CommandTrace, cspec) -> np.ndarray:
-    """Display lane per command: channel-major — each channel contributes
-    ``n_banks`` bank lanes plus one refresh-engine lane, so multi-channel
-    traces render as stacked per-channel lane groups.  Traces without
-    request info (legacy 3-array captures have ``arrive == -1``
-    everywhere) fall back to command kind, and negative banks are always
-    routed to their channel's refresh lane."""
-    if bool(np.any(trace.arrive >= 0)):
-        refresh = trace.arrive < 0
-    else:
-        refresh = np.asarray(cspec.cmd_kind)[trace.cmd] == S.KIND_REF
-    local = np.where(refresh | (trace.bank < 0), cspec.n_banks, trace.bank)
-    return trace.chan * (cspec.n_banks + 1) + local
+class _View:
+    """Per-system-channel display geometry: lane bases, bank counts, data
+    burst lengths, and lane labels — possibly different per channel for a
+    heterogeneous system (lanes are labeled by standard)."""
+
+    def __init__(self, msys, trace: CommandTrace):
+        self.msys = msys
+        nch = msys.n_channels
+        self.n_banks = np.asarray(
+            [msys.groups[g].cspec.n_banks for g in msys.chan_group],
+            np.int64)
+        self.nbl = np.asarray(
+            [int(msys.groups[g].cspec.timings["nBL"])
+             for g in msys.chan_group], np.int64)
+        self.lane_base = np.concatenate(
+            [[0], np.cumsum(self.n_banks + 1)[:-1]])
+        self.n_lanes = int(np.sum(self.n_banks + 1))
+        self.n_cmd_buses = sum(
+            (2 if msys.groups[g].cspec.dual_command_bus else 1)
+            for g in msys.chan_group)
+        # merged-namespace command kinds (groups agree on shared names'
+        # kinds in practice; first writer wins) for the legacy fallback
+        kind = np.zeros(len(trace.cmd_names), np.int64)
+        for g in range(msys.n_groups - 1, -1, -1):
+            kind[msys.group_cmd_maps[g]] = msys.groups[g].cspec.cmd_kind
+        self.kind = kind
+        hetero = msys.n_groups > 1
+        self.lane_names = []
+        for c in range(nch):
+            std = msys.groups[msys.chan_group[c]].cspec.standard
+            for b in range(int(self.n_banks[c])):
+                if nch == 1:
+                    self.lane_names.append(f"bank {b}")
+                elif hetero:
+                    self.lane_names.append(f"ch{c} {std} b{b}")
+                else:
+                    self.lane_names.append(f"ch{c} b{b}")
+            if nch == 1:
+                self.lane_names.append("refresh")
+            elif hetero:
+                self.lane_names.append(f"ch{c} {std} ref")
+            else:
+                self.lane_names.append(f"ch{c} ref")
+
+    def lanes(self, trace: CommandTrace) -> np.ndarray:
+        """Display lane per command: channel-major — each channel
+        contributes its banks plus one refresh-engine lane.  Traces
+        without request info (legacy 3-array captures have ``arrive == -1``
+        everywhere) fall back to command kind, and negative banks are
+        always routed to their channel's refresh lane."""
+        if bool(np.any(trace.arrive >= 0)):
+            refresh = trace.arrive < 0
+        else:
+            refresh = self.kind[trace.cmd] == S.KIND_REF
+        nb = self.n_banks[trace.chan]
+        local = np.where(refresh | (trace.bank < 0), nb,
+                         np.minimum(trace.bank, nb))
+        return self.lane_base[trace.chan] + local
 
 
-def _bin_payload(trace: CommandTrace, cspec, n_bins: int) -> dict:
+def _bin_payload(trace: CommandTrace, view: _View, n_bins: int) -> dict:
     """Precompute the LOD summaries: per-bin bus occupancy and per
-    (bin, lane) dominant command + count."""
+    (bin, lane) dominant command + count.  Data-bus occupancy weighs each
+    final RD/WR by its OWN channel's burst length (heterogeneous groups
+    have different nBL)."""
     T = max(1, trace.n_cycles)
     bw = max(1, math.ceil(T / n_bins))
     nb = math.ceil(T / bw)
-    # per channel: n_banks bank lanes + 1 refresh-engine lane
-    n_lanes = int(cspec.n_channels) * (int(cspec.n_banks) + 1)
+    n_lanes = view.n_lanes
     b = trace.clk // bw
 
     ca = np.bincount(b, minlength=nb)
-    fx = np.asarray(cspec.cmd_fx)[trace.cmd]
+    msys = view.msys
+    n_names = len(trace.cmd_names)
+    fx_lut = np.zeros((msys.n_groups, n_names), np.int64)
+    for g, grp in enumerate(msys.groups):
+        fx_lut[g, msys.group_cmd_maps[g]] = grp.cspec.cmd_fx
+    fx = fx_lut[trace.group, trace.cmd]
     final = (fx & (S.FX_FINAL_RD | S.FX_FINAL_WR)) != 0
-    nbl = int(cspec.timings["nBL"])
-    data = np.bincount(b[final], minlength=nb) * nbl
+    data = np.bincount(b[final], weights=view.nbl[trace.chan[final]],
+                       minlength=nb).astype(np.int64)
 
-    lane = _lanes(trace, cspec)
+    lane = view.lanes(trace)
     flat = b.astype(np.int64) * n_lanes + lane
-    counts = np.zeros((cspec.n_cmds, nb * n_lanes), np.int32)
-    for c in range(cspec.n_cmds):
+    counts = np.zeros((n_names, nb * n_lanes), np.int32)
+    for c in range(n_names):
         m = trace.cmd == c
         if m.any():
             counts[c] = np.bincount(flat[m], minlength=nb * n_lanes)
@@ -90,17 +142,22 @@ def _bin_payload(trace: CommandTrace, cspec, n_bins: int) -> dict:
 def render_html(trace: CommandTrace, cspec=None, report=None,
                 title: str = "", n_bins: int = 2048,
                 raw_limit: int = 100_000) -> str:
-    """Render the two-view HTML.  ``report`` (an
-    :class:`repro.trace.audit.AuditReport`) adds the violation overlay."""
+    """Render the two-view HTML.  ``cspec`` may be a CompiledSpec, a
+    :class:`repro.core.compile.MemorySystemSpec` (heterogeneous traces
+    label their lanes by standard), or None (recompiled from the trace).
+    ``report`` (an :class:`repro.trace.audit.AuditReport`) adds the
+    violation overlay."""
     if cspec is None:
-        cspec = trace.compiled_spec()
+        msys = trace.compiled_system()
+    else:
+        msys = as_system(cspec)
+    view = _View(msys, trace)
     colors = {name: PALETTE[i % len(PALETTE)]
               for i, name in enumerate(trace.cmd_names)}
-    n_cmd_buses = 2 if cspec.dual_command_bus else 1
 
     recs = None
     if len(trace) <= raw_limit:
-        lane = _lanes(trace, cspec)
+        lane = view.lanes(trace)
         recs = {"clk": trace.clk.tolist(), "cmd": trace.cmd.tolist(),
                 "lane": lane.tolist(), "row": trace.row.tolist(),
                 "bus": trace.bus.tolist()}
@@ -111,18 +168,16 @@ def render_html(trace: CommandTrace, cspec=None, report=None,
             viols.append({"clk": v.clk, "cmd": v.cmd,
                           "label": f"{v.check}: {v.constraint}"})
     payload = {
-        "title": title or f"{cspec.name} command trace",
-        "standard": cspec.name,
-        "n_banks": int(cspec.n_banks),
-        "n_channels": int(cspec.n_channels),
+        "title": title or f"{msys.label} command trace",
+        "standard": msys.label,
+        "n_channels": int(msys.n_channels),
         "n_cycles": int(trace.n_cycles),
         "n_commands": len(trace),
-        "nBL": int(cspec.timings["nBL"]),
-        "n_cmd_buses": n_cmd_buses,
+        "n_cmd_buses": view.n_cmd_buses,    # summed across channels
         "cmd_names": list(trace.cmd_names),
         "colors": colors,
-        "kind": [int(k) for k in cspec.cmd_kind],
-        "bins": _bin_payload(trace, cspec, n_bins),
+        "lane_names": view.lane_names,
+        "bins": _bin_payload(trace, view, n_bins),
         "recs": recs,
         "viols": viols,
         "n_violations": 0 if report is None else report.n_violations,
@@ -192,27 +247,25 @@ function layout(){
   busC.width = busC.clientWidth; cmdC.width = cmdC.clientWidth;
   pxPerClk = zoomVal(+document.getElementById('zoom').value); draw();
 }
-const CH_LANES = D.n_banks + 1;      // per channel: banks + refresh lane
+const N_LANES = D.lane_names.length; // channel lane groups (possibly
+                                     // heterogeneous bank counts)
 function laneGeom(){
-  // channel lane groups + one shared audit-violation lane
-  const lanes = D.n_channels * CH_LANES + 1;
+  // per-channel lane groups + one shared audit-violation lane
+  const lanes = N_LANES + 1;
   const laneH = Math.max(5, Math.floor((cmdC.height-24)/lanes));
   return {lanes, laneH};
 }
 function laneName(l){
-  if (l >= D.n_channels * CH_LANES) return 'audit';
-  const c = Math.floor(l / CH_LANES), b = l % CH_LANES;
-  const bank = (b < D.n_banks) ? ('bank '+b) : 'refresh';
-  return D.n_channels > 1 ? ('ch'+c+' '+(b<D.n_banks?('b'+b):'ref')) : bank;
+  return (l >= N_LANES) ? 'audit' : D.lane_names[l];
 }
 function drawCmds(){
   const W = cmdC.width, {lanes, laneH} = laneGeom();
   const g = cmdC.getContext('2d'); g.clearRect(0,0,W,cmdC.height);
   g.font='10px sans-serif'; g.fillStyle='#888';
-  for (let l=0;l<D.n_channels*CH_LANES;l++)
+  for (let l=0;l<N_LANES;l++)
     g.fillText(laneName(l), 2, 8+l*laneH+laneH*0.7);
   g.fillStyle='#c0392b';
-  g.fillText('audit', 2, 8+(D.n_channels*CH_LANES)*laneH+laneH*0.7);
+  g.fillText('audit', 2, 8+N_LANES*laneH+laneH*0.7);
   const x0 = clk => (clk-off)*pxPerClk + ML;
   const rawMode = D.recs && pxPerClk >= 0.5;
   if (rawMode){
@@ -263,7 +316,8 @@ function drawBus(){
   bg.clearRect(0,0,busC.width,busC.height);
   const B = D.bins, bw = B.bw;
   // derived denominators: each channel contributes its own C/A + data bus
-  const caCap = bw * D.n_cmd_buses * D.n_channels;  // C/A slots per bin
+  // D.n_cmd_buses is already summed across channels
+  const caCap = bw * D.n_cmd_buses;       // C/A slots per bin
   const dataCap = bw * D.n_channels;      // data-bus cycles per bin
   const w = Math.max(1, (busC.width-ML-10)/B.nb);
   bg.fillStyle='#888'; bg.font='10px sans-serif';

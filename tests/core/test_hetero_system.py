@@ -1,0 +1,426 @@
+"""Heterogeneous memory-system tests (PR 5 tentpole acceptance):
+per-spec channel groups behind one mapper — compile-once, group-indexed
+scan state, CXL link latency, group-correct metrics, mixed-radix system
+address mapping, and the 1-group ≡ channels=N equivalence property."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, FrontendConfig, MemorySystemSpec,
+                        ReplayStream, Simulator, as_system,
+                        channel_breakdown, compile_spec, compile_system,
+                        peak_gbps, throughput_gbps)
+from repro.core import engine as E
+from repro.core.addrmap import MAPPERS, SystemAddressMapper
+from repro.dse.spec import DEFAULT_SYSTEMS
+from repro.trace import audit, capture, load, save, to_replay
+from repro.trace.capture import FIELDS
+
+
+def _ddr5_ddr4(link: int = 80, channels=(2, 2)) -> MemorySystemSpec:
+    return compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=channels[0]),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=channels[1],
+             link_latency=link),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 2-group DDR5 + CXL-DDR4 system compiles once, runs under jit,
+# audits clean per group
+# ---------------------------------------------------------------------------
+
+def test_hetero_system_compiles_once_and_audits_clean():
+    E.RUN_CACHE.clear()
+    msys = _ddr5_ddr4()
+    sim = Simulator(system=msys)
+    t0 = E.TRACE_COUNT
+    stats, dense = sim.run(2500, interval=1.0, read_ratio=0.7, trace=True)
+    assert E.TRACE_COUNT - t0 == 1          # one jax trace for the system
+    # re-runs and REBUILT equal systems reuse the same compiled program
+    sim.run(2500, interval=4.0, read_ratio=0.5, trace=True)
+    Simulator(system=_ddr5_ddr4()).run(2500, interval=2.0, trace=True)
+    assert E.TRACE_COUNT - t0 == 1
+
+    # traffic reached every system channel of both groups
+    assert (np.asarray(stats.per_channel.reads_done)
+            + np.asarray(stats.per_channel.writes_done) > 0).all()
+    assert stats.per_channel.reads_done.shape == (4,)
+    assert len(stats.per_group) == 2
+    assert stats.per_group[0].reads_done.shape == (2,)
+
+    # zero-violation per-group audit: each channel replays against its
+    # OWN group's constraint table
+    tr = capture(msys, dense, controller=sim.controller,
+                 frontend=sim.frontend)
+    assert set(np.unique(tr.group)) == {0, 1}
+    rep = audit(msys, tr)
+    assert rep.ok, [str(v) for v in rep.violations[:5]]
+    assert rep.by_group == {0: 0, 1: 0}
+    assert rep.by_channel == {0: 0, 1: 0, 2: 0, 3: 0}
+    assert rep.group_labels[1].startswith("DDR4")
+
+
+def test_hetero_and_homogeneous_split_compile_cache():
+    E.RUN_CACHE.clear()
+    Simulator(system=_ddr5_ddr4(link=0)).run(200)
+    Simulator(system=_ddr5_ddr4(link=80)).run(200)   # link splits the key
+    Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4).run(200)
+    assert E.RUN_CACHE.misses == 3
+
+
+def test_merged_command_namespace_consistent():
+    msys = _ddr5_ddr4()
+    stats = Simulator(system=msys).run(1500, interval=1.0, read_ratio=0.7)
+    # aggregate counts are the per-channel merged-namespace counts summed
+    np.testing.assert_array_equal(
+        np.asarray(stats.per_channel.cmd_counts).sum(axis=0),
+        np.asarray(stats.cmd_counts))
+    # and every group's native counts land on the right merged ids
+    for g, ch in enumerate(stats.per_group):
+        gmap = msys.group_cmd_maps[g]
+        base = int(msys.chan_base[g])
+        nch = msys.groups[g].channels
+        lifted = np.asarray(stats.per_channel.cmd_counts)[base:base + nch]
+        np.testing.assert_array_equal(lifted[:, gmap],
+                                      np.asarray(ch.cmd_counts))
+
+
+# ---------------------------------------------------------------------------
+# Property: a 1-group MemorySystemSpec is bit-exact with the channels=N path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("standard", sorted(DEFAULT_SYSTEMS))
+def test_one_group_system_bit_exact_with_channels_path(standard):
+    org, tim = DEFAULT_SYSTEMS[standard]
+    classic = Simulator(standard, org, tim, channels=2)
+    grouped = Simulator(system=[dict(standard=standard, org_preset=org,
+                                     timing_preset=tim, channels=2)])
+    # both spellings alias ONE compiled program (same cache key) ...
+    E.RUN_CACHE.clear()
+    _, d1 = classic.run(1000, interval=2.0, read_ratio=0.7, trace=True)
+    assert E.RUN_CACHE.misses == 1
+    _, d2 = grouped.run(1000, interval=2.0, read_ratio=0.7, trace=True)
+    assert E.RUN_CACHE.misses == 1 and E.RUN_CACHE.hits == 1
+    # ... and the command streams are bit-exact column for column
+    t1 = capture(classic.cspec, d1)
+    t2 = capture(grouped.msys, d2)
+    for f in FIELDS + ("group",):
+        np.testing.assert_array_equal(getattr(t1, f), getattr(t2, f),
+                                      err_msg=(standard, f))
+
+
+# ---------------------------------------------------------------------------
+# System address mapper: mixed-radix encode/decode roundtrip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", MAPPERS)
+def test_system_addrmap_roundtrip_mixed_radix(order):
+    """Address -> (chan, sub, row, col) -> address must round-trip across
+    groups with different bank/row/col radices (DDR5 vs HBM3 vs DDR4)."""
+    msys = compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=2),
+        dict(standard="HBM3", org_preset="HBM3_16Gb",
+             timing_preset="HBM3_5200", channels=1),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=3, link_latency=64),
+    ])
+    m = SystemAddressMapper(msys, order)
+    rng = np.random.default_rng(7)
+    # addresses must stay inside every group's capacity (the MSB digit of
+    # the owning group's mixed-radix layout must not wrap)
+    cap = min(int(np.prod([c for _, c in lay])) for lay in m.sublayouts)
+    q = rng.integers(0, cap, 5000)
+    addrs = (q * msys.n_channels
+             + rng.integers(0, msys.n_channels, 5000)) << m.tx_bits
+    chan, sub, row, col = m.to_chan_sub_row_col(addrs)
+    assert set(np.unique(chan)) == set(range(6))
+    # fields stay within each owning group's radices
+    for g, grp in enumerate(msys.groups):
+        mk = msys.chan_group[chan] == g
+        assert (row[mk] < grp.cspec.rows).all()
+        assert (col[mk] < grp.cspec.columns).all()
+        for i, lv in enumerate(grp.cspec.levels[1:]):
+            assert (sub[mk, i] < int(grp.cspec.level_counts[i + 1])).all()
+    back = m.encode(chan, sub, row, col)
+    np.testing.assert_array_equal(back, addrs)
+
+    # decode(encode(fields)) over explicit mixed-radix field draws
+    n = 2000
+    chan2 = rng.integers(0, msys.n_channels, n)
+    gid = msys.chan_group[chan2]
+    width = sub.shape[1]
+    sub2 = np.zeros((n, width), np.int64)
+    row2 = np.zeros(n, np.int64)
+    col2 = np.zeros(n, np.int64)
+    for g, grp in enumerate(msys.groups):
+        mk = gid == g
+        row2[mk] = rng.integers(0, grp.cspec.rows, int(mk.sum()))
+        col2[mk] = rng.integers(0, grp.cspec.columns, int(mk.sum()))
+        for i in range(len(grp.cspec.levels) - 1):
+            sub2[mk, i] = rng.integers(
+                0, int(grp.cspec.level_counts[i + 1]), int(mk.sum()))
+    addr2 = m.encode(chan2, sub2, row2, col2)
+    c3, s3, r3, k3 = m.to_chan_sub_row_col(addr2)
+    np.testing.assert_array_equal(c3, chan2)
+    np.testing.assert_array_equal(r3, row2)
+    np.testing.assert_array_equal(k3, col2)
+    np.testing.assert_array_equal(s3, sub2)
+
+
+def test_system_mapper_rejects_channel_msb_orders_for_hetero():
+    from repro.core.addrmap import make_system_layout
+    msys = _ddr5_ddr4()
+    with pytest.raises(ValueError, match="least"):
+        make_system_layout(msys, "ChRoBaRaCo")
+
+
+# ---------------------------------------------------------------------------
+# CXL link latency: enqueue + completion boundaries
+# ---------------------------------------------------------------------------
+
+def test_link_latency_adds_round_trip_to_probe_latency():
+    """A 1-group system behind a link must report probe latencies ~2L
+    cycles above the same system without the link (request crosses in,
+    data crosses back), with identical service otherwise."""
+    mk = lambda ll: Simulator(system=[
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=1, link_latency=ll)])
+    base = mk(0).run(4000, interval=8.0, read_ratio=1.0)
+    linked = mk(100).run(4000, interval=8.0, read_ratio=1.0)
+    lat0 = float(base.probe_lat_sum) / float(base.probe_cnt)
+    lat1 = float(linked.probe_lat_sum) / float(linked.probe_cnt)
+    assert lat1 - lat0 >= 2 * 100 * 0.8   # ≈ 2L (scheduling noise aside)
+    assert int(linked.reads_done) > 0
+
+
+def test_link_latency_splits_fingerprint():
+    a = E.system_fingerprint(_ddr5_ddr4(link=0))
+    b = E.system_fingerprint(_ddr5_ddr4(link=80))
+    c = E.system_fingerprint(_ddr5_ddr4(link=160))
+    assert a != b != c and a != c
+
+
+def test_one_group_zero_link_fingerprint_is_spec_fingerprint():
+    """Stored artifacts keyed on the historical spec fingerprint must
+    stay verifiable: the 1-group zero-link system IS the bare spec."""
+    cspec = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2)
+    msys = as_system(cspec)
+    assert msys.homogeneous
+    assert E.system_fingerprint(msys) == E.spec_fingerprint(cspec)
+
+
+# ---------------------------------------------------------------------------
+# Group-correct derived metrics (satellite: no homogeneous assumption)
+# ---------------------------------------------------------------------------
+
+def test_peak_gbps_group_aware():
+    msys = _ddr5_ddr4()
+    per_group = [peak_gbps(g.cspec) for g in msys.groups]
+    assert abs(peak_gbps(msys) - sum(per_group)) < 1e-9
+    # decidedly NOT one group's per-channel bandwidth times 4 channels
+    wrong = 4 * peak_gbps(msys.groups[0].cspec) / 2
+    assert abs(peak_gbps(msys) - wrong) > 1e-3
+
+
+def test_throughput_and_breakdown_group_correct():
+    msys = _ddr5_ddr4(link=0)
+    sim = Simulator(system=msys, frontend=FrontendConfig(probes=False))
+    stats = sim.run(3000, interval=0.5, read_ratio=1.0)
+    tp = throughput_gbps(msys, stats)
+    # group-correct total: each group's bytes on its own clock
+    want = sum(
+        float(np.asarray(ch.reads_done).sum()
+              + np.asarray(ch.writes_done).sum()) * g.cspec.access_bytes
+        / (float(stats.cycles) * g.cspec.tCK_ps * 1e-12) / 1e9
+        for g, ch in zip(msys.groups, stats.per_group))
+    assert abs(tp - want) < 1e-9
+    assert tp <= peak_gbps(msys) * 1.001
+
+    bd = channel_breakdown(msys, stats)
+    assert [bd[c]["standard"] for c in range(4)] == \
+        ["DDR5", "DDR5", "DDR4", "DDR4"]
+    assert [bd[c]["group"] for c in range(4)] == [0, 0, 1, 1]
+    assert all(0 <= bd[c]["bus_util"] <= 1 for c in bd)
+
+
+def test_metrics_raise_on_spec_stats_mismatch():
+    msys = _ddr5_ddr4()
+    stats = Simulator(system=msys).run(500, interval=2.0)
+    one_spec = compile_spec("DDR5", "DDR5_16Gb_x8", "DDR5_4800B",
+                            channels=4)
+    with pytest.raises(ValueError, match="different memory system"):
+        throughput_gbps(one_spec, stats)
+    with pytest.raises(ValueError, match="different memory system"):
+        channel_breakdown(one_spec, stats)
+
+
+# ---------------------------------------------------------------------------
+# Trace artifacts: npz v3 group column; replay across a hetero system
+# ---------------------------------------------------------------------------
+
+def test_v3_artifact_roundtrip_and_reaudit(tmp_path):
+    msys = _ddr5_ddr4(link=40)
+    sim = Simulator(system=msys)
+    _, dense = sim.run(2000, interval=1.0, read_ratio=0.7, trace=True)
+    tr = capture(msys, dense, controller=sim.controller,
+                 frontend=sim.frontend)
+    back = load(save(tr, str(tmp_path / "t.npz")))
+    for f in FIELDS + ("group",):
+        np.testing.assert_array_equal(getattr(back, f), getattr(tr, f))
+    assert back.meta == tr.meta and back.n_groups == 2
+    # spec-free audit recompiles the SYSTEM from embedded provenance
+    rep = audit(None, back)
+    assert rep.ok and rep.by_group == {0: 0, 1: 0}
+    with pytest.raises(ValueError, match="heterogeneous"):
+        back.compiled_spec()
+
+
+def test_hetero_capture_replay_roundtrip():
+    msys = _ddr5_ddr4(link=40)
+    src = Simulator(system=msys)
+    _, dense = src.run(2000, interval=2.0, read_ratio=0.7, trace=True)
+    tr = capture(msys, dense, controller=src.controller,
+                 frontend=src.frontend)
+    rs = to_replay(tr, msys)
+    assert set(np.unique(rs.chan)) == {0, 1, 2, 3}
+    # sub is padded to the widest group's level count
+    assert rs.sub.shape[1] == max(len(g.cspec.levels) - 1
+                                  for g in msys.groups)
+    sim = Simulator(system=msys,
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=rs)
+    stats, dense2 = sim.run(2000, interval=2.0, trace=True)
+    assert int(stats.reads_done) + int(stats.writes_done) > 100
+    tr2 = capture(msys, dense2, controller=sim.controller,
+                  frontend=sim.frontend)
+    assert audit(msys, tr2).ok
+
+
+def test_one_group_linked_system_capture_audit_roundtrip(tmp_path):
+    """An all-CXL system (ONE group, link latency > 0) is not the plain
+    spec: its identity is the system tuple.  Capture -> audit -> save ->
+    load -> re-audit must round-trip (regression: capture used to embed
+    the bare-spec fingerprint while audit fingerprinted the system)."""
+    msys = compile_system([dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+                                timing_preset="DDR4_2400R", channels=1,
+                                link_latency=40)])
+    assert not msys.homogeneous
+    sim = Simulator(system=msys)
+    _, dense = sim.run(800, interval=4.0, read_ratio=0.7, trace=True)
+    tr = capture(msys, dense, controller=sim.controller,
+                 frontend=sim.frontend)
+    assert "system" in tr.meta and tr.n_groups == 1
+    assert audit(msys, tr).ok                    # same-system fingerprint
+    back = load(save(tr, str(tmp_path / "cxl1.npz")))
+    rep = audit(None, back)                      # provenance-recompiled
+    assert rep.ok
+    # the recompiled system preserves the link latency
+    assert back.compiled_system().groups[0].link_latency == 40
+
+
+def test_hetero_trace_accepts_per_group_dut_replay():
+    """Independent oracle cross-check: replaying every (group, channel)
+    slice of a heterogeneous capture through that group's OWN scalar
+    DeviceUnderTest with check=True must never raise — auditor and
+    oracle agree each group's engine issued legally against its own
+    constraint table."""
+    from repro.core import DeviceUnderTest
+    msys = _ddr5_ddr4(link=40)
+    sim = Simulator(system=msys)
+    _, dense = sim.run(1500, interval=1.0, read_ratio=0.7, trace=True)
+    tr = capture(msys, dense, controller=sim.controller,
+                 frontend=sim.frontend)
+    n_replayed = 0
+    for g, grp in enumerate(msys.groups):
+        to_local = {int(gi): li
+                    for li, gi in enumerate(msys.group_cmd_maps[g])}
+        for c in range(grp.channels):
+            dut = DeviceUnderTest.from_compiled(grp.cspec)
+            chan = int(msys.chan_base[g]) + c
+            for i in np.nonzero(tr.chan == chan)[0]:
+                cmd = grp.cspec.cmd_names[to_local[int(tr.cmd[i])]]
+                bank = int(tr.bank[i])
+                addr = {}
+                for lv in reversed(grp.cspec.levels[1:]):
+                    cnt = int(grp.cspec.level_counts[
+                        grp.cspec.levels.index(lv)])
+                    addr[lv] = bank % cnt
+                    bank //= cnt
+                addr["row"] = max(int(tr.row[i]), 0)
+                addr["col"] = 0
+                dut.issue(cmd, addr, clk=int(tr.clk[i]), check=True)
+                n_replayed += 1
+    assert n_replayed == len(tr)
+
+
+# ---------------------------------------------------------------------------
+# Replay RAW/WAR dependencies (ReplayStream.dep)
+# ---------------------------------------------------------------------------
+
+def test_to_replay_computes_raw_war_deps():
+    src = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                    mapper="RoBaRaCoCh")
+    _, dense = src.run(2500, interval=2.0, read_ratio=0.5, trace=True)
+    tr = capture(src.cspec, dense, controller=src.controller,
+                 frontend=src.frontend)
+    assert to_replay(tr, src.cspec).dep is None      # opt-in
+    rs = to_replay(tr, src.cspec, deps=True)
+    assert rs.dep is not None and int(np.sum(rs.dep >= 0)) > 0
+    bank = np.zeros(len(rs), np.int64)
+    counts = src.cspec.level_counts
+    for i in range(1, len(counts)):
+        bank = bank * int(counts[i]) + rs.sub[:, i - 1]
+    for k in np.nonzero(rs.dep >= 0)[0][:200]:
+        j = int(rs.dep[k])
+        assert j < k                                 # producer precedes
+        assert (rs.chan[j], bank[j], rs.row[j]) == \
+            (rs.chan[k], bank[k], rs.row[k])         # same address (row)
+        if rs.is_write[k]:
+            assert not rs.is_write[j]                # WAR: write after read
+        else:
+            assert rs.is_write[j]                    # RAW: read after write
+    # deps change the paced injection -> distinct compiled program
+    assert rs.fingerprint != to_replay(tr, src.cspec).fingerprint
+
+
+def test_replay_dep_holds_request_until_producer_served():
+    """A read that depends on an earlier write to the same row must not
+    inject (and hence not be served) before the write's final WR issued,
+    even when its arrival pacing says it is long overdue."""
+    cspec = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    nsub = len(cspec.levels) - 1
+    n = 8
+    z = np.zeros(n, np.int32)
+    # W@row7 then R@row7 (dep on the write), then unrelated filler rows
+    rows = np.asarray([7, 7, 1, 2, 3, 4, 5, 6], np.int32)
+    is_wr = np.asarray([1, 0, 0, 0, 0, 0, 0, 0], np.int32)
+    dep = np.asarray([-1, 0, -1, -1, -1, -1, -1, -1], np.int32)
+    mk = lambda d: ReplayStream(
+        chan=z, sub=np.zeros((n, nsub), np.int32), row=rows,
+        col=z, is_write=is_wr,
+        arrive=np.arange(n, dtype=np.int32), dep=d)
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    frontend=FrontendConfig(pattern="trace", probes=False),
+                    replay=mk(dep))
+    _, dense = sim.run(600, trace=True)
+    tr = capture(sim.cspec, dense)
+    i_wr, i_rd = tr.cmd_names.index("WR"), tr.cmd_names.index("RD")
+    wr_clk = tr.clk[(tr.cmd == i_wr)][0]
+    # the dependent read ARRIVED (injected) only after the write issued
+    rd_row7 = (tr.cmd == i_rd) & (tr.row == 7)
+    assert rd_row7.any()
+    assert int(tr.arrive[rd_row7][0]) > int(wr_clk)
+
+    # control: without deps the same stream injects the read immediately
+    sim0 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     frontend=FrontendConfig(pattern="trace", probes=False),
+                     replay=mk(None))
+    _, dense0 = sim0.run(600, trace=True)
+    tr0 = capture(sim0.cspec, dense0)
+    rd0 = (tr0.cmd == i_rd) & (tr0.row == 7)
+    assert int(tr0.arrive[rd0][0]) <= 2

@@ -249,3 +249,58 @@ def test_save_load_roundtrip(tmp_path):
     # non-default controller/frontend configs survive the roundtrip
     assert back.points[0].controller.blockhammer_threshold == 512
     assert back.points[0].frontend.probe_gap == 64
+
+
+def test_composition_sweep_first_class(tmp_path):
+    """Heterogeneous system compositions (DDR5:CXL-DDR4 ratio, link
+    latency) sweep as first-class compile-group axes."""
+    from repro.dse import Composition
+    spec = SweepSpec(
+        systems=(Composition((("DDR5", 1), ("DDR4", 1, 40))),
+                 Composition((("DDR5", 1), ("DDR4", 1, 160)))),
+        intervals=(8.0, 2.0), read_ratios=(1.0,), n_cycles=600)
+    pts = spec.expand()
+    assert len(pts) == spec.n_points == 4
+    assert all(pt.n_channels == 2 for pt in pts)
+    res = execute(spec, cache=E.RunCache())
+    # one compiled program per composition (link latency splits groups)
+    assert res.meta["n_groups"] == 2
+    assert res.meta["compile_cache_misses"] == 2
+    # link latency is a pure latency knob at moderate load: the longer
+    # link must not report lower probe latency
+    lat40 = res.latency_ns[[i for i, p in enumerate(res.points)
+                            if "40" in p.system.label]]
+    lat160 = res.latency_ns[[i for i, p in enumerate(res.points)
+                             if "160" in p.system.label]]
+    assert np.nanmean(lat160) > np.nanmean(lat40)
+    # merged command namespace rides on every point
+    assert all("RD" in names for names in res.cmd_names)
+    # curves split per composition; peaks are group-correct sums
+    cvs = res.curves()
+    assert {cv.system for cv in cvs} == {
+        "DDR5x1+DDR4x1@40", "DDR5x1+DDR4x1@160"}
+    from repro.core import compile_spec, peak_gbps
+    want_peak = (peak_gbps(compile_spec("DDR5", "DDR5_16Gb_x8",
+                                        "DDR5_4800B"))
+                 + peak_gbps(compile_spec("DDR4", "DDR4_8Gb_x8",
+                                          "DDR4_2400R")))
+    for cv in cvs:
+        assert abs(cv.peak_gbps - want_peak) < 1e-9
+    # composition points survive the save/load roundtrip
+    back = SweepResult.load(res.save(str(tmp_path / "hetero")))
+    assert back.points[0].system.label == res.points[0].system.label
+    assert back.points[0].n_channels == 2
+
+
+def test_composition_ignores_channels_axis():
+    from repro.dse import Composition
+    spec = SweepSpec(
+        systems=("DDR4", Composition((("DDR5", 1), ("DDR4", 1)))),
+        channels=(1, 2), intervals=(4.0,), read_ratios=(1.0,),
+        n_cycles=300)
+    pts = spec.expand()
+    # plain system: one point per channel count; composition: one point
+    plain = [p for p in pts if not isinstance(p.system, Composition)]
+    comp = [p for p in pts if isinstance(p.system, Composition)]
+    assert {p.n_channels for p in plain} == {1, 2}
+    assert len(comp) == 1 and comp[0].n_channels == 2

@@ -129,8 +129,8 @@ def test_fingerprint_mismatch_rejected(ddr4_run):
 
 
 def test_legacy_three_array_capture(ddr4_run):
-    """The core/viz shim path: bare (cmd, bank, row) tuples still capture
-    (arrive/hit_ready default to absent)."""
+    """Bare (cmd, bank, row) tuples still capture (arrive/hit_ready
+    default to absent)."""
     sim, _, dense = ddr4_run
     tr = capture(sim.cspec, (dense.cmd, dense.bank, dense.row))
     assert isinstance(tr, CommandTrace)
@@ -140,6 +140,7 @@ def test_legacy_three_array_capture(ddr4_run):
     assert rep.ok and "row_hit_first" not in rep.checks
     # without arrive info the visualizer still lanes commands by bank
     # (kind-based refresh fallback), not all onto the refresh lane
-    from repro.trace.viz import _lanes
-    lanes = _lanes(tr, sim.cspec)
+    from repro.core.compile import as_system
+    from repro.trace.viz import _View
+    lanes = _View(as_system(sim.cspec), tr).lanes(tr)
     assert len(np.unique(lanes[lanes < sim.cspec.n_banks])) > 1

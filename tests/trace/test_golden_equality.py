@@ -57,3 +57,27 @@ def test_two_channel_stream_bit_exact_vs_dense_ring_engine():
     want = GOLDEN["DDR4@2ch"]
     assert len(tr) == want["n"]
     assert trace_sha256(tr) == want["sha256"]
+
+
+def test_hetero_system_stream_pinned():
+    """Golden hash for the heterogeneous path: a 2-group DDR5 +
+    CXL-attached DDR4 system (link latency 80) — the group-indexed scan,
+    system-level channel digit, and merged-namespace capture are all
+    pinned column for column (``group`` column included)."""
+    from repro.core import compile_system
+    msys = compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=2),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=2, link_latency=80),
+    ])
+    sim = Simulator(system=msys,
+                    controller=ControllerConfig(scheduler="FRFCFS"))
+    _, dense = sim.run(3000, interval=2.0, read_ratio=0.7, trace=True)
+    tr = capture(msys, dense)
+    h = hashlib.sha256()
+    for f in FIELDS + ("group",):
+        h.update(np.ascontiguousarray(getattr(tr, f), np.int32).tobytes())
+    want = GOLDEN["DDR5x2+DDR4x2@80"]
+    assert len(tr) == want["n"]
+    assert h.hexdigest() == want["sha256"]

@@ -8,7 +8,10 @@ baseline:
     (``speedup_floor_1_to_4``, derived from the merge-time 1->2/1->4
     speedups — the cliff this guards against is PR 3's 4-channel collapse);
   * the scan-carry reduction of the windowed-ring split must stay >= 3x
-    vs the dense-ring baseline for DDR5 and HBM3.
+    vs the dense-ring baseline for DDR5 and HBM3;
+  * the heterogeneous (DDR5 + CXL-DDR4, 2 spec groups) engine rate,
+    relative to the same box's homogeneous 4-channel rate, must not fall
+    below the floor recorded at merge time (``hetero_floor_vs_4ch``).
 
 Usage: python tools/check_bench_regression.py --baseline BENCH_engine.json \
            --fresh results/bench_fresh.json
@@ -44,6 +47,22 @@ def check(baseline: dict, fresh: dict) -> list:
                 f"{std} scan-carry reduction {cb['reduction']}x < 3x "
                 f"(table+ring {cb['table_ring']}B vs dense ring "
                 f"{cb['dense_ring_baseline']}B)")
+
+    # heterogeneous (2-spec-group) engine rate, relative to the
+    # homogeneous 4-channel run of the same box — the ratio is what
+    # stays stable across noisy shared runners
+    het = fresh.get("hetero")
+    het_floor = baseline.get("hetero_floor_vs_4ch")
+    if het is None:
+        errors.append("fresh results carry no hetero (2-spec-group) "
+                      "benchmark — re-run benchmarks/run.py --only engine")
+    elif het_floor is not None \
+            and het.get("vs_4ch_homogeneous", 0.0) < het_floor:
+        errors.append(
+            f"heterogeneous engine rate regressed: "
+            f"{het.get('vs_4ch_homogeneous')} of the homogeneous 4ch rate "
+            f"< merge-time floor {het_floor} (baseline measured "
+            f"{baseline.get('hetero', {}).get('vs_4ch_homogeneous')})")
     return errors
 
 
@@ -61,10 +80,13 @@ def main() -> int:
 
     errors = check(baseline, fresh)
     s = fresh.get("channel_scaling_speedup_1_to_4")
+    het = fresh.get("hetero", {})
     print(f"fresh 1->4 speedup: {s}  "
           f"(floor {baseline.get('speedup_floor_1_to_4')});  carry: "
           + ", ".join(f"{k} {v['reduction']}x"
-                      for k, v in fresh.get("carry_bytes", {}).items()))
+                      for k, v in fresh.get("carry_bytes", {}).items())
+          + f";  hetero vs 4ch: {het.get('vs_4ch_homogeneous')} "
+          f"(floor {baseline.get('hetero_floor_vs_4ch')})")
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     return 1 if errors else 0
