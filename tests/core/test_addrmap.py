@@ -9,6 +9,27 @@ import pytest
 from repro.core import compile_spec
 from repro.core.addrmap import MAPPERS, AddressMapper, make_layout
 
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):
+        return lambda f: f
+
+    class st:                           # noqa: N801 - mirrors the real name
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+        @staticmethod
+        def sampled_from(*a, **kw):
+            return None
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
 PRESETS = [
     ("DDR4", "DDR4_8Gb_x8", "DDR4_2400R"),
     ("DDR5", "DDR5_16Gb_x8", "DDR5_4800B"),
@@ -89,6 +110,32 @@ def test_engine_decode_matches_host_mapper():
     np.testing.assert_array_equal(np.asarray(sub), w_sub)
     np.testing.assert_array_equal(np.asarray(row), w_row)
     np.testing.assert_array_equal(np.asarray(col), w_col)
+
+
+@needs_hypothesis
+@given(line=st.integers(0, (1 << 40) - 1), order=st.sampled_from(MAPPERS))
+def test_roundtrip_hypothesis(line, order):
+    """Hypothesis drives single-address round-trips under the shared
+    profile from ``tests/conftest.py`` (no per-test settings needed:
+    deadlines and CI derandomization are configured once, globally)."""
+    cspec = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2)
+    m = AddressMapper(cspec, order)
+    addr = np.asarray([(line % _capacity_lines(m)) << m.tx_bits], np.int64)
+    fields = m.map(addr)
+    assert np.array_equal(m.encode(fields), addr)
+    for name, count in m.layout:
+        assert 0 <= int(fields[name][0]) < count
+
+
+def test_roundtrip_rng_fixture(rng):
+    """Fallback sweep on the seeded ``rng`` fixture (explicit, stable
+    per-test seed) where hypothesis is unavailable."""
+    cspec = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2)
+    for order in MAPPERS:
+        m = AddressMapper(cspec, order)
+        lines = rng.integers(0, min(_capacity_lines(m), 1 << 40), 512)
+        addrs = lines.astype(np.int64) << m.tx_bits
+        assert np.array_equal(m.encode(m.map(addrs)), addrs)
 
 
 def test_bad_order_rejected():

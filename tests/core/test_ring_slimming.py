@@ -135,7 +135,6 @@ def _check_table_matches_reference(seed: int, n_rows: int, n_issues: int):
 
 
 @needs_hypothesis
-@settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), n_rows=st.integers(1, 24),
        n_issues=st.integers(1, 30))
 def test_split_table_ring_matches_dense_ring_reference(seed, n_rows,

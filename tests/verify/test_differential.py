@@ -1,0 +1,102 @@
+"""Differential comparison against pinned upstream-format command-stream
+fixtures: exact reproduction required, and the comparator itself must
+report divergences precisely (first index, per-command deltas, length
+mismatches)."""
+import os
+
+import pytest
+
+from repro.verify import (accuracy_table, compare_streams,
+                          diff_against_fixture, dump_cmd_stream, golden_run,
+                          parse_cmd_stream)
+
+pytestmark = pytest.mark.device_timings
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+STANDARDS = ("DDR4", "DDR5", "HBM3")
+
+
+@pytest.mark.parametrize("standard", STANDARDS)
+def test_exact_match_against_fixture(standard):
+    rep = diff_against_fixture(
+        standard, os.path.join(FIXTURES, f"{standard}.cmdstream"))
+    assert rep.exact, str(rep)
+    assert rep.match_fraction == 1.0
+    assert rep.n_golden > 100          # fixtures are non-trivial streams
+
+
+def test_fixture_metadata_matches_config():
+    parsed = parse_cmd_stream(os.path.join(FIXTURES, "DDR4.cmdstream"))
+    assert parsed["meta"]["standard"] == "DDR4"
+    assert parsed["meta"]["org"] and parsed["meta"]["timing"]
+    assert int(parsed["meta"]["n_cycles"]) == 1500
+
+
+def test_dump_parse_roundtrip():
+    cspec, tr = golden_run("DDR4", n_cycles=400)
+    text = dump_cmd_stream(cspec, tr)
+    parsed = parse_cmd_stream(text)
+    assert len(parsed["clk"]) == len(tr.clk)
+    assert parsed["clk"] == [int(c) for c in tr.clk]
+    assert parsed["cmd"] == [tr.cmd_names[int(c)] for c in tr.cmd]
+    # every addr vector spans the full hierarchy + row + col
+    width = len(cspec.levels) + 2
+    assert all(len(a) == width for a in parsed["addr"])
+
+
+# ---------------------------------------------------------------------------
+# The comparator must *find* divergences, not just bless matches
+# ---------------------------------------------------------------------------
+
+def _toy(lines):
+    return parse_cmd_stream("\n".join(lines))
+
+
+def test_comparator_flags_first_divergence():
+    g = _toy(["0 ACT 0 0 0 5 0", "4 RD 0 0 0 5 0", "10 PREab 0 0 0 0 0"])
+    c = _toy(["0 ACT 0 0 0 5 0", "5 RD 0 0 0 5 0", "10 PREab 0 0 0 0 0"])
+    rep = compare_streams("toy", g, c)
+    assert not rep.exact
+    assert rep.first_divergence == 1
+    assert rep.match_fraction == pytest.approx(2 / 3)
+    assert "golden=" in rep.divergence_detail
+
+
+def test_comparator_flags_length_mismatch():
+    g = _toy(["0 ACT 0 0 0 5 0", "4 RD 0 0 0 5 0"])
+    c = _toy(["0 ACT 0 0 0 5 0"])
+    rep = compare_streams("toy", g, c)
+    assert not rep.exact
+    assert rep.first_divergence == 1
+    assert "length mismatch" in rep.divergence_detail
+
+
+def test_comparator_per_cmd_deltas():
+    g = _toy(["0 ACT 0 0 0 5 0", "4 RD 0 0 0 5 0", "8 RD 0 0 0 5 1"])
+    c = _toy(["0 ACT 0 0 0 5 0", "4 WR 0 0 0 5 0", "8 RD 0 0 0 5 1"])
+    rep = compare_streams("toy", g, c)
+    assert rep.per_cmd["RD"] == (2, 1)
+    assert rep.per_cmd["WR"] == (0, 1)
+    assert rep.per_cmd["ACT"] == (1, 1)
+
+
+def test_accuracy_table_renders_all_standards():
+    reports = [diff_against_fixture(
+        s, os.path.join(FIXTURES, f"{s}.cmdstream")) for s in STANDARDS]
+    table = accuracy_table(reports)
+    for s in STANDARDS:
+        assert f"| {s} |" in table
+    assert "1.0000" in table
+
+
+@pytest.mark.verify_deep
+@pytest.mark.parametrize("standard", ["DDR3", "LPDDR5", "GDDR6", "HBM2"])
+def test_self_consistency_deep(standard):
+    """Standards without pinned fixtures: the canonical run must at
+    least be reproducible against itself (a fresh second run)."""
+    cspec, tr = golden_run(standard)
+    golden = parse_cmd_stream(dump_cmd_stream(cspec, tr))
+    cspec2, tr2 = golden_run(standard)
+    current = parse_cmd_stream(dump_cmd_stream(cspec2, tr2))
+    rep = compare_streams(standard, golden, current)
+    assert rep.exact, str(rep)
