@@ -135,6 +135,47 @@ def run(report, n_cycles: int = 20_000, json_path: str = "BENCH_engine.json"):
             "wall_s": round(best[c], 3),
             "aggregate_channel_cycles_per_sec": int(agg),
             "carry_bytes_per_channel": D.carry_nbytes(sims[c].cspec)}
+    # explicit per-entry speedup vs the 1-channel run of the SAME box/run
+    # (reviewers previously re-derived this by hand from the raw rates)
+    agg1 = results["channel_scaling"]["1"]["aggregate_channel_cycles_per_sec"]
+    for c in chans:
+        entry = results["channel_scaling"][str(c)]
+        entry["aggregate_speedup"] = round(
+            entry["aggregate_channel_cycles_per_sec"] / max(agg1, 1), 3)
+
+    # windowed-telemetry overhead: the tentpole's "low-overhead" claim,
+    # measured — scalar 4-channel engine with telemetry window=256 vs
+    # telemetry off, end to end (in-scan accumulators + snapshot emission
+    # + host-side window diffing), on warm programs.  Shared boxes have
+    # multi-second load phases that swing single runs +-20%, so mean- or
+    # median-based estimators are unreliable; the floor (min over many
+    # interleaved runs) of each side IS stable, so the reported overhead
+    # is the ratio of interleaved minima.  The cycle count is fixed (not
+    # scaled by --quick): short runs make the per-call fixed cost (extra
+    # dispatch + host window diffing, ~10ms) masquerade as per-cycle
+    # overhead, and long runs are what windowed telemetry is for.
+    # The committed ceiling is what tools/check_bench_regression.py gates.
+    tw, tn = 256, 60_000
+    tsim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4)
+    tsim.run(tn)                                   # warm telemetry-off
+    tsim.run(tn, telemetry=tw)                     # warm telemetry-on
+    rounds = 8
+    t_min = {0: float("inf"), tw: float("inf")}
+    for _ in range(rounds):
+        for tel in (0, tw):
+            t0 = time.perf_counter()
+            tsim.run(tn, telemetry=tel)
+            t_min[tel] = min(t_min[tel], time.perf_counter() - t0)
+    overhead = t_min[tw] / t_min[0] - 1.0
+    report("telemetry_overhead_pct", round(100 * overhead, 2),
+           f"4ch DDR4, window={tw}, {tn} cycles: floor {t_min[tw]:.3f}s on"
+           f" vs {t_min[0]:.3f}s off (interleaved min of {rounds})")
+    results["telemetry"] = {
+        "window": tw, "channels": 4, "cycles": tn, "rounds": rounds,
+        "off_wall_s": round(t_min[0], 4), "on_wall_s": round(t_min[tw], 4),
+        "overhead": round(overhead, 4)}
+    #: the CI gate: windowed capture may cost at most 5% engine slowdown
+    results["telemetry_overhead_ceiling"] = 0.05
     # heterogeneous composition: DDR5x2 + CXL-attached DDR4x2 (link 80)
     # behind one mapper — the 2-spec-group scenario of the hetero-smoke CI
     # job, measured the same interleaved best-of-N way and recorded so

@@ -9,8 +9,6 @@ latency as a first-class DSE axis.
 
     PYTHONPATH=src python examples/hetero_system.py
 """
-import numpy as np
-
 from repro.core import (Simulator, channel_breakdown, compile_system,
                         peak_gbps, throughput_gbps)
 from repro.trace import audit, capture
@@ -32,14 +30,11 @@ def main():
     sim = Simulator(system=msys)
     stats, dense = sim.run(N_CYCLES, interval=1.0, read_ratio=0.7,
                            trace=True)
-    print(f"\n{int(stats.reads_done)} reads / {int(stats.writes_done)} "
-          f"writes served in {int(stats.cycles)} cycles")
-    print(f"throughput {throughput_gbps(msys, stats):.2f} GB/s of "
-          f"{peak_gbps(msys):.2f} GB/s peak (group-correct sums)")
-    for c, row in channel_breakdown(msys, stats).items():
-        print(f"  ch{c} [{row['standard']}] "
-              f"{row['throughput_gbps']:6.2f} GB/s  "
-              f"bus util {100 * row['bus_util']:5.1f}%")
+    # Stats.summary is group-aware: per-group GB/s on each group's own
+    # clock, per-channel rows labeled by the owning standard
+    print("\n" + stats.summary(msys))
+    assert throughput_gbps(msys, stats) <= peak_gbps(msys)
+    assert len(channel_breakdown(msys, stats)) == msys.n_channels
 
     # per-group audit: each channel replays against its OWN constraint
     # table; DDR5 commands never constrain CXL-DDR4 commands

@@ -22,18 +22,17 @@ print("=== YAML equivalent (for non-Python embedders) ===")
 print(system.to_yaml())
 
 # --- 2. simulate ----------------------------------------------------------
-# the derived-metric helpers take the Stats of ONE run (scalar fields);
-# batched Stats from run_batch need repro.dse.results' *_array variants
+# Stats.summary(spec) is the group-aware formatter (GB/s vs peak, probe
+# latency in ns, row-hit rate); the raw helpers (throughput_gbps,
+# peak_gbps, avg_probe_latency_ns) stay available for programmatic use —
+# all of them take the Stats of ONE run (scalar fields; batched Stats
+# from run_batch need repro.dse.results' *_array variants)
 sim = system.build()
 stats = sim.run(system.n_cycles)
-tput = throughput_gbps(sim.cspec, stats)      # GB/s (1e9 bytes/s)
-peak = peak_gbps(sim.cspec)                   # GB/s, theoretical
-lat = avg_probe_latency_ns(sim.cspec, stats)  # ns, mean probe latency
 print("\n=== simulation ===")
-print(f"reads={int(stats.reads_done)} writes={int(stats.writes_done)}")
-print(f"throughput          {tput:8.2f} GB/s")
-print(f"theoretical peak    {peak:8.2f} GB/s ({100 * tput / peak:.1f}% achieved)")
-print(f"avg probe latency   {lat:8.1f} ns")
+print(stats.summary(sim.cspec))
+assert throughput_gbps(sim.cspec, stats) <= peak_gbps(sim.cspec)
+assert avg_probe_latency_ns(sim.cspec, stats) > 0
 
 # --- 3. fine-grained probing (paper Listing 2) ----------------------------
 dut = DeviceUnderTest("DDR5", org_preset="DDR5_16Gb_x8",

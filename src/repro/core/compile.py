@@ -106,6 +106,14 @@ class CompiledSpec:
     timing_preset: str = ""
     n_channels: int = 1             # memory-system channel fan-out
 
+    #: telemetry latency-histogram bucket edges, planned at spec-compile
+    #: time from the spec's own read latency (see plan_latency_buckets);
+    #: request-latency telemetry buckets are therefore spec-relative —
+    #: bucket 0 is "at the unloaded read latency", the last bucket is
+    #: "pathologically queued".  Excluded from spec_fingerprint: the edges
+    #: are derived, not an identity input.
+    lat_bucket_edges: tuple = ()
+
     def cmd_id(self, name: str) -> int:
         return self.cmd_names.index(name)
 
@@ -169,6 +177,33 @@ def build_windowed_rings(ct_prev, ct_level, ct_win, cmd_scope,
     return dict(ring_pairs=ring_pairs, ring_cmd=ring_cmd,
                 ring_level=ring_level, ring_node=ring_node, ct_ring=ct_ring,
                 n_ring=int(n_ring), ring_depth=int(ring_depth))
+
+
+#: Number of request-latency histogram buckets windowed telemetry records
+#: (``repro.telemetry``): len(lat_bucket_edges) + 1.
+N_LAT_BUCKETS = 16
+
+#: Bucket-edge multipliers over the spec's unloaded read latency.  The low
+#: buckets resolve queueing onset (1x..2x), the high ones starvation tails.
+_LAT_EDGE_MULTIPLIERS = (1.0, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0,
+                         12.0, 16.0, 24.0, 32.0, 48.0, 64.0, 96.0)
+
+
+def plan_latency_buckets(read_latency: int) -> tuple:
+    """Plan the ``N_LAT_BUCKETS``-bucket request-latency histogram edges
+    for a spec with unloaded read latency ``read_latency`` cycles.
+
+    Returns ``N_LAT_BUCKETS - 1`` strictly increasing integer edges;
+    bucket ``i`` covers ``[edges[i-1], edges[i])`` (bucket 0 is
+    ``< edges[0]``, the last bucket is unbounded).  Planned per spec at
+    compile time so a DDR3 and an HBM4 histogram are comparable in units
+    of their own unloaded latency."""
+    edges, prev = [], 0
+    for m in _LAT_EDGE_MULTIPLIERS:
+        e = max(int(round(m * max(read_latency, 1))) + 1, prev + 1)
+        edges.append(e)
+        prev = e
+    return tuple(edges)
 
 
 # --------------------------------------------------------------------------
@@ -418,4 +453,5 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
         clock_idle=timings.get("nWCKIDLE", timings.get("nRCKIDLE", 0)),
         standard=standard.name, org_preset=org_preset,
         timing_preset=timing_preset, n_channels=int(channels),
+        lat_bucket_edges=plan_latency_buckets(read_latency),
     )

@@ -17,6 +17,7 @@ programs.  This is the TPU-native analogue of Ramulator's DSE workflows
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import NamedTuple
 
@@ -68,17 +69,76 @@ class Stats(NamedTuple):
     per_channel: ChannelStats
     per_group: tuple                # per-group native ChannelStats
 
+    # -- human-readable views ---------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain-Python counter dict of one scalar run (ints throughout;
+        per-channel counters as lists).  Raises on batched (B,)-shaped
+        stats — index one point out first."""
+        d = {k: int(getattr(self, k))
+             for k in ("cycles", "reads_done", "writes_done",
+                       "probe_lat_sum", "probe_cnt", "data_bus_busy",
+                       "deferred")}
+        d["cmd_counts"] = [int(c) for c in np.asarray(self.cmd_counts)]
+        ch = self.per_channel
+        d["per_channel"] = {
+            k: [int(v) for v in np.asarray(getattr(ch, k))]
+            for k in ("reads_done", "writes_done", "probe_cnt",
+                      "data_bus_busy", "deferred")}
+        return d
 
-def _zero_channel_stats(cspec: CompiledSpec) -> ChannelStats:
+    def summary(self, spec=None) -> str:
+        """Human-readable run summary; pass the run's spec/system for the
+        group-aware view with physical units (GB/s, ns, %).  Replaces the
+        ad-hoc prints of the examples and the trace CLI."""
+        return format_stats(self, spec)
+
+
+def _zero_channel_stats(cspec: CompiledSpec,
+                        telemetry: bool = False) -> ChannelStats:
+    """Zeroed per-channel counters; with ``telemetry``, ``cmd_counts``
+    is widened by the ``1 + n_edges`` telemetry gauge columns of
+    :func:`_accum_channel_stats`."""
     nch = cspec.n_channels
+    width = cspec.n_cmds + (1 + len(cspec.lat_bucket_edges)
+                            if telemetry else 0)
     z = lambda *sh: jnp.zeros(sh, jnp.int32)
     return ChannelStats(z(nch), z(nch), z(nch), z(nch), z(nch),
-                        z(nch, cspec.n_cmds), z(nch))
+                        z(nch, width), z(nch))
+
+
+class GroupWindowSnap(NamedTuple):
+    """One window-boundary telemetry snapshot of ONE spec group: the
+    cumulative :class:`ChannelStats` the scan already carries (gauge
+    columns split off), plus the packed cumulative telemetry gauges
+    (see :func:`_accum_channel_stats`).  Emitted as scan ``ys`` once
+    per window — O(n_windows) output, never O(n_cycles)."""
+    ch: ChannelStats
+    tm: jnp.ndarray         # (C, 1 + n_edges) packed gauges
+
+
+def _snap_telemetry(cspec: CompiledSpec, gs: GroupState,
+                    clk) -> "GroupWindowSnap":
+    """The window-boundary view of one group's counters: the carried
+    :class:`ChannelStats` with its telemetry extension columns (see
+    :func:`_accum_channel_stats`) split back out into the packed gauge
+    array, plus the residual queue residency of requests still queued
+    at ``clk`` (computed once per window, never per cycle).  The gauge
+    array's column 0 is then the exact cycle-sum of queue occupancy
+    over ``[0, clk)``."""
+    nc = cspec.n_cmds
+    q = gs.cs.queue
+    resid = jnp.sum(jnp.where(q.valid, clk - q.arrive, 0), axis=1)
+    return GroupWindowSnap(
+        ch=gs.ch._replace(cmd_counts=gs.ch.cmd_counts[:, :nc]),
+        tm=gs.ch.cmd_counts[:, nc:].at[:, 0].add(resid))
 
 
 class GroupState(NamedTuple):
     """Scan-carried state of ONE spec group: controller+device state and
-    running stats, every leaf with a leading group-channel axis."""
+    running stats, every leaf with a leading group-channel axis.  When a
+    telemetry window is requested the ``ch.cmd_counts`` leaf is widened
+    by the gauge columns (no extra carry leaf; the telemetry-off traced
+    program is unchanged)."""
     cs: C.CtrlState
     ch: ChannelStats
 
@@ -214,19 +274,46 @@ def system_fingerprint(spec):
 
 def run_key(spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
-            batched: bool, replay: F.ReplayStream | None = None):
+            batched: bool, replay: F.ReplayStream | None = None,
+            telemetry: int = 0):
     # interval/read_ratio reach the traced program only through FrontParams
     # (a traced argument) in both scalar and batched mode; the fcfg copies
     # are dead at trace time, so drop them from the key — sweeping the load
     # knobs through `Simulator.run` never recompiles.  The mapper order
     # stays in the key (it changes the traced decode), as does the replay
-    # stream's content fingerprint.
+    # stream's content fingerprint and the telemetry window (windowed runs
+    # restructure the scan, so every window size is its own program).
     fkey = tuple(kv for kv in _freeze(fcfg)
                  if not (isinstance(kv, tuple)
                          and kv[0] in ("interval", "read_ratio")))
     return (system_fingerprint(spec), _freeze(ccfg), fkey,
             int(n_cycles), bool(trace), bool(batched),
-            None if replay is None else replay.fingerprint)
+            None if replay is None else replay.fingerprint,
+            int(telemetry))
+
+
+class _TimedRun:
+    """Callable wrapper around one cached jitted run: its FIRST call —
+    trace + XLA compile + the run itself, synchronized — is timed into the
+    owning cache's ``first_call_s``.  Warm calls pass straight through.
+    This is the observable the run profiler reports as compile cost (the
+    pure-execute share is separately measurable from a warm re-run)."""
+
+    __slots__ = ("fn", "_cache", "_timed")
+
+    def __init__(self, fn, cache: "RunCache"):
+        self.fn = fn
+        self._cache = cache
+        self._timed = False
+
+    def __call__(self, *args):
+        if self._timed:
+            return self.fn(*args)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self.fn(*args))
+        self._cache.first_call_s += time.perf_counter() - t0
+        self._timed = True
+        return out
 
 
 class RunCache:
@@ -234,13 +321,19 @@ class RunCache:
 
     ``get`` returns a jitted ``(dp, fp, seed) -> Stats`` callable (vmapped
     over ``fp`` when ``batched=True``).  ``hits``/``misses`` count lookups;
-    re-tracing is observable via the module-level ``TRACE_COUNT``.
+    re-tracing is observable via the module-level ``TRACE_COUNT``, and
+    ``stats()`` publishes the full accounting (entries, hit/miss counts,
+    cumulative first-call wall time) for the run profiler and the DSE
+    sweep reports.
     """
 
     def __init__(self):
         self._runs: dict = {}
         self.hits = 0
         self.misses = 0
+        #: cumulative wall seconds of every cached program's FIRST call
+        #: (trace + XLA compile + one synchronized run)
+        self.first_call_s = 0.0
 
     def __len__(self):
         return len(self._runs)
@@ -248,13 +341,27 @@ class RunCache:
     def clear(self):
         self._runs.clear()
         self.hits = self.misses = 0
+        self.first_call_s = 0.0
+
+    def stats(self) -> dict:
+        """Public cache accounting: ``entries`` (live programs), ``hits``
+        / ``misses`` (lookup counts since construction/clear), and
+        ``first_call_s`` (cumulative wall time of each program's first
+        call — the trace + compile cost plus one run)."""
+        return {"entries": len(self._runs), "hits": self.hits,
+                "misses": self.misses,
+                "first_call_s": round(self.first_call_s, 3)}
 
     def get(self, spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool = False,
-            batched: bool = False, replay: F.ReplayStream | None = None):
+            batched: bool = False, replay: F.ReplayStream | None = None,
+            telemetry: int = 0):
         """``spec`` may be a :class:`CompiledSpec` (homogeneous system) or
-        a :class:`MemorySystemSpec` (heterogeneous composition)."""
-        key = run_key(spec, ccfg, fcfg, n_cycles, trace, batched, replay)
+        a :class:`MemorySystemSpec` (heterogeneous composition).
+        ``telemetry`` is the windowed-telemetry window in cycles (0 =
+        off); windowed programs emit cumulative snapshots every window."""
+        key = run_key(spec, ccfg, fcfg, n_cycles, trace, batched, replay,
+                      telemetry)
         fn = self._runs.get(key)
         if fn is not None:
             self.hits += 1
@@ -270,10 +377,11 @@ class RunCache:
             spec = MemorySystemSpec(tuple(
                 SpecGroup(dataclasses.replace(g.cspec), g.channels,
                           g.link_latency) for g in as_system(spec).groups))
-        fn = make_run(spec, ccfg, fcfg, n_cycles, trace, replay)
+        fn = make_run(spec, ccfg, fcfg, n_cycles, trace, replay,
+                      telemetry_window=telemetry)
         if batched:
             fn = jax.vmap(fn, in_axes=(None, 0, None))
-        fn = jax.jit(fn)
+        fn = _TimedRun(jax.jit(fn), self)
         self._runs[key] = fn
         return fn
 
@@ -367,7 +475,12 @@ class Simulator:
     # -- single-config run ------------------------------------------------
     def run(self, n_cycles: int, interval: float | None = None,
             read_ratio: float | None = None, trace: bool = False,
-            seed: int = 0x1234):
+            seed: int = 0x1234, telemetry: int = 0):
+        """Run ``n_cycles``.  Returns ``stats`` — plus the raw trace
+        arrays when ``trace=True``, plus a :class:`repro.telemetry.
+        Telemetry` time series when ``telemetry=W > 0`` (windowed
+        counters, one sample every W cycles; see docs/observability.md).
+        Both extras: ``(stats, ys, telem)``."""
         fcfg = self.frontend
         if interval is not None or read_ratio is not None:
             fcfg = dataclasses.replace(
@@ -377,9 +490,18 @@ class Simulator:
                             else fcfg.read_ratio))
         fp = fcfg.params()
         run_fn = RUN_CACHE.get(self._cache_spec, self.controller, fcfg,
-                               n_cycles, trace=trace, replay=self.replay)
+                               n_cycles, trace=trace, replay=self.replay,
+                               telemetry=telemetry)
         out = run_fn(self._dyn_params(), fp, jnp.uint32(seed))
-        return jax.tree.map(np.asarray, out)
+        out = jax.tree.map(np.asarray, out)
+        if telemetry:
+            from repro import telemetry as T   # lazy: keeps core dep-free
+            *rest, snaps = out
+            telem = T.build(self.msys, snaps, window=telemetry,
+                            n_cycles=n_cycles)
+            return tuple(rest) + (telem,) if len(rest) > 1 \
+                else (rest[0], telem)
+        return out
 
     # -- batched DSE run ---------------------------------------------------
     def run_batch(self, n_cycles: int, intervals, read_ratios,
@@ -395,18 +517,52 @@ class Simulator:
 
 
 def _accum_channel_stats(cspec: CompiledSpec, ch: ChannelStats,
-                         ev: C.StepEvents) -> ChannelStats:
+                         ev: C.StepEvents, clk=None,
+                         telemetry: bool = False) -> ChannelStats:
     """Fold one cycle's channel-stacked events into the running stats of
-    ONE spec group (counts in the group's native command namespace)."""
+    ONE spec group (counts in the group's native command namespace).
+
+    With ``telemetry``, the SAME per-cycle ``cmd_counts`` add also folds
+    the windowed-telemetry gauges into ``1 + n_edges`` extension columns
+    (split back off by :func:`_snap_telemetry` before stats ever leave
+    the engine) — no extra scan carry, no extra per-cycle kernel:
+
+    - column ``n_cmds``: the queue-residency integral of SERVED
+      requests (``clk - arrive`` at each service event; requests
+      release their queue slot on the column bus — FINAL_RD/FINAL_WR
+      are column commands — so the served arrival clock is
+      ``ev.arrive[:, 0]``).  The cycle-sum of queue occupancy over
+      ``[0, t)`` is this plus the residual ``t - arrive`` of requests
+      still queued at ``t``, added once per window boundary — so no
+      per-cycle occupancy reduction is ever needed;
+    - column ``n_cmds + 1 + k``: served probes with latency <= edge
+      ``k``, a CUMULATIVE histogram (the host diffs along the bucket
+      axis and closes the open top bucket with ``probe_cnt``).
+
+    Separate accumulators for the same gauges — a packed carry-add, a
+    per-cycle (C, 2) ys emission with per-window folds, searchsorted +
+    one-hot — all measured noticeably more engine overhead than riding
+    the adds that the stats fold performs anyway."""
     nBL = jnp.int32(cspec.timings["nBL"])
     rd = ev.served_read.astype(jnp.int32)          # (C,)
     wr = ev.served_write.astype(jnp.int32)
-    counts = ch.cmd_counts                          # (C, n_cmds)
+    counts = ch.cmd_counts                          # (C, n_cmds [+ 1 + E])
     cmd_ids = jnp.arange(cspec.n_cmds, dtype=jnp.int32)
-    for i in range(2):
-        # dense one-hot add (idle slots are -1: no match, no count)
-        counts = counts + (cmd_ids[None, :]
-                           == ev.cmd[:, i:i + 1]).astype(jnp.int32)
+    if telemetry:
+        served = ev.served_read | ev.served_write                  # (C,)
+        res = jnp.where(served, clk - ev.arrive[:, 0], 0)          # (C,)
+        edges = jnp.asarray(cspec.lat_bucket_edges, jnp.int32)
+        lat = jnp.where(ev.served_probe, ev.probe_latency,
+                        jnp.int32(1 << 30))
+        cum = (lat[:, None] <= edges[None, :]).astype(jnp.int32)   # (C, E)
+        oh = ((cmd_ids[None, :] == ev.cmd[:, 0:1]).astype(jnp.int32)
+              + (cmd_ids[None, :] == ev.cmd[:, 1:2]).astype(jnp.int32))
+        counts = counts + jnp.concatenate([oh, res[:, None], cum], axis=1)
+    else:
+        for i in range(2):
+            # dense one-hot add (idle slots are -1: no match, no count)
+            counts = counts + (cmd_ids[None, :]
+                               == ev.cmd[:, i:i + 1]).astype(jnp.int32)
     return ChannelStats(
         reads_done=ch.reads_done + rd,
         writes_done=ch.writes_done + wr,
@@ -461,21 +617,33 @@ def _aggregate_stats(msys: MemorySystemSpec, chs: list, clk) -> Stats:
 
 def make_run(spec, ccfg: C.ControllerConfig,
              fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
-             replay: F.ReplayStream | None = None):
-    """Build the pure run function (dps, fp, seed) -> Stats [, trace].
+             replay: F.ReplayStream | None = None,
+             telemetry_window: int = 0):
+    """Build the pure run function (dps, fp, seed) -> Stats [, trace]
+    [, telemetry snapshots].
 
     ``spec`` is a :class:`CompiledSpec` or a :class:`MemorySystemSpec`;
     ``dps`` is the per-group tuple of :class:`repro.core.device.DynParams`
     (a bare ``DynParams`` is accepted for the 1-group case).  One compiled
-    program per (system, configs, n_cycles, trace, replay) regardless of
-    group or channel count: the frontend routes decoded requests to
-    per-(group, channel) queues, ``controller_step`` runs across each
-    group's channels via an inner ``jax.vmap``, and the groups advance as
-    parallel branches of the single ``lax.scan`` body, their states living
-    in the group-indexed :class:`SimState` carry.  CXL-attached groups
-    (``link_latency > 0``) see requests ``link_latency`` cycles after
-    arrival and return read data ``link_latency`` cycles late.
-    """
+    program per (system, configs, n_cycles, trace, replay, telemetry)
+    regardless of group or channel count: the frontend routes decoded
+    requests to per-(group, channel) queues, ``controller_step`` runs
+    across each group's channels via an inner ``jax.vmap``, and the groups
+    advance as parallel branches of the single ``lax.scan`` body, their
+    states living in the group-indexed :class:`SimState` carry.
+    CXL-attached groups (``link_latency > 0``) see requests
+    ``link_latency`` cycles after arrival and return read data
+    ``link_latency`` cycles late.
+
+    ``telemetry_window = W > 0`` restructures the cycle scan into windows
+    of W cycles (an outer scan over full windows around an inner W-cycle
+    scan of the SAME cycle function, plus a ragged final segment for the
+    ``n_cycles % W`` remainder) and emits one cumulative
+    :class:`GroupWindowSnap` tuple per window boundary — O(n_windows)
+    output, so long runs pay neither per-cycle trace memory nor
+    end-of-run-only blindness.  The per-cycle math is identical to the
+    flat scan, so stats — and command streams under ``trace=True`` — are
+    bit-equal with telemetry on or off."""
     msys = as_system(spec)
     groups = msys.groups
     n_groups = msys.n_groups
@@ -527,7 +695,10 @@ def make_run(spec, ccfg: C.ControllerConfig,
             cs, ev = jax.vmap(
                 lambda s: C.controller_step(grp.cspec, dp, ccfg, s, sim.clk,
                                             grp.link_latency))(cs)
-            ch = _accum_channel_stats(grp.cspec, sim.gs[gi].ch, ev)
+            # with telemetry, the gauge columns ride this same stats fold
+            # (the telemetry-off traced program is unchanged)
+            ch = _accum_channel_stats(grp.cspec, sim.gs[gi].ch, ev,
+                                      sim.clk, bool(telemetry_window))
             new_gs.append(GroupState(cs=cs, ch=ch))
             evs.append(ev)
         for ev in evs:
@@ -576,15 +747,65 @@ def make_run(spec, ccfg: C.ControllerConfig,
                                    jnp.int32)
                 css = css._replace(dev=css.dev._replace(
                     last_ref=css.dev.last_ref + offs[:, None]))
-            gs.append(GroupState(cs=css, ch=_zero_channel_stats(cspec)))
+            gs.append(GroupState(
+                cs=css,
+                ch=_zero_channel_stats(cspec, bool(telemetry_window))))
         init = SimState(gs=tuple(gs), fs=F.init_front(), clk=jnp.int32(0))
         init = init._replace(fs=init.fs._replace(rng=seed | jnp.uint32(1)))
-        final, ys = jax.lax.scan(partial(cycle, dps=dps, fp=fp), init, None,
-                                 length=n_cycles)
-        stats = _aggregate_stats(msys, [g.ch for g in final.gs], final.clk)
+        body = partial(cycle, dps=dps, fp=fp)
+        if not telemetry_window:
+            final, ys = jax.lax.scan(body, init, None, length=n_cycles)
+            stats = _aggregate_stats(msys, [g.ch for g in final.gs],
+                                     final.clk)
+            if trace:
+                return stats, ys
+            return stats
+
+        # Windowed telemetry: same cycle function, scanned in W-cycle
+        # segments.  Each boundary emits the CUMULATIVE counters (the host
+        # diffs consecutive snapshots), so the final snapshot equals the
+        # end-of-run aggregates bit-exactly by construction.
+        def snapshot(sim):
+            return tuple(_snap_telemetry(grp.cspec, g, sim.clk)
+                         for grp, g in zip(groups, sim.gs))
+
+        W = telemetry_window
+        n_full, rem = divmod(n_cycles, W)
+        sim = init
+        snap_parts, ys_parts = [], []
+
+        def window(sim, _):
+            sim, ys = jax.lax.scan(body, sim, None, length=W)
+            return sim, (snapshot(sim), ys)
+
+        if n_full:
+            sim, (snaps, ys) = jax.lax.scan(window, sim, None, length=n_full)
+            snap_parts.append(snaps)
+            if trace:
+                # [n_full, W, ...] -> [n_full*W, ...]: cycle-major order is
+                # unchanged, so command streams hash identically
+                ys_parts.append(jax.tree.map(
+                    lambda a: a.reshape((n_full * W,) + a.shape[2:]), ys))
+        if rem:
+            sim, ys = jax.lax.scan(body, sim, None, length=rem)
+            snap_parts.append(jax.tree.map(lambda a: a[None],
+                                           snapshot(sim)))
+            if trace:
+                ys_parts.append(ys)
+        if not snap_parts:          # n_cycles == 0: one (all-zero) window
+            snap_parts.append(jax.tree.map(lambda a: a[None],
+                                           snapshot(sim)))
+        cat = (lambda *xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
+        snaps = jax.tree.map(lambda *xs: cat(*xs), *snap_parts)
+        # strip the gauge columns before the uniform aggregation
+        stats = _aggregate_stats(
+            msys, [g.ch._replace(cmd_counts=g.ch.cmd_counts[:, :grp.cspec
+                                 .n_cmds])
+                   for grp, g in zip(groups, sim.gs)], sim.clk)
         if trace:
-            return stats, ys
-        return stats
+            ys = jax.tree.map(lambda *xs: cat(*xs), *ys_parts)
+            return stats, ys, snaps
+        return stats, snaps
 
     return run
 
@@ -688,3 +909,61 @@ def avg_probe_latency_ns(spec, stats) -> float:
         return float("nan")
     cycles = float(stats.probe_lat_sum) / float(stats.probe_cnt)
     return cycles * as_system(spec).tCK_ps * 1e-3
+
+
+def format_stats(stats, spec=None) -> str:
+    """Human-readable summary of one scalar run's ``stats``.
+
+    Without a spec: raw counters only.  With the run's spec/system:
+    group-aware physical units — per-group GB/s vs peak, bus utilization,
+    row-hit rate (1 - ACT/(RD+WR)), mean probe latency in ns — and a
+    per-channel table labeled by each channel's owning standard.  This is
+    the formatter behind :meth:`Stats.summary`, shared by the examples
+    and the trace/telemetry CLIs."""
+    cyc = int(stats.cycles)
+    lines = [f"cycles            {cyc:>14,}",
+             f"reads done        {int(stats.reads_done):>14,}",
+             f"writes done       {int(stats.writes_done):>14,}",
+             f"deferred          {int(stats.deferred):>14,}"]
+    if spec is None:
+        if cyc:
+            lines.append(f"bus busy          "
+                         f"{int(stats.data_bus_busy) / cyc:>14.1%}")
+        return "\n".join(lines)
+    msys = as_system(spec)
+    _check_system_stats(msys, stats)
+    ach = throughput_gbps(msys, stats)
+    lines += [f"throughput (GB/s) {ach:>14.2f}  "
+              f"(peak {peak_gbps(msys):.2f})",
+              f"probe latency(ns) {avg_probe_latency_ns(msys, stats):>14.1f}"]
+    hit = row_hit_rate(msys, stats)
+    if hit == hit:                          # NaN-safe
+        lines.append(f"row-hit rate      {hit:>14.1%}")
+    bd = channel_breakdown(msys, stats)
+    if len(bd) > 1 or msys.n_groups > 1:
+        lines.append("channel  standard     reads      writes   "
+                     "GB/s   bus-util")
+        for c, d in bd.items():
+            lines.append(
+                f"{c:>7}  {d['standard']:<9}{d['reads_done']:>10,}"
+                f"{d['writes_done']:>12,}{d['throughput_gbps']:>7.2f}"
+                f"{d['bus_util']:>10.1%}")
+    return "\n".join(lines)
+
+
+def row_hit_rate(spec, stats) -> float:
+    """Fraction of data commands (RD+WR) served without opening a new
+    row: ``1 - ACT / (RD + WR)``, summed over every group's native
+    command counts.  NaN when no data command issued.  Scalar stats only
+    — see the batched-stats caveat above."""
+    msys = as_system(spec)
+    _check_system_stats(msys, stats)
+    act = data = 0
+    for grp, ch in zip(msys.groups, stats.per_group):
+        counts = np.asarray(ch.cmd_counts).sum(axis=0)
+        names = grp.cspec.cmd_names
+        act += sum(int(counts[i]) for i, n in enumerate(names)
+                   if n.startswith("ACT"))
+        data += sum(int(counts[i]) for i, n in enumerate(names)
+                    if n in ("RD", "WR", "RDA", "WRA"))
+    return 1.0 - act / data if data else float("nan")

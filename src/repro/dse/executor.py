@@ -21,7 +21,10 @@ variant replaces the stats-only variant rather than adding to it, so
 `engine.TRACE_COUNT` advances identically to a no-capture sweep) — and the
 batched trace arrays are compacted per point into
 `repro.trace.CommandTrace` objects, optionally persisted as one `.npz`
-artifact per point.
+artifact per point.  `SweepSpec(telemetry=W)` works the same way for the
+windowed-metrics program: every point gains a
+`repro.telemetry.Telemetry` time series on `SweepResult.telemetry`, and
+`meta["cache"]` reports the public `RunCache.stats()` accounting.
 """
 from __future__ import annotations
 
@@ -126,6 +129,10 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
     trace_paths: dict = {}
     if trace_dir:
         os.makedirs(trace_dir, exist_ok=True)
+    telemetry: list | None = [None] * n if spec.telemetry else None
+    telem_paths: dict = {}
+    if spec.telemetry_dir:
+        os.makedirs(spec.telemetry_dir, exist_ok=True)
 
     t0 = time.perf_counter()
     misses0, hits0, trace0 = cache.misses, cache.hits, E.TRACE_COUNT
@@ -140,13 +147,30 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         fp = _front_params(pts, fcfg)
         fp, pad = _shard_batch(fp, devices)
         fn = cache.get(cspec, ccfg, fcfg, pts[0].n_cycles,
-                       trace=bool(capture), batched=True)
+                       trace=bool(capture), batched=True,
+                       telemetry=spec.telemetry)
         tg = time.perf_counter()
         out = fn(dp, fp, jnp.uint32(spec.seed))
+        snaps = None
+        if spec.telemetry:
+            *out, snaps = out
+            out = out[0] if len(out) == 1 else tuple(out)
         stats, dense = out if capture else (out, None)
         stats = jax.tree.map(np.asarray, stats)
         if pad:
             stats = jax.tree.map(lambda a: a[:-pad], stats)
+        if snaps is not None:
+            from repro import telemetry as T
+            snaps = jax.tree.map(np.asarray, snaps)
+            for j, (i, pt) in enumerate(members):
+                telemetry[i] = T.build(
+                    msys, jax.tree.map(lambda a: a[j], snaps),
+                    window=spec.telemetry, n_cycles=pt.n_cycles)
+                telemetry[i].meta["point"] = pt.label
+                if spec.telemetry_dir:
+                    telem_paths[i] = T.save(
+                        telemetry[i], os.path.join(
+                            spec.telemetry_dir, f"point_{i:04d}.npz"))
         if capture:
             from repro.trace.capture import capture as capture_trace
             from repro.trace.format import save as save_trace
@@ -185,9 +209,14 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         "wall_s": round(time.perf_counter() - t0, 3),
         "groups": group_meta,
         "seed": spec.seed,
+        # public RunCache accounting (RunCache.stats()) — cumulative over
+        # the cache's lifetime, alongside the per-sweep deltas above
+        "cache": cache.stats(),
     }
     if trace_paths:
         meta["trace_artifacts"] = [trace_paths.get(i) for i in range(n)]
+    if telem_paths:
+        meta["telemetry_artifacts"] = [telem_paths.get(i) for i in range(n)]
     return R.SweepResult(points=points, cmd_counts=cmd_counts,
                          cmd_names=cmd_names, meta=meta, traces=traces,
-                         **cols, **ints)
+                         telemetry=telemetry, **cols, **ints)

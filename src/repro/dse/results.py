@@ -113,6 +113,12 @@ class SweepResult:
     #: trace artifacts are saved separately (one `.npz` per point, paths in
     #: `meta["trace_artifacts"]`) when `capture_traces` names a directory.
     traces: list | None = None
+    #: Per-point `repro.telemetry.Telemetry` when the sweep ran with
+    #: `SweepSpec(telemetry=W)`; None otherwise.  Not persisted by
+    #: `save`/`load` — telemetry artifacts are saved separately (one
+    #: `.npz` per point, paths in `meta["telemetry_artifacts"]`) when
+    #: `telemetry_dir` names a directory.
+    telemetry: list | None = None
 
     def __len__(self):
         return len(self.points)

@@ -214,6 +214,15 @@ class SweepSpec:
     #: its trace-emitting program — still one compiled program per group,
     #: so ``engine.TRACE_COUNT`` grows exactly as in a no-capture sweep.
     capture_traces: bool | str = False
+    #: Windowed-telemetry window in cycles (0 = off).  Each compile group
+    #: then runs its telemetry-emitting program (one program per group,
+    #: same TRACE_COUNT accounting as capture_traces) and every point
+    #: gains a ``repro.telemetry.Telemetry`` on ``SweepResult.telemetry``.
+    telemetry: int = 0
+    #: Directory to persist one telemetry ``.npz`` artifact per point
+    #: (paths land in ``meta["telemetry_artifacts"]``); needs
+    #: ``telemetry > 0``.
+    telemetry_dir: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "systems",
@@ -245,6 +254,10 @@ class SweepSpec:
             raise ValueError("SweepSpec needs channel counts >= 1")
         if not self.intervals or not self.read_ratios:
             raise ValueError("SweepSpec needs a non-empty load grid")
+        if self.telemetry < 0:
+            raise ValueError("telemetry window must be >= 0 cycles")
+        if self.telemetry_dir and not self.telemetry:
+            raise ValueError("telemetry_dir needs telemetry=W > 0")
 
     @property
     def grid_shape(self) -> tuple:

@@ -47,6 +47,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--out", default="results/dse_sweep",
                     help="artifact basename (writes <out>.npz + <out>.json)")
     ap.add_argument("--seed", default=0x1234, type=int)
+    ap.add_argument("--telemetry", default=0, type=int, metavar="W",
+                    help="windowed-telemetry window in cycles (0 = off); "
+                         "every point gains a Telemetry time series")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="persist one telemetry .npz per point here "
+                         "(needs --telemetry)")
     return ap
 
 
@@ -60,15 +66,26 @@ def main(argv=None) -> SweepResult:
         channels=tuple(int(c) for c in args.channels.split(",") if c),
         mappers=(tuple(m.strip() for m in args.mappers.split(",") if m)
                  if args.mappers else None),
-        n_cycles=args.cycles, seed=args.seed)
+        n_cycles=args.cycles, seed=args.seed,
+        telemetry=args.telemetry, telemetry_dir=args.telemetry_dir)
     print(f"expanding {spec.grid_shape} grid -> {spec.n_points} points")
     result = execute(spec)
     print(result.to_table())
     m = result.meta
+    c = m["cache"]
     print(f"\n{m['n_groups']} compiled programs for {m['n_points']} points "
           f"({m['compile_cache_misses']} compiles, "
           f"{m['compile_cache_hits']} cache hits, {m['traces']} traces) "
           f"in {m['wall_s']}s on {m['n_devices']} device(s)")
+    print(f"run cache: {c['entries']} live programs, {c['hits']} hits / "
+          f"{c['misses']} misses, first-call (trace+compile+run) "
+          f"{c['first_call_s']}s")
+    if result.telemetry:
+        n_art = len(m.get("telemetry_artifacts", []))
+        print(f"telemetry: {len(result.telemetry)} per-point series "
+              f"(window={spec.telemetry})"
+              + (f", {n_art} artifacts in {spec.telemetry_dir}"
+                 if n_art else ""))
     for cv in result.curves():
         knee_iv = cv.intervals[cv.knee]
         print(f"  {cv.system:>10} rd={cv.read_ratio:g}: "

@@ -1,0 +1,24 @@
+"""repro.telemetry — windowed in-scan metrics + host-side run profiler.
+
+The observability layer between end-of-run ``Stats`` and full per-cycle
+command traces (docs/observability.md):
+
+- ``Simulator.run(..., telemetry=W)`` -> ``(stats, Telemetry)``: windowed
+  per-channel bandwidth / row-hit / occupancy / refresh / latency
+  histograms captured inside the single ``lax.scan``.
+- :class:`Profiler` / :func:`profile_run`: compile wall-time, RunCache
+  hit/miss accounting, warm cycles/sec.
+- Artifacts: :func:`save` / :func:`load` (columnar .npz),
+  :func:`write_jsonl`, :func:`write_html` (LOD timeline), and the
+  ``python -m repro.telemetry`` CLI.
+"""
+from repro.telemetry.core import (FORMAT_VERSION, GroupTelemetry, Telemetry,
+                                  build, load, save, write_jsonl)
+from repro.telemetry.profile import Profiler, profile_run
+from repro.telemetry.viz import render_html, write_html
+
+__all__ = [
+    "FORMAT_VERSION", "GroupTelemetry", "Telemetry", "build", "load",
+    "save", "write_jsonl", "Profiler", "profile_run", "render_html",
+    "write_html",
+]

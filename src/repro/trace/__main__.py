@@ -102,15 +102,8 @@ def _simulate_system(args):
         read_ratio=args.ratio, seed=args.seed)
     print(f"simulated {args.cycles} cycles of {msys.label} "
           f"({msys.n_channels} channels, {msys.n_groups} spec groups): "
-          f"{len(trace)} commands, {int(stats.reads_done)} reads / "
-          f"{int(stats.writes_done)} writes served")
-    ch = stats.per_channel
-    for c in range(msys.n_channels):
-        grp = msys.groups[msys.group_of_channel(c)]
-        std = grp.cspec.standard
-        link = f" (link {grp.link_latency})" if grp.link_latency else ""
-        print(f"  ch{c} [{std}{link}]: {int(ch.reads_done[c])} reads / "
-              f"{int(ch.writes_done[c])} writes")
+          f"{len(trace)} commands")
+    print(stats.summary(msys))
     return msys, trace
 
 
@@ -139,15 +132,8 @@ def _simulate(args):
         read_ratio=args.ratio, seed=args.seed)
     print(f"simulated {args.cycles} cycles of {args.standard} ({org}/{tim}"
           f", {args.channels} channel{'s' if args.channels > 1 else ''})"
-          f": {len(trace)} commands, "
-          f"{int(stats.reads_done)} reads / {int(stats.writes_done)} writes"
-          " served")
-    if args.channels > 1:
-        ch = stats.per_channel
-        for c in range(args.channels):
-            print(f"  ch{c}: {int(ch.reads_done[c])} reads / "
-                  f"{int(ch.writes_done[c])} writes, "
-                  f"{int(ch.cmd_counts[c].sum())} commands")
+          f": {len(trace)} commands")
+    print(stats.summary(sim.cspec))
     return sim.cspec, trace
 
 

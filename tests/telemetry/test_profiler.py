@@ -1,0 +1,59 @@
+"""Host-side run profiler: RunCache public accounting, span recording,
+and the one-shot cold/warm characterization."""
+import numpy as np
+
+from repro import telemetry as T
+from repro.core import Simulator
+from repro.core import engine as E
+
+
+def test_runcache_stats_public_api():
+    s = E.RUN_CACHE.stats()
+    assert set(s) == {"entries", "hits", "misses", "first_call_s"}
+    assert s["entries"] >= 0 and s["first_call_s"] >= 0.0
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    sim.run(500)
+    s2 = E.RUN_CACHE.stats()
+    # the run either compiled a new program (miss) or reused one (hit)
+    assert s2["hits"] + s2["misses"] > s["hits"] + s["misses"]
+
+
+def test_profiler_spans_and_cache_delta():
+    prof = T.Profiler()
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    with prof.span("first"):
+        sim.run(600, interval=3.0)
+    with prof.span("warm"):
+        sim.run(600, interval=3.0)
+    with prof.span("warm"):
+        sim.run(600, interval=3.0)
+    r = prof.report()
+    assert r["spans"]["first"]["calls"] == 1
+    assert r["spans"]["warm"]["calls"] == 2
+    assert r["wall_s"] >= r["spans"]["first"]["s"]
+    # cache view is a delta: exactly one compile, then hits
+    assert r["cache"]["misses"] == 1
+    assert r["cache"]["hits"] == 2
+    assert "programs" in prof.summary()
+
+
+def test_profile_run_cold_warm():
+    sim = Simulator("DDR5", "DDR5_16Gb_x8", "DDR5_4800B")
+    p = T.profile_run(sim, 800, repeats=2, interval=2.0)
+    assert set(p) >= {"first_call_s", "warm_s", "compile_s",
+                      "cycles_per_sec", "cache"}
+    assert p["first_call_s"] >= p["warm_s"] > 0
+    assert p["compile_s"] >= 0
+    assert p["cycles_per_sec"] > 0
+    # forwarding run_kw: telemetry-on profiling also works and the
+    # windowed run produces the same aggregate throughput
+    p_tel = T.profile_run(sim, 800, repeats=1, interval=2.0, telemetry=128)
+    assert p_tel["cycles_per_sec"] > 0
+
+
+def test_sweep_reports_cache_accounting():
+    from repro.dse import SweepSpec, execute
+    res = execute(SweepSpec(systems=("DDR4",), intervals=(4.0,),
+                            read_ratios=(1.0,), n_cycles=500))
+    c = res.meta["cache"]
+    assert set(c) >= {"entries", "hits", "misses", "first_call_s"}

@@ -1,0 +1,75 @@
+"""``python -m repro.telemetry`` CLI: simulate -> check -> artifacts ->
+timeline HTML, the --load path, heterogeneous groups, and --profile (the
+telemetry-smoke CI contract)."""
+import pytest
+
+from repro.telemetry.__main__ import main
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    out = tmp_path / "t.npz"
+    jsonl = tmp_path / "t.jsonl"
+    html = tmp_path / "t.html"
+    rc = main(["--standard", "DDR4", "--cycles", "3000", "--window", "256",
+               "--check", "--out", str(out), "--jsonl", str(jsonl),
+               "--html", str(html)])
+    assert rc == 0
+    assert out.exists() and jsonl.exists() and html.exists()
+    text = capsys.readouterr().out
+    assert "check: sum-over-windows == Stats aggregates" in text
+    assert "ragged tail yes" in text          # 3000 % 256 != 0
+    assert "windows" in text
+    page = html.read_text()
+    assert "bandwidth" in page and "occupancy" in page
+
+    # --load: re-summarize + re-render the saved artifact
+    html2 = tmp_path / "again.html"
+    rc = main(["--load", str(out), "--html", str(html2)])
+    assert rc == 0 and html2.exists()
+    assert "loaded" in capsys.readouterr().out
+
+
+def test_cli_hetero_groups(capsys):
+    rc = main(["--group", "DDR5:2", "--group", "DDR4:2:80",
+               "--cycles", "2000", "--window", "200", "--check"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "DDR5" in text and "DDR4" in text and "link=80" in text
+    assert "check: sum-over-windows == Stats aggregates" in text
+
+
+def test_cli_check_fails_nonzero(monkeypatch, capsys):
+    # tamper with the built series through the build hook: --check must
+    # propagate the mismatch as a nonzero exit status
+    import repro.telemetry as T
+    orig = T.build
+
+    def tampered(*a, **k):
+        telem = orig(*a, **k)
+        telem.groups[0].reads[0, 0] += 1
+        return telem
+    monkeypatch.setattr(T, "build", tampered)
+    # the engine looks build up through the package at call time
+    import repro.core.engine  # noqa: F401  (import for the record)
+    rc = main(["--standard", "DDR4", "--cycles", "1000", "--window", "256",
+               "--check"])
+    assert rc == 1
+    assert "reads" in capsys.readouterr().out
+
+
+def test_cli_profile(capsys):
+    rc = main(["--standard", "DDR4", "--cycles", "1000", "--window", "256",
+               "--profile"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "profile: first call" in text and "cycles/s" in text
+
+
+def test_cli_rejects_bad_window():
+    with pytest.raises(SystemExit):
+        main(["--standard", "DDR4", "--cycles", "1000", "--window", "0"])
+
+
+def test_cli_rejects_unknown_standard():
+    with pytest.raises(SystemExit):
+        main(["--standard", "NOPE", "--cycles", "100"])

@@ -1,0 +1,205 @@
+"""Windowed-telemetry consistency: counters captured one window at a
+time inside the scan, summed over ALL windows, must equal the end-of-run
+``Stats`` aggregates bit-exactly — across every registered standard,
+multi-channel systems, and heterogeneous compositions, including the
+ragged final window (``n_cycles % window != 0``).
+
+``Telemetry.check`` is the property under test; the explicit assertions
+below also pin the derived-metric invariants (occupancy bounds, latency
+histogram accounting) and the artifact round-trip.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import telemetry as T
+from repro.core import ControllerConfig, Simulator, compile_system
+from repro.dse.spec import DEFAULT_SYSTEMS
+
+pytestmark = pytest.mark.device_timings
+
+RAGGED = 1500        # 1500 % 256 != 0: exercises the ragged final window
+W = 256
+
+
+def _assert_consistent(sim, stats, telem, n_cycles, window):
+    # the property: sum-over-windows == aggregates, every counter
+    telem.check(stats)
+    assert telem.n_cycles == n_cycles and telem.window == window
+    n_full, rem = divmod(n_cycles, window)
+    assert telem.n_windows == n_full + (1 if rem or not n_full else 0)
+    assert int(telem.widths.sum()) == n_cycles
+    for gi, gt in enumerate(telem.groups):
+        grp = sim.msys.groups[gi]
+        # occupancy: bounded by the request-queue depth, never negative
+        occ = gt.occupancy(telem.widths)
+        assert (gt.occ_sum >= 0).all()
+        assert (occ <= sim.controller.queue_depth + 1e-9).all(), \
+            f"group {gi} occupancy exceeds queue depth"
+        # latency histogram: non-negative, accounts for every served
+        # probe window by window, bucket axis = edges + open top bucket
+        assert gt.lat_hist.shape[2] == len(grp.cspec.lat_bucket_edges) + 1
+        assert (gt.lat_hist >= 0).all()
+        np.testing.assert_array_equal(gt.lat_hist.sum(axis=2), gt.probe_cnt)
+        # windowed counters are deltas of monotone counts: non-negative
+        for name in ("reads", "writes", "probe_cnt", "deferred",
+                     "cmd_counts"):
+            assert (getattr(gt, name) >= 0).all(), f"group {gi} {name}"
+
+
+@pytest.mark.parametrize("standard", sorted(DEFAULT_SYSTEMS))
+def test_windows_sum_to_stats_every_standard(standard):
+    org, tim = DEFAULT_SYSTEMS[standard]
+    sim = Simulator(standard, org, tim)
+    stats, telem = sim.run(RAGGED, interval=2.0, read_ratio=0.7,
+                           telemetry=W)
+    _assert_consistent(sim, stats, telem, RAGGED, W)
+    # the same run without telemetry yields the same aggregates: the
+    # windowed restructuring is observationally pure
+    plain = sim.run(RAGGED, interval=2.0, read_ratio=0.7)
+    np.testing.assert_array_equal(np.asarray(stats.reads_done),
+                                  np.asarray(plain.reads_done))
+    np.testing.assert_array_equal(np.asarray(stats.cmd_counts),
+                                  np.asarray(plain.cmd_counts))
+
+
+def test_multi_channel_windows_sum_to_stats():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4)
+    stats, telem = sim.run(3000, interval=1.0, read_ratio=0.7, telemetry=W)
+    _assert_consistent(sim, stats, telem, 3000, W)
+    (gt,) = telem.groups
+    assert gt.reads.shape == (telem.n_windows, 4)
+    # some window saw traffic on every channel
+    assert (gt.reads.sum(axis=0) > 0).all()
+
+
+def test_hetero_ddr5_cxl_ddr4_windows_sum_to_stats():
+    hsys = compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=2),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=2, link_latency=80),
+    ])
+    sim = Simulator(system=hsys)
+    stats, telem = sim.run(2900, interval=1.0, read_ratio=0.7, telemetry=200)
+    _assert_consistent(sim, stats, telem, 2900, 200)
+    assert len(telem.groups) == 2
+    assert telem.groups[0].standard == "DDR5"
+    assert telem.groups[1].link_latency == 80
+    # each group's windowed command counts live in its native namespace
+    assert telem.groups[0].cmd_counts.shape[2] == \
+        len(hsys.groups[0].cspec.cmd_names)
+    assert telem.groups[1].cmd_counts.shape[2] == \
+        len(hsys.groups[1].cspec.cmd_names)
+
+
+def test_exact_multiple_and_tiny_runs():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    # n_cycles an exact multiple of the window: no ragged tail
+    stats, telem = sim.run(1024, interval=2.0, telemetry=256)
+    assert telem.n_windows == 4
+    _assert_consistent(sim, stats, telem, 1024, 256)
+    # n_cycles below one window: a single ragged window IS the run
+    stats, telem = sim.run(100, interval=2.0, telemetry=256)
+    assert telem.n_windows == 1 and int(telem.widths[0]) == 100
+    _assert_consistent(sim, stats, telem, 100, 256)
+
+
+def test_stats_identical_with_and_without_telemetry():
+    """Scheduler decisions must be unaffected: trace streams with
+    telemetry on are pinned by tests/trace/test_golden_equality.py; here
+    the scalar aggregates are compared field by field."""
+    sim = Simulator("HBM3", "HBM3_16Gb", "HBM3_5200", channels=2)
+    plain = sim.run(2000, interval=1.0, read_ratio=0.7)
+    stats, _ = sim.run(2000, interval=1.0, read_ratio=0.7, telemetry=128)
+    for f in ("reads_done", "writes_done", "probe_lat_sum", "probe_cnt",
+              "data_bus_busy", "deferred", "cmd_counts"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(stats, f)), np.asarray(getattr(plain, f)),
+            err_msg=f)
+
+
+def test_check_rejects_tampered_series():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    stats, telem = sim.run(RAGGED, interval=2.0, telemetry=W)
+    telem.groups[0].reads[0, 0] += 1
+    with pytest.raises(ValueError, match="reads"):
+        telem.check(stats)
+
+
+def test_artifact_roundtrip(tmp_path):
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2)
+    stats, telem = sim.run(RAGGED, interval=2.0, telemetry=W)
+    path = T.save(telem, os.path.join(tmp_path, "t.npz"))
+    back = T.load(path)
+    assert back.window == telem.window
+    assert back.n_cycles == telem.n_cycles
+    np.testing.assert_array_equal(back.t_end, telem.t_end)
+    for gt, gb in zip(telem.groups, back.groups):
+        assert gb.standard == gt.standard
+        assert gb.cmd_names == gt.cmd_names
+        assert gb.lat_edges == gt.lat_edges
+        for name in ("reads", "writes", "occ_sum", "cmd_counts",
+                     "lat_hist"):
+            np.testing.assert_array_equal(getattr(gb, name),
+                                          getattr(gt, name), err_msg=name)
+    back.check(stats)           # the reloaded series still verifies
+
+    n = T.write_jsonl(telem, os.path.join(tmp_path, "t.jsonl"))
+    assert n == telem.n_windows
+    import json
+    lines = [json.loads(l) for l in
+             open(os.path.join(tmp_path, "t.jsonl"))]
+    assert len(lines) == n
+    assert lines[-1]["t_end"] == RAGGED
+    assert sum(r["groups"][0]["reads"][0] for r in lines) == \
+        int(np.asarray(stats.per_group[0].reads_done)[0])
+
+
+def test_summary_mentions_each_group():
+    hsys = compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=1),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=1, link_latency=40),
+    ])
+    sim = Simulator(system=hsys)
+    _, telem = sim.run(1200, interval=2.0, telemetry=300)
+    s = telem.summary()
+    assert "DDR5" in s and "DDR4" in s and "link=40" in s
+    assert f"{telem.n_windows} windows" in s
+
+
+def test_sweep_attaches_per_point_telemetry(tmp_path):
+    from repro.dse import SweepSpec, execute
+    spec = SweepSpec(systems=("DDR4",), intervals=(4.0, 1.0),
+                     read_ratios=(0.7,), n_cycles=1000, telemetry=128,
+                     telemetry_dir=str(tmp_path))
+    res = execute(spec)
+    assert res.telemetry is not None
+    assert len(res.telemetry) == len(res.points) == 2
+    for i, tel in enumerate(res.telemetry):
+        assert tel.window == 128 and tel.n_cycles == 1000
+        # sweep results are columnar (no per-point Stats object): the
+        # windowed series must sum to the columnar aggregates
+        tot = sum(int(gt.reads.sum() + gt.writes.sum())
+                  for gt in tel.groups)
+        assert tot == int(res.reads_done[i] + res.writes_done[i])
+        assert tel.meta["point"] == res.points[i].label
+    arts = res.meta["telemetry_artifacts"]
+    assert len(arts) == 2
+    back = T.load(arts[0])
+    np.testing.assert_array_equal(back.groups[0].reads,
+                                  res.telemetry[0].groups[0].reads)
+
+
+def test_refresh_windows_nonzero_on_long_runs():
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                    controller=ControllerConfig(refresh_enabled=True))
+    _, telem = sim.run(20_000, interval=4.0, telemetry=1024)
+    (gt,) = telem.groups
+    ref = gt.refreshes()
+    assert ref.sum() > 0          # tREFI windows elapsed -> refreshes seen
+    # refresh activity is windowed, not lumped into one sample
+    assert (ref > 0).sum() > 1

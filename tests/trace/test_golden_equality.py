@@ -81,3 +81,22 @@ def test_hetero_system_stream_pinned():
     want = GOLDEN["DDR5x2+DDR4x2@80"]
     assert len(tr) == want["n"]
     assert h.hexdigest() == want["sha256"]
+
+
+@pytest.mark.parametrize("standard", sorted(DEFAULT_SYSTEMS))
+def test_command_stream_bit_exact_with_telemetry_enabled(standard):
+    """Windowed telemetry must be observationally pure: with
+    ``telemetry=W`` the cycle scan is restructured into W-cycle windows
+    (plus a ragged tail — 3000 % 256 != 0 here), yet the command stream
+    must hash to the SAME golden value as the flat scan, for every
+    registered standard."""
+    org, tim = DEFAULT_SYSTEMS[standard]
+    sim = Simulator(standard, org, tim,
+                    controller=ControllerConfig(scheduler="FRFCFS"))
+    _, dense, telem = sim.run(3000, interval=2.0, read_ratio=0.7,
+                              trace=True, telemetry=256)
+    tr = capture(sim.cspec, dense)
+    want = GOLDEN[standard]
+    assert len(tr) == want["n"], (standard, len(tr))
+    assert trace_sha256(tr) == want["sha256"], standard
+    assert telem.n_windows == 3000 // 256 + 1

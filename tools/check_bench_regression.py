@@ -11,7 +11,10 @@ baseline:
     vs the dense-ring baseline for DDR5 and HBM3;
   * the heterogeneous (DDR5 + CXL-DDR4, 2 spec groups) engine rate,
     relative to the same box's homogeneous 4-channel rate, must not fall
-    below the floor recorded at merge time (``hetero_floor_vs_4ch``).
+    below the floor recorded at merge time (``hetero_floor_vs_4ch``);
+  * windowed-telemetry capture (4-channel engine, window=256) must cost
+    at most the committed ceiling (``telemetry_overhead_ceiling``, 5% at
+    merge time) over the telemetry-off run of the same box.
 
 Usage: python tools/check_bench_regression.py --baseline BENCH_engine.json \
            --fresh results/bench_fresh.json
@@ -63,6 +66,24 @@ def check(baseline: dict, fresh: dict) -> list:
             f"{het.get('vs_4ch_homogeneous')} of the homogeneous 4ch rate "
             f"< merge-time floor {het_floor} (baseline measured "
             f"{baseline.get('hetero', {}).get('vs_4ch_homogeneous')})")
+
+    # windowed-telemetry overhead vs the committed ceiling — both runs of
+    # the ratio happen on the same box back to back, so the ratio is
+    # stable where raw rates are not
+    tel = fresh.get("telemetry")
+    ceiling = baseline.get("telemetry_overhead_ceiling")
+    if tel is None:
+        errors.append("fresh results carry no telemetry overhead "
+                      "measurement — re-run benchmarks/run.py --only engine")
+    elif ceiling is None:
+        errors.append("baseline has no telemetry_overhead_ceiling "
+                      "(re-run benchmarks/run.py --only engine)")
+    elif tel.get("overhead", 1.0) > ceiling:
+        errors.append(
+            f"telemetry overhead regressed: {100 * tel.get('overhead'):.1f}%"
+            f" slowdown at window={tel.get('window')} > ceiling "
+            f"{100 * ceiling:.0f}% (baseline measured "
+            f"{100 * baseline.get('telemetry', {}).get('overhead', 0):.1f}%)")
     return errors
 
 
@@ -86,7 +107,9 @@ def main() -> int:
           + ", ".join(f"{k} {v['reduction']}x"
                       for k, v in fresh.get("carry_bytes", {}).items())
           + f";  hetero vs 4ch: {het.get('vs_4ch_homogeneous')} "
-          f"(floor {baseline.get('hetero_floor_vs_4ch')})")
+          f"(floor {baseline.get('hetero_floor_vs_4ch')});  telemetry "
+          f"overhead: {fresh.get('telemetry', {}).get('overhead')} "
+          f"(ceiling {baseline.get('telemetry_overhead_ceiling')})")
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     return 1 if errors else 0
