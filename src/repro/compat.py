@@ -69,3 +69,36 @@ def ensure_jax_sharding_compat() -> None:
     except AttributeError:
         pass
     _installed = True
+
+
+_shard_map_installed = False
+
+
+def ensure_jax_shard_map_compat() -> None:
+    """Install a keyword-style ``jax.shard_map`` on jax versions where it
+    still lives in ``jax.experimental.shard_map``.  Idempotent.
+
+    New jax exposes ``jax.shard_map(f, mesh=..., in_specs=...,
+    out_specs=...)`` directly; the engine's channel-sharded scan
+    (``repro.core.engine``) is written against that spelling, and this
+    shim makes it run unmodified on the pinned older jax.  The wrapper
+    drops ``check_vma``/``check_rep`` strictness (the engine's outputs
+    are all explicitly sharded, so the replication checker adds tracing
+    cost without catching anything)."""
+    global _shard_map_installed
+    if _shard_map_installed:
+        return
+    import jax
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      **kwargs):
+            kwargs.pop("check_vma", None)
+            kwargs.setdefault("check_rep", False)
+            return _shard_map(f, mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+        jax.shard_map = shard_map
+    _shard_map_installed = True

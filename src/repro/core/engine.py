@@ -93,12 +93,13 @@ class Stats(NamedTuple):
         return format_stats(self, spec)
 
 
-def _zero_channel_stats(cspec: CompiledSpec,
-                        telemetry: bool = False) -> ChannelStats:
+def _zero_channel_stats(cspec: CompiledSpec, telemetry: bool = False,
+                        n_channels: int | None = None) -> ChannelStats:
     """Zeroed per-channel counters; with ``telemetry``, ``cmd_counts``
     is widened by the ``1 + n_edges`` telemetry gauge columns of
-    :func:`_accum_channel_stats`."""
-    nch = cspec.n_channels
+    :func:`_accum_channel_stats`.  ``n_channels`` overrides the spec's
+    channel count (the channel-sharded path carries one device's slice)."""
+    nch = cspec.n_channels if n_channels is None else n_channels
     width = cspec.n_cmds + (1 + len(cspec.lat_bucket_edges)
                             if telemetry else 0)
     z = lambda *sh: jnp.zeros(sh, jnp.int32)
@@ -272,10 +273,42 @@ def system_fingerprint(spec):
                  for g in msys.groups)
 
 
+#: mesh axis name of the channel-sharded engine path
+CHANNEL_AXIS = "channels"
+
+
+def auto_channel_shard(spec, n_devices: int | None = None) -> int | None:
+    """Largest channel-mesh size ``d > 1`` the visible device count
+    supports and that divides EVERY spec group's channel count — the
+    fan-out ``make_run(..., shard=d)`` places one contiguous channel
+    slice per device.  None when no such ``d`` exists (single device,
+    single channel, or indivisible counts): callers then stay on the
+    vmapped single-device path."""
+    msys = as_system(spec)
+    ndev = jax.device_count() if n_devices is None else int(n_devices)
+    counts = [g.channels for g in msys.groups]
+    for d in range(min(ndev, min(counts)), 1, -1):
+        if all(c % d == 0 for c in counts):
+            return d
+    return None
+
+
+def _shard_desc(shard):
+    """Hashable mesh identity of a channel-sharded program: axis name,
+    mesh size, and the participating devices' (platform, id) pairs — a
+    cache warmed under one device topology never aliases another's
+    programs."""
+    if not shard or int(shard) <= 1:
+        return None
+    return (CHANNEL_AXIS, int(shard),
+            tuple((d.platform, d.id) for d in jax.devices()[:int(shard)]))
+
+
 def run_key(spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
             batched: bool, replay: F.ReplayStream | None = None,
-            telemetry: int = 0):
+            telemetry: int = 0, shard: int | None = None,
+            donate: bool = False):
     # interval/read_ratio reach the traced program only through FrontParams
     # (a traced argument) in both scalar and batched mode; the fcfg copies
     # are dead at trace time, so drop them from the key — sweeping the load
@@ -283,13 +316,17 @@ def run_key(spec, ccfg: C.ControllerConfig,
     # stays in the key (it changes the traced decode), as does the replay
     # stream's content fingerprint and the telemetry window (windowed runs
     # restructure the scan, so every window size is its own program).
+    # The device count + channel-mesh descriptor + donation flag key the
+    # topology: a program compiled for one mesh (or with donated inputs)
+    # is never silently reused for another.
     fkey = tuple(kv for kv in _freeze(fcfg)
                  if not (isinstance(kv, tuple)
                          and kv[0] in ("interval", "read_ratio")))
     return (system_fingerprint(spec), _freeze(ccfg), fkey,
             int(n_cycles), bool(trace), bool(batched),
             None if replay is None else replay.fingerprint,
-            int(telemetry))
+            int(telemetry), int(jax.device_count()), _shard_desc(shard),
+            bool(donate))
 
 
 class _TimedRun:
@@ -334,6 +371,9 @@ class RunCache:
         #: cumulative wall seconds of every cached program's FIRST call
         #: (trace + XLA compile + one synchronized run)
         self.first_call_s = 0.0
+        #: distinct program topologies compiled ("vmap" single-device,
+        #: "channels:<d>" for channel-sharded meshes)
+        self._topologies: set = set()
 
     def __len__(self):
         return len(self._runs)
@@ -342,26 +382,44 @@ class RunCache:
         self._runs.clear()
         self.hits = self.misses = 0
         self.first_call_s = 0.0
+        self._topologies.clear()
 
     def stats(self) -> dict:
         """Public cache accounting: ``entries`` (live programs), ``hits``
-        / ``misses`` (lookup counts since construction/clear), and
+        / ``misses`` (lookup counts since construction/clear),
         ``first_call_s`` (cumulative wall time of each program's first
-        call — the trace + compile cost plus one run)."""
+        call — the trace + compile cost plus one run), plus the device
+        topology view: ``devices`` (visible device count) and
+        ``shard_topologies`` (distinct program topologies compiled —
+        ``"vmap"`` for single-device programs, ``"channels:<d>"`` for
+        channel-sharded meshes)."""
         return {"entries": len(self._runs), "hits": self.hits,
                 "misses": self.misses,
-                "first_call_s": round(self.first_call_s, 3)}
+                "first_call_s": round(self.first_call_s, 3),
+                "devices": int(jax.device_count()),
+                "shard_topologies": tuple(sorted(self._topologies))}
 
     def get(self, spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool = False,
             batched: bool = False, replay: F.ReplayStream | None = None,
-            telemetry: int = 0):
+            telemetry: int = 0, shard: int | None = None,
+            donate: bool = False):
         """``spec`` may be a :class:`CompiledSpec` (homogeneous system) or
         a :class:`MemorySystemSpec` (heterogeneous composition).
         ``telemetry`` is the windowed-telemetry window in cycles (0 =
-        off); windowed programs emit cumulative snapshots every window."""
+        off); windowed programs emit cumulative snapshots every window.
+        ``shard`` runs the scan channel-sharded over a ``shard``-device
+        mesh (see :func:`make_run`); ``donate`` donates the ``fp``
+        argument's buffers to the computation (``donate_argnums``) — safe
+        whenever the caller rebuilds FrontParams per call, as the DSE
+        executor does."""
+        if shard and batched:
+            raise ValueError(
+                "channel sharding (shard=) composes with scalar runs only "
+                "— batched DSE points shard across devices in repro.dse "
+                "instead")
         key = run_key(spec, ccfg, fcfg, n_cycles, trace, batched, replay,
-                      telemetry)
+                      telemetry, shard, donate)
         fn = self._runs.get(key)
         if fn is not None:
             self.hits += 1
@@ -378,10 +436,13 @@ class RunCache:
                 SpecGroup(dataclasses.replace(g.cspec), g.channels,
                           g.link_latency) for g in as_system(spec).groups))
         fn = make_run(spec, ccfg, fcfg, n_cycles, trace, replay,
-                      telemetry_window=telemetry)
+                      telemetry_window=telemetry, shard=shard)
         if batched:
             fn = jax.vmap(fn, in_axes=(None, 0, None))
-        fn = _TimedRun(jax.jit(fn), self)
+        fn = _TimedRun(
+            jax.jit(fn, donate_argnums=(1,) if donate else ()), self)
+        self._topologies.add(f"{CHANNEL_AXIS}:{int(shard)}" if shard
+                             else "vmap")
         self._runs[key] = fn
         return fn
 
@@ -430,6 +491,13 @@ class Simulator:
     #: group descriptors (see :func:`repro.core.compile.compile_system`);
     #: mutually exclusive with the (standard, org, timing) triple
     system: object = None
+    #: channel-axis device sharding for scalar runs: ``None`` = auto
+    #: (shard across the largest channel mesh the visible devices
+    #: support; single-device boxes stay on the vmapped path), ``False``
+    #: = never, ``True`` = require (raise when no mesh fits), int ``d``
+    #: = exact mesh size.  Sharded and vmapped runs are bit-exact twins
+    #: (pinned by the golden command-stream hashes).
+    channel_shard: object = None
 
     def __post_init__(self):
         if self.system is not None:
@@ -472,6 +540,24 @@ class Simulator:
     def _dyn_params(self):
         return tuple(D.dyn_params(g.cspec) for g in self.msys.groups)
 
+    def _resolved_shard(self) -> int | None:
+        """The channel-mesh size scalar runs use, per ``channel_shard``."""
+        cs = self.channel_shard
+        if cs is None or cs is True:
+            d = auto_channel_shard(self.msys)
+            if d is None and cs is True:
+                raise ValueError(
+                    "channel_shard=True but no usable channel mesh: "
+                    f"{jax.device_count()} device(s) for per-group "
+                    f"channel counts "
+                    f"{[g.channels for g in self.msys.groups]} (pin host "
+                    "devices with XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=N)")
+            return d
+        if not cs or int(cs) <= 1:
+            return None
+        return int(cs)
+
     # -- single-config run ------------------------------------------------
     def run(self, n_cycles: int, interval: float | None = None,
             read_ratio: float | None = None, trace: bool = False,
@@ -491,7 +577,8 @@ class Simulator:
         fp = fcfg.params()
         run_fn = RUN_CACHE.get(self._cache_spec, self.controller, fcfg,
                                n_cycles, trace=trace, replay=self.replay,
-                               telemetry=telemetry)
+                               telemetry=telemetry,
+                               shard=self._resolved_shard())
         out = run_fn(self._dyn_params(), fp, jnp.uint32(seed))
         out = jax.tree.map(np.asarray, out)
         if telemetry:
@@ -618,9 +705,19 @@ def _aggregate_stats(msys: MemorySystemSpec, chs: list, clk) -> Stats:
 def make_run(spec, ccfg: C.ControllerConfig,
              fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
              replay: F.ReplayStream | None = None,
-             telemetry_window: int = 0):
+             telemetry_window: int = 0, shard: int | None = None):
     """Build the pure run function (dps, fp, seed) -> Stats [, trace]
     [, telemetry snapshots].
+
+    ``shard = d > 1`` runs the SAME cycle function channel-sharded over a
+    ``d``-device mesh (one contiguous slice of every group's channel axis
+    per device, ``d`` dividing every group's channel count): the whole
+    scan sits inside one ``jax.shard_map``, the frontend decode runs
+    replicated on every shard, each shard inserts into / steps its local
+    channels only, and the sole cross-shard traffic is one fused 5-wide
+    int32 ``psum`` per cycle (insert accepts + completion events).  The
+    sharded and vmapped programs are bit-exact twins — same stats, same
+    command streams, same telemetry.
 
     ``spec`` is a :class:`CompiledSpec` or a :class:`MemorySystemSpec`;
     ``dps`` is the per-group tuple of :class:`repro.core.device.DynParams`
@@ -685,10 +782,21 @@ def make_run(spec, ccfg: C.ControllerConfig,
         fingerprint=replay.fingerprint,
         dep=None if replay.dep is None else jnp.asarray(replay.dep))
 
-    def cycle(sim: SimState, _, dps, fp):
-        queues, fs = F.system_frontend_step(
+    static_bases = []
+    _b = 0
+    for grp in groups:
+        static_bases.append(_b)
+        _b += grp.channels
+
+    def cycle(sim: SimState, _, dps, fp, axis_name=None, bases=None):
+        # insert → step → ONE fused reduction → commit/finish.  On the
+        # sharded path ``axis_name``/``bases`` are set: the frontend
+        # decode runs replicated, inserts hit the local channel slice
+        # only, and the 5-wide int32 vector below is the cycle's entire
+        # cross-shard traffic (a single psum).
+        queues, draft = F.system_frontend_insert(
             msys, fcfg, fp, sim.fs, tuple(g.cs.queue for g in sim.gs),
-            sim.clk, sys_layout, rp)
+            sim.clk, sys_layout, rp, bases)
         new_gs, evs = [], []
         for gi, (grp, dp) in enumerate(zip(groups, dps)):
             cs = sim.gs[gi].cs._replace(queue=queues[gi])
@@ -701,70 +809,88 @@ def make_run(spec, ccfg: C.ControllerConfig,
                                       sim.clk, bool(telemetry_window))
             new_gs.append(GroupState(cs=cs, ch=ch))
             evs.append(ev)
-        for ev in evs:
-            fs = F.frontend_absorb(fs, fp, ev)
+        absorb = F.absorb_locals(evs[0])
+        for ev in evs[1:]:
+            absorb = absorb + F.absorb_locals(ev)
+        # [probe-accept, stream-accept, probes-done, served, completion]
+        loc = jnp.concatenate([jnp.stack([draft.okp, draft.ok]), absorb])
+        if axis_name is not None:
+            loc = jax.lax.psum(loc, axis_name)
+        fs = F.frontend_commit(fcfg, fp, sim.fs, draft, loc[0], loc[1],
+                               F.paced_by_arrive(fcfg, rp))
+        fs = F.frontend_finish(fs, fp, loc[2], loc[3], loc[4])
         out = SimState(gs=tuple(new_gs), fs=fs, clk=sim.clk + 1)
-        if trace:
-            if n_chan_total == 1:
-                # single-channel systems keep the historical [2] slot shape
-                e = evs[0]
-                ys = TraceArrays(e.cmd[0], e.bank[0], e.row[0],
-                                 e.arrive[0], e.hit_ready[0])
-            else:
-                # system channel axis: groups' channels, group-major
-                cat = (lambda f: getattr(evs[0], f)) if n_groups == 1 \
-                    else (lambda f: jnp.concatenate(
-                        [getattr(e, f) for e in evs], axis=0))
-                ys = TraceArrays(cat("cmd"), cat("bank"), cat("row"),
-                                 cat("arrive"), cat("hit_ready"))
-        else:
-            ys = None
+        # trace ys stay a per-group tuple ((C_g, 2) leaves) until the
+        # post-scan finalize — on the sharded path the gather happens on
+        # the group tuples, so the concat order is shard-independent
+        ys = tuple(TraceArrays(e.cmd, e.bank, e.row, e.arrive,
+                               e.hit_ready) for e in evs) if trace else None
         return out, ys
 
-    def run(dps, fp, seed):
-        global TRACE_COUNT
-        TRACE_COUNT += 1            # runs once per jax trace, not per call
-        if isinstance(dps, D.DynParams):
-            dps = (dps,)            # 1-group back-compat
-        if len(dps) != n_groups:
-            raise ValueError(f"expected {n_groups} DynParams (one per spec "
-                             f"group), got {len(dps)}")
+    def _finalize_trace(ys_groups):
+        """Per-group ``(T, C_g, 2)`` trace fields → the public
+        :class:`TraceArrays` layout: single-channel systems keep the
+        historical ``(T, 2)`` slot shape; multi-channel systems
+        concatenate the groups' channel axes group-major."""
+        if n_chan_total == 1:
+            return jax.tree.map(lambda a: a[:, 0], ys_groups[0])
+        if n_groups == 1:
+            return ys_groups[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                            *ys_groups)
+
+    def _init_state(seed, shard_index=None):
         gs = []
         for grp in groups:
             cspec, nch = grp.cspec, grp.channels
+            loc = nch // shard if shard else nch
             cs1 = C.init_ctrl_state(cspec, ccfg.queue_depth)
             css = jax.tree.map(
-                lambda a: jnp.broadcast_to(a, (nch,) + a.shape), cs1)
+                lambda a: jnp.broadcast_to(a, (loc,) + a.shape), cs1)
             if ccfg.refresh_stagger and nch > 1:
                 # phase-shift each channel's refresh epoch by c*nREFI/C
                 # (real controllers stagger REF so the channels' refresh
                 # windows — and their bandwidth dips — never align);
                 # channel 0 keeps the historical phase, so single-channel
                 # groups are bit-identical.  Staggering is group-local:
-                # each group phases its own nREFI.
+                # each group phases its own nREFI.  On the sharded path
+                # the offsets come from the GLOBAL channel ids of this
+                # shard's slice, so every channel keeps the phase it has
+                # on the vmapped path.
                 nrefi = int(cspec.timings["nREFI"])
-                offs = jnp.asarray([-(c * nrefi // nch) for c in range(nch)],
-                                   jnp.int32)
+                if shard_index is None:
+                    offs = jnp.asarray(
+                        [-(c * nrefi // nch) for c in range(nch)],
+                        jnp.int32)
+                else:
+                    gidx = (shard_index * jnp.int32(loc)
+                            + jnp.arange(loc, dtype=jnp.int32))
+                    offs = -((gidx * jnp.int32(nrefi)) // jnp.int32(nch))
                 css = css._replace(dev=css.dev._replace(
                     last_ref=css.dev.last_ref + offs[:, None]))
             gs.append(GroupState(
                 cs=css,
-                ch=_zero_channel_stats(cspec, bool(telemetry_window))))
+                ch=_zero_channel_stats(cspec, bool(telemetry_window),
+                                       n_channels=loc)))
         init = SimState(gs=tuple(gs), fs=F.init_front(), clk=jnp.int32(0))
-        init = init._replace(fs=init.fs._replace(rng=seed | jnp.uint32(1)))
-        body = partial(cycle, dps=dps, fp=fp)
+        return init._replace(
+            fs=init.fs._replace(rng=seed | jnp.uint32(1)))
+
+    def _scan_cycles(init, body):
+        """Drive ``body`` over ``n_cycles`` honoring the telemetry
+        windowing; returns ``(final SimState, per-group trace ys | None,
+        per-group window snaps | None)``.  Shared verbatim by the
+        vmapped and sharded paths (the body closure is the only
+        difference), so the windowed restructure cannot diverge between
+        them."""
         if not telemetry_window:
             final, ys = jax.lax.scan(body, init, None, length=n_cycles)
-            stats = _aggregate_stats(msys, [g.ch for g in final.gs],
-                                     final.clk)
-            if trace:
-                return stats, ys
-            return stats
+            return final, ys, None
 
         # Windowed telemetry: same cycle function, scanned in W-cycle
-        # segments.  Each boundary emits the CUMULATIVE counters (the host
-        # diffs consecutive snapshots), so the final snapshot equals the
-        # end-of-run aggregates bit-exactly by construction.
+        # segments.  Each boundary emits the CUMULATIVE counters (the
+        # host diffs consecutive snapshots), so the final snapshot equals
+        # the end-of-run aggregates bit-exactly by construction.
         def snapshot(sim):
             return tuple(_snap_telemetry(grp.cspec, g, sim.clk)
                          for grp, g in zip(groups, sim.gs))
@@ -779,11 +905,12 @@ def make_run(spec, ccfg: C.ControllerConfig,
             return sim, (snapshot(sim), ys)
 
         if n_full:
-            sim, (snaps, ys) = jax.lax.scan(window, sim, None, length=n_full)
+            sim, (snaps, ys) = jax.lax.scan(window, sim, None,
+                                            length=n_full)
             snap_parts.append(snaps)
             if trace:
-                # [n_full, W, ...] -> [n_full*W, ...]: cycle-major order is
-                # unchanged, so command streams hash identically
+                # [n_full, W, ...] -> [n_full*W, ...]: cycle-major order
+                # is unchanged, so command streams hash identically
                 ys_parts.append(jax.tree.map(
                     lambda a: a.reshape((n_full * W,) + a.shape[2:]), ys))
         if rem:
@@ -797,17 +924,98 @@ def make_run(spec, ccfg: C.ControllerConfig,
                                            snapshot(sim)))
         cat = (lambda *xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
         snaps = jax.tree.map(lambda *xs: cat(*xs), *snap_parts)
-        # strip the gauge columns before the uniform aggregation
-        stats = _aggregate_stats(
-            msys, [g.ch._replace(cmd_counts=g.ch.cmd_counts[:, :grp.cspec
-                                 .n_cmds])
-                   for grp, g in zip(groups, sim.gs)], sim.clk)
-        if trace:
-            ys = jax.tree.map(lambda *xs: cat(*xs), *ys_parts)
-            return stats, ys, snaps
-        return stats, snaps
+        ys = jax.tree.map(lambda *xs: cat(*xs), *ys_parts) if trace \
+            else None
+        return sim, ys, snaps
 
-    return run
+    def _final_chs(final_gs):
+        """The groups' end-of-run ChannelStats, telemetry gauge columns
+        stripped before the uniform aggregation."""
+        if not telemetry_window:
+            return [g.ch for g in final_gs]
+        return [g.ch._replace(cmd_counts=g.ch.cmd_counts[:, :grp.cspec
+                              .n_cmds])
+                for grp, g in zip(groups, final_gs)]
+
+    def _check_dps(dps):
+        if isinstance(dps, D.DynParams):
+            dps = (dps,)            # 1-group back-compat
+        if len(dps) != n_groups:
+            raise ValueError(f"expected {n_groups} DynParams (one per spec "
+                             f"group), got {len(dps)}")
+        return dps
+
+    def run(dps, fp, seed):
+        global TRACE_COUNT
+        TRACE_COUNT += 1            # runs once per jax trace, not per call
+        dps = _check_dps(dps)
+        body = partial(cycle, dps=dps, fp=fp)
+        final, ys, snaps = _scan_cycles(_init_state(seed), body)
+        stats = _aggregate_stats(msys, _final_chs(final.gs), final.clk)
+        out = (stats,)
+        if trace:
+            out += (_finalize_trace(ys),)
+        if telemetry_window:
+            out += (snaps,)
+        return out if len(out) > 1 else stats
+
+    if not shard:
+        return run
+
+    # -- channel-sharded variant --------------------------------------
+    # The ENTIRE scan sits inside one shard_map, so the per-cycle psum
+    # compiles into the same single program as the scan (no per-cycle
+    # host round trips).  Each device owns a contiguous slice of every
+    # group's channel axis; out_specs gather the per-channel outputs
+    # back onto the global channel axis, and the replicated aggregation
+    # below is shared verbatim with the vmapped path.
+    from repro.compat import ensure_jax_shard_map_compat
+    ensure_jax_shard_map_compat()
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    shard = int(shard)
+    bad = [g.channels for g in groups if g.channels % shard]
+    if shard < 2 or bad:
+        raise ValueError(
+            f"channel shard {shard} must be >= 2 and divide every "
+            f"group's channel count {[g.channels for g in groups]}")
+    devs = jax.devices()
+    if len(devs) < shard:
+        raise ValueError(
+            f"channel shard {shard} needs {shard} devices, have "
+            f"{len(devs)} — pin host devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shard}")
+    mesh = Mesh(np.asarray(devs[:shard]), (CHANNEL_AXIS,))
+
+    def run_sharded(dps, fp, seed):
+        global TRACE_COUNT
+        TRACE_COUNT += 1
+        dps = _check_dps(dps)
+
+        def shard_body(dps, fp, seed):
+            si = jax.lax.axis_index(CHANNEL_AXIS)
+            bases = tuple(
+                jnp.int32(b) + si * jnp.int32(grp.channels // shard)
+                for b, grp in zip(static_bases, groups))
+            body = partial(cycle, dps=dps, fp=fp,
+                           axis_name=CHANNEL_AXIS, bases=bases)
+            final, ys, snaps = _scan_cycles(_init_state(seed, si), body)
+            return tuple(_final_chs(final.gs)), ys, snaps
+
+        chs, ys, snaps = jax.shard_map(
+            shard_body, mesh=mesh, in_specs=(P(), P(), P()),
+            out_specs=(P(CHANNEL_AXIS), P(None, CHANNEL_AXIS),
+                       P(None, CHANNEL_AXIS)))(dps, fp, seed)
+        stats = _aggregate_stats(msys, list(chs), jnp.int32(n_cycles))
+        out = (stats,)
+        if trace:
+            out += (_finalize_trace(ys),)
+        if telemetry_window:
+            out += (snaps,)
+        return out if len(out) > 1 else stats
+
+    return run_sharded
 
 
 # --------------------------------------------------------------------------

@@ -93,6 +93,28 @@ def stack_params(load_points, probe_gap: int) -> FrontParams:
         probe_gap=jnp.full((len(load_points),), probe_gap, jnp.int32))
 
 
+class FrontDraft(NamedTuple):
+    """One cycle's frontend-insert outcome, BEFORE the accept flags fold
+    back into :class:`FrontState`.
+
+    The insert/commit split exists for the channel-sharded engine path:
+    every shard runs the same replicated frontend decode (``rng`` /
+    ``accum`` / ``want`` are pure functions of the replicated state, so
+    they are identical on every shard), but each shard inserts into its
+    LOCAL slice of the channel axis only — ``okp``/``ok`` are therefore
+    shard-local accept counts (0/1).  At most one shard owns the decoded
+    channel, so a single cross-shard sum (one ``psum``) of the counts
+    recovers the global accepts :func:`frontend_commit` needs.  On the
+    unsharded path local == global and the wrappers below compose the
+    two stages directly."""
+    rng: jnp.ndarray     # uint32 LCG state after this cycle's draws
+    accum: jnp.ndarray   # arrival accumulator after refill/clamp,
+    #                      before the accepted-arrival decrement
+    want: jnp.ndarray    # bool — a stream insert was attempted
+    okp: jnp.ndarray     # int32 — locally accepted probes (0/1)
+    ok: jnp.ndarray      # int32 — locally accepted stream requests (0/1)
+
+
 def init_front(seed: int = 0x1234) -> FrontState:
     return FrontState(accum_fp=jnp.int32(0), rng=jnp.uint32(seed | 1),
                       seq=jnp.int32(0), probe_busy=jnp.asarray(False),
@@ -253,59 +275,72 @@ def _rand_addr(cspec: CompiledSpec, layout, rng):
 
 
 def route_insert(queues: C.Queue, chan, is_write, is_probe, sub, row, col,
-                 arrive, want):
+                 arrive, want, chan_base=0):
     """Insert one request into its target channel's queue.
 
     ``queues`` leaves carry a leading channel axis ``(C, Q)``; the insert
     is vmapped across channels with ``want`` gated on the channel match,
     so exactly one channel (the decoded one) can accept.  Returns
     ``(queues', ok)`` — ``ok`` False means the target channel's queue was
-    full (per-channel backpressure)."""
+    full (per-channel backpressure).  ``chan_base`` is the global id of
+    queue row 0: on the channel-sharded engine path each shard holds a
+    contiguous slice of the channel axis, and the decoded ``chan`` is
+    always a GLOBAL id — at most one shard (the owner's) can accept, so
+    ``ok`` is then the shard-local accept that a cross-shard sum turns
+    into the global one."""
     n_channels = queues.valid.shape[0]
 
     def one(q, c):
         return C.queue_insert(q, is_write, is_probe, sub, row, col, arrive,
                               want & (chan == c))
 
-    queues, oks = jax.vmap(one)(queues, jnp.arange(n_channels,
-                                                   dtype=jnp.int32))
+    ids = jnp.arange(n_channels, dtype=jnp.int32) + jnp.int32(chan_base)
+    queues, oks = jax.vmap(one)(queues, ids)
     return queues, jnp.any(oks)
 
 
-def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
-                  fs: FrontState, queues: C.Queue, clk, layout=None,
-                  replay=None):
-    """Inject up to one probe and one streaming/replay request this cycle.
+def paced_by_arrive(cfg: FrontendConfig, replay) -> bool:
+    """True when replay pacing (captured ``arrive`` clocks) replaces the
+    interval accumulator — a STATIC property of (config, stream)."""
+    return (cfg.stream and cfg.pattern == "trace" and replay is not None
+            and replay.arrive is not None)
+
+
+def frontend_insert(cspec: CompiledSpec, cfg: FrontendConfig,
+                    fp: FrontParams, fs: FrontState, queues: C.Queue, clk,
+                    layout=None, replay=None, chan_base=0):
+    """Decode + insert up to one probe and one streaming/replay request
+    into ``queues`` this cycle, WITHOUT touching ``fs`` — the accept
+    flags come back in a :class:`FrontDraft` for :func:`frontend_commit`.
 
     Probes insert first so a saturated streaming load cannot starve the
     latency measurement out of the queues entirely.  ``layout`` is the
     static mapper layout (defaults to ``cfg.mapper``'s); ``replay`` is the
     jnp-column :class:`ReplayStream` required by ``pattern="trace"``.
+    ``chan_base`` is the global channel id of queue row 0 (non-zero only
+    on the channel-sharded path).
     """
     if layout is None:
         layout = make_layout(cspec, cfg.mapper)
     rng = fs.rng
     accum = fs.accum_fp
-    sent = fs.sent
     seq = fs.seq
-    dropped = fs.dropped_backpressure
+    okp = jnp.int32(0)
+    ok = jnp.int32(0)
+    want = jnp.asarray(False)
 
     if cfg.probes:
         want_p = (~fs.probe_busy) & (clk >= fs.probe_next)
         chan, sub, row, col, rng = _rand_addr(cspec, layout, rng)
-        queues, okp = route_insert(queues, chan, jnp.asarray(False),
-                                   jnp.asarray(True), sub, row, col, clk,
-                                   want_p)
-        probe_busy = fs.probe_busy | okp
-    else:
-        probe_busy = fs.probe_busy
+        queues, okp_b = route_insert(queues, chan, jnp.asarray(False),
+                                     jnp.asarray(True), sub, row, col, clk,
+                                     want_p, chan_base)
+        okp = okp_b.astype(jnp.int32)
 
     if cfg.stream:
         if cfg.pattern == "trace" and replay is None:
             raise ValueError('pattern="trace" needs a ReplayStream '
                              "(Simulator(..., replay=...))")
-        paced_by_arrive = (cfg.pattern == "trace"
-                           and replay.arrive is not None)
         accum = jnp.minimum(accum + jnp.int32(256),
                             jnp.int32(cfg.max_backlog_fp))
         want = accum >= fp.interval_fp
@@ -324,19 +359,50 @@ def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
             rng = _lcg(rng)
             is_write = ((rng >> jnp.uint32(9)).astype(jnp.int32) % 256
                         ) >= fp.read_ratio_fp
-        queues, ok = route_insert(queues, chan, is_write, jnp.asarray(False),
-                                  sub, row, col, clk, want)
-        if not paced_by_arrive:
-            accum = jnp.where(ok, accum - fp.interval_fp, accum)
-        seq = seq + ok.astype(jnp.int32)
-        sent = sent + ok.astype(jnp.int32)
-        dropped = dropped + (want & ~ok).astype(jnp.int32)
+        queues, ok_b = route_insert(queues, chan, is_write,
+                                    jnp.asarray(False), sub, row, col, clk,
+                                    want, chan_base)
+        ok = ok_b.astype(jnp.int32)
 
-    return queues, FrontState(accum_fp=accum, rng=rng, seq=seq,
-                              probe_busy=probe_busy,
-                              probe_next=fs.probe_next, sent=sent,
-                              dropped_backpressure=dropped,
-                              served=fs.served)
+    return queues, FrontDraft(rng=rng, accum=accum, want=want, okp=okp,
+                              ok=ok)
+
+
+def frontend_commit(cfg: FrontendConfig, fp: FrontParams, fs: FrontState,
+                    draft: FrontDraft, okp_total, ok_total,
+                    paced: bool = False) -> FrontState:
+    """Fold GLOBAL accept counts (int32, ``psum`` of the shards' draft
+    counts — or the draft's own on the unsharded path) into the
+    replicated :class:`FrontState`.  ``paced`` is
+    :func:`paced_by_arrive`'s static verdict."""
+    probe_busy = fs.probe_busy
+    if cfg.probes:
+        probe_busy = probe_busy | (okp_total > 0)
+    accum = draft.accum
+    seq, sent = fs.seq, fs.sent
+    dropped = fs.dropped_backpressure
+    if cfg.stream:
+        okb = ok_total > 0
+        if not paced:
+            accum = jnp.where(okb, accum - fp.interval_fp, accum)
+        seq = seq + okb.astype(jnp.int32)
+        sent = sent + okb.astype(jnp.int32)
+        dropped = dropped + (draft.want & ~okb).astype(jnp.int32)
+    return FrontState(accum_fp=accum, rng=draft.rng, seq=seq,
+                      probe_busy=probe_busy, probe_next=fs.probe_next,
+                      sent=sent, dropped_backpressure=dropped,
+                      served=fs.served)
+
+
+def frontend_step(cspec: CompiledSpec, cfg: FrontendConfig, fp: FrontParams,
+                  fs: FrontState, queues: C.Queue, clk, layout=None,
+                  replay=None):
+    """Single-device composition of :func:`frontend_insert` +
+    :func:`frontend_commit` (local accepts ARE the global accepts)."""
+    queues, draft = frontend_insert(cspec, cfg, fp, fs, queues, clk,
+                                    layout, replay)
+    return queues, frontend_commit(cfg, fp, fs, draft, draft.okp, draft.ok,
+                                   paced_by_arrive(cfg, replay))
 
 
 # --------------------------------------------------------------------------
@@ -388,63 +454,72 @@ def _rand_addr_system(msys, sublayouts, rng):
 
 
 def _system_route(msys, queues: tuple, chan, is_write, is_probe, per_group,
-                  clk, want):
+                  clk, want, bases=None):
     """Insert one request into the owning group's owning channel.
 
     ``queues`` is the per-group tuple of channel-stacked queues; ``chan``
     is the system channel id.  Exactly one (group, local channel) can
-    accept; a full target queue refuses (per-channel backpressure)."""
+    accept; a full target queue refuses (per-channel backpressure).
+    ``bases`` (channel-sharded path) gives the system channel id of each
+    group's queue row 0 — each shard holds a contiguous slice of every
+    group's channels, so its queue tuples are narrower than the groups
+    and sit at shard-dependent offsets; default is the unsharded
+    cumulative group layout."""
     new_q, oks = [], []
-    base = 0
-    for grp, q_g, (sub, row, col) in zip(msys.groups, queues, per_group):
-        in_g = (chan >= jnp.int32(base)) \
-            & (chan < jnp.int32(base + grp.channels))
-        local = jnp.clip(chan - jnp.int32(base), 0, grp.channels - 1)
+    base_full = 0
+    for g, (grp, q_g, (sub, row, col)) in enumerate(
+            zip(msys.groups, queues, per_group)):
+        local_n = q_g.valid.shape[0]
+        base = jnp.int32(base_full) if bases is None else bases[g]
+        in_g = (chan >= base) & (chan < base + jnp.int32(local_n))
+        local = jnp.clip(chan - base, 0, local_n - 1)
         q_g, ok = route_insert(q_g, local, is_write, is_probe, sub, row,
                                col, clk, want & in_g)
         new_q.append(q_g)
         oks.append(ok)
-        base += grp.channels
+        base_full += grp.channels
     return tuple(new_q), jnp.any(jnp.stack(oks))
 
 
-def system_frontend_step(msys, cfg: FrontendConfig, fp: FrontParams,
-                         fs: FrontState, queues: tuple, clk, sys_layout,
-                         replay=None):
-    """Multi-group twin of :func:`frontend_step`.
+def system_frontend_insert(msys, cfg: FrontendConfig, fp: FrontParams,
+                           fs: FrontState, queues: tuple, clk, sys_layout,
+                           replay=None, bases=None):
+    """Multi-group twin of :func:`frontend_insert`.
 
     ``queues`` is a per-group tuple (each leaf channel-stacked ``(C_g,
     Q)``); ``sys_layout`` is :func:`repro.core.addrmap.make_system_layout`
-    output.  1-group systems delegate to :func:`frontend_step` verbatim,
-    so the homogeneous path's traced program is untouched.
+    output; ``bases`` gives each group's queue-row-0 system channel id on
+    the channel-sharded path (see :func:`_system_route`).  1-group
+    systems delegate to :func:`frontend_insert` verbatim, so the
+    homogeneous path's traced program is untouched.
     """
     if sys_layout[0] == "single":
-        q0, fs = frontend_step(msys.groups[0].cspec, cfg, fp, fs,
-                               queues[0], clk, sys_layout[1], replay)
-        return (q0,), fs
+        q0, draft = frontend_insert(
+            msys.groups[0].cspec, cfg, fp, fs, queues[0], clk,
+            sys_layout[1], replay,
+            chan_base=0 if bases is None else bases[0])
+        return (q0,), draft
     _, _n_channels, _bases, sublayouts = sys_layout
     rng = fs.rng
     accum = fs.accum_fp
-    sent = fs.sent
     seq = fs.seq
-    dropped = fs.dropped_backpressure
+    okp = jnp.int32(0)
+    ok = jnp.int32(0)
+    want = jnp.asarray(False)
 
     if cfg.probes:
         want_p = (~fs.probe_busy) & (clk >= fs.probe_next)
         chan, per_group, rng = _rand_addr_system(msys, sublayouts, rng)
-        queues, okp = _system_route(msys, queues, chan, jnp.asarray(False),
-                                    jnp.asarray(True), per_group, clk,
-                                    want_p)
-        probe_busy = fs.probe_busy | okp
-    else:
-        probe_busy = fs.probe_busy
+        queues, okp_b = _system_route(msys, queues, chan,
+                                      jnp.asarray(False),
+                                      jnp.asarray(True), per_group, clk,
+                                      want_p, bases)
+        okp = okp_b.astype(jnp.int32)
 
     if cfg.stream:
         if cfg.pattern == "trace" and replay is None:
             raise ValueError('pattern="trace" needs a ReplayStream '
                              "(Simulator(..., replay=...))")
-        paced_by_arrive = (cfg.pattern == "trace"
-                           and replay.arrive is not None)
         accum = jnp.minimum(accum + jnp.int32(256),
                             jnp.int32(cfg.max_backlog_fp))
         want = accum >= fp.interval_fp
@@ -469,19 +544,57 @@ def system_frontend_step(msys, cfg: FrontendConfig, fp: FrontParams,
             rng = _lcg(rng)
             is_write = ((rng >> jnp.uint32(9)).astype(jnp.int32) % 256
                         ) >= fp.read_ratio_fp
-        queues, ok = _system_route(msys, queues, chan, is_write,
-                                   jnp.asarray(False), per_group, clk, want)
-        if not paced_by_arrive:
-            accum = jnp.where(ok, accum - fp.interval_fp, accum)
-        seq = seq + ok.astype(jnp.int32)
-        sent = sent + ok.astype(jnp.int32)
-        dropped = dropped + (want & ~ok).astype(jnp.int32)
+        queues, ok_b = _system_route(msys, queues, chan, is_write,
+                                     jnp.asarray(False), per_group, clk,
+                                     want, bases)
+        ok = ok_b.astype(jnp.int32)
 
-    return queues, FrontState(accum_fp=accum, rng=rng, seq=seq,
-                              probe_busy=probe_busy,
-                              probe_next=fs.probe_next, sent=sent,
-                              dropped_backpressure=dropped,
-                              served=fs.served)
+    return queues, FrontDraft(rng=rng, accum=accum, want=want, okp=okp,
+                              ok=ok)
+
+
+def system_frontend_step(msys, cfg: FrontendConfig, fp: FrontParams,
+                         fs: FrontState, queues: tuple, clk, sys_layout,
+                         replay=None):
+    """Multi-group twin of :func:`frontend_step` (insert + commit with
+    local accepts standing in for the global ones)."""
+    queues, draft = system_frontend_insert(msys, cfg, fp, fs, queues, clk,
+                                           sys_layout, replay)
+    return queues, frontend_commit(cfg, fp, fs, draft, draft.okp, draft.ok,
+                                   paced_by_arrive(cfg, replay))
+
+
+def absorb_locals(events: C.StepEvents) -> jnp.ndarray:
+    """Reduce one group's completion events over its (local) channels to
+    the ``(3,) int32`` vector ``[probes_done, requests_served,
+    probe_completion]`` that :func:`frontend_finish` consumes.
+
+    ``probe_completion`` is summed rather than maxed: the controller
+    zeroes it on channels that did not serve a probe, and at most one
+    probe is in flight system-wide, so at most one entry — across all
+    channels, groups, AND shards — is non-zero and the sum equals the
+    max.  Summing is what lets every cross-channel reduction of a cycle
+    ride a single fused ``psum`` on the sharded path."""
+    done = jnp.sum(events.served_probe.astype(jnp.int32))
+    served = (jnp.sum((events.served_read & ~events.served_probe)
+                      .astype(jnp.int32))
+              + jnp.sum(events.served_write.astype(jnp.int32)))
+    completion = jnp.sum(events.probe_completion)
+    return jnp.stack([done, served, completion])
+
+
+def frontend_finish(fs: FrontState, fp: FrontParams, done_total,
+                    served_total, completion_total) -> FrontState:
+    """Fold the GLOBAL absorb vector (summed over groups — and shards,
+    on the sharded path) into the replicated :class:`FrontState`: closes
+    the probe loop and advances the served-request counter the replay
+    dependency hold reads."""
+    done = done_total > 0
+    return fs._replace(
+        probe_busy=jnp.where(done, False, fs.probe_busy),
+        probe_next=jnp.where(done, completion_total + fp.probe_gap,
+                             fs.probe_next),
+        served=fs.served + served_total)
 
 
 def frontend_absorb(fs: FrontState, fp: FrontParams,
@@ -491,13 +604,5 @@ def frontend_absorb(fs: FrontState, fp: FrontParams,
     both single-channel (scalar) and channel-stacked ``(C,)`` events: at
     most one channel can complete the single in-flight probe.  For a
     multi-group system the engine folds this once per spec group."""
-    done = jnp.any(events.served_probe)
-    completion = jnp.max(events.probe_completion)
-    served = (jnp.sum((events.served_read & ~events.served_probe)
-                      .astype(jnp.int32))
-              + jnp.sum(events.served_write.astype(jnp.int32)))
-    return fs._replace(
-        probe_busy=jnp.where(done, False, fs.probe_busy),
-        probe_next=jnp.where(done, completion + fp.probe_gap,
-                             fs.probe_next),
-        served=fs.served + served)
+    v = absorb_locals(events)
+    return frontend_finish(fs, fp, v[0], v[1], v[2])

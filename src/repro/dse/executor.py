@@ -1,4 +1,5 @@
-"""Batched sweep executor: group -> compile(cached) -> vmap -> stats.
+"""Batched sweep executor: group -> compile(cached) -> vmap -> stats,
+with streamed cross-group collection.
 
 The executor turns an expanded `SweepSpec` into as few compiled programs
 as possible:
@@ -10,10 +11,25 @@ as possible:
      group is one program;
   2. fetch the jitted batched run callable from the engine's process-wide
      `RUN_CACHE` — identical specs across sweeps (or repeated `execute`
-     calls) re-trace exactly zero times;
+     calls) re-trace exactly zero times.  The program's `FrontParams`
+     argument is DONATED (`donate_argnums`): the executor rebuilds the
+     stacked load points per group, so the device reuses their buffers
+     for the scan carry instead of holding both live;
   3. vmap over the group's load points, sharding the batch across devices
-     when more than one is available;
-  4. hand the stacked Stats to `repro.dse.results` for curve extraction.
+     when more than one is available (padding by repeating the last point
+     when the batch does not divide — padded entries are dropped from the
+     results and accounted in ``meta["padded_points"]``);
+  4. STREAM the groups: each group's program call is dispatched
+     asynchronously (jax dispatch returns before the device finishes) and
+     its results are harvested — synchronized, unpadded, folded into the
+     `SweepResult` columns — only once `max_in_flight` later dispatches
+     are in the pipeline or the sweep ends.  Host-side harvesting of one
+     group overlaps device execution of the next, and at most
+     `max_in_flight` groups' device buffers are ever live, so
+     thousands-of-point sweeps never materialize all outputs at once.
+     A `repro.telemetry.Profiler` attributes the wall clock to
+     ``dispatch`` (compile + async call) vs ``collect`` (device sync +
+     host fold) spans, reported in ``meta["profile"]``.
 
 With `SweepSpec(capture_traces=...)` each group runs its *trace-emitting*
 program instead — still exactly one compiled program per group (the trace
@@ -30,6 +46,7 @@ from __future__ import annotations
 
 import os
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -86,12 +103,15 @@ def _shard_batch(fp: F.FrontParams, devices):
     """Shard the batch axis across `devices`; pad by repeating the last
     point so the batch divides evenly.  Returns (fp, n_padding)."""
     ndev = len(devices)
+    if ndev == 0:
+        raise ValueError(
+            "devices=[] — no devices to place the sweep batch on; pass "
+            "devices=None to use jax.devices(), or a non-empty device "
+            "list")
     n = fp.interval_fp.shape[0]
     if ndev == 1:
         # still honor an explicit single-device pin (e.g. devices=[gpu1])
         return jax.tree.map(lambda a: jax.device_put(a, devices[0]), fp), 0
-    if ndev == 0:
-        return fp, 0
     pad = (-n) % ndev
     if pad:
         fp = jax.tree.map(
@@ -103,15 +123,26 @@ def _shard_batch(fp: F.FrontParams, devices):
 
 
 def execute(spec: SweepSpec, cache: E.RunCache | None = None,
-            devices=None) -> R.SweepResult:
-    """Run every point of `spec`, one compiled program per compile group.
+            devices=None, max_in_flight: int = 2,
+            profiler=None) -> R.SweepResult:
+    """Run every point of `spec`, one compiled program per compile group,
+    dispatching groups asynchronously and harvesting results as they
+    complete (see the module docstring for the streaming pipeline).
 
-    `cache` defaults to the engine's process-wide `RUN_CACHE`; pass a fresh
-    `RunCache()` to isolate compilations (tests do).  `devices` defaults to
-    `jax.devices()`.
+    `cache` defaults to the engine's process-wide `RUN_CACHE`; pass a
+    fresh `RunCache()` to isolate compilations (tests do).  `devices`
+    defaults to `jax.devices()`.  `max_in_flight` bounds how many groups'
+    device buffers may be live at once (>= 1); `profiler` is an optional
+    `repro.telemetry.Profiler` to fold the dispatch/collect spans into
+    (one is created per call otherwise, reported in ``meta["profile"]``).
     """
+    from repro import telemetry as T    # lazy: keeps import order flexible
     cache = E.RUN_CACHE if cache is None else cache
     devices = jax.devices() if devices is None else devices
+    if len(devices) == 0:
+        raise ValueError("devices=[] — pass devices=None for jax.devices()"
+                         " or a non-empty device list")
+    prof = profiler if profiler is not None else T.Profiler(cache)
     points = spec.expand()
     groups = group_points(points)
 
@@ -137,20 +168,17 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
     t0 = time.perf_counter()
     misses0, hits0, trace0 = cache.misses, cache.hits, E.TRACE_COUNT
     group_meta = []
-    for key, members in groups.items():
-        idx = [i for i, _ in members]
-        pts = [pt for _, pt in members]
-        sy, ccfg, fcfg = pts[0].system, pts[0].controller, pts[0].frontend
-        cspec = _compile_point_system(pts[0])
-        msys = as_system(cspec)
-        dp = tuple(D.dyn_params(g.cspec) for g in msys.groups)
-        fp = _front_params(pts, fcfg)
-        fp, pad = _shard_batch(fp, devices)
-        fn = cache.get(cspec, ccfg, fcfg, pts[0].n_cycles,
-                       trace=bool(capture), batched=True,
-                       telemetry=spec.telemetry)
-        tg = time.perf_counter()
-        out = fn(dp, fp, jnp.uint32(spec.seed))
+    padded_total = 0
+    inflight: deque = deque()
+
+    def _harvest():
+        """Synchronize the OLDEST in-flight group and fold its results."""
+        g = inflight.popleft()
+        tc = time.perf_counter()
+        out = jax.block_until_ready(g["out"])
+        members, idx = g["members"], g["idx"]
+        msys, cspec = g["msys"], g["cspec"]
+        ccfg, fcfg, pad = g["ccfg"], g["fcfg"], g["pad"]
         snaps = None
         if spec.telemetry:
             *out, snaps = out
@@ -160,7 +188,6 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         if pad:
             stats = jax.tree.map(lambda a: a[:-pad], stats)
         if snaps is not None:
-            from repro import telemetry as T
             snaps = jax.tree.map(np.asarray, snaps)
             for j, (i, pt) in enumerate(members):
                 telemetry[i] = T.build(
@@ -184,11 +211,6 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
                 if trace_dir:
                     trace_paths[i] = save_trace(
                         tr, os.path.join(trace_dir, f"point_{i:04d}.npz"))
-        group_meta.append({"system": sy.label, "n_points": len(pts),
-                           "n_channels": pts[0].n_channels,
-                           "n_spec_groups": msys.n_groups,
-                           "mapper": fcfg.mapper,
-                           "wall_s": round(time.perf_counter() - tg, 3)})
 
         cols["throughput_gbps"][idx] = R.throughput_gbps_array(msys, stats)
         cols["latency_ns"][idx] = R.avg_probe_latency_ns_array(msys, stats)
@@ -198,6 +220,45 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         for j, i in enumerate(idx):
             cmd_counts[i] = np.asarray(stats.cmd_counts[j])
             cmd_names[i] = list(msys.cmd_names)
+        dt = time.perf_counter() - tc
+        prof.add("collect", dt)
+        g["meta"]["collect_s"] = round(dt, 3)
+        g["meta"]["wall_s"] = round(g["meta"]["dispatch_s"] + dt, 3)
+
+    for key, members in groups.items():
+        td = time.perf_counter()
+        idx = [i for i, _ in members]
+        pts = [pt for _, pt in members]
+        sy, ccfg, fcfg = pts[0].system, pts[0].controller, pts[0].frontend
+        cspec = _compile_point_system(pts[0])
+        msys = as_system(cspec)
+        dp = tuple(D.dyn_params(g.cspec) for g in msys.groups)
+        fp = _front_params(pts, fcfg)
+        fp, pad = _shard_batch(fp, devices)
+        padded_total += pad
+        fn = cache.get(cspec, ccfg, fcfg, pts[0].n_cycles,
+                       trace=bool(capture), batched=True,
+                       telemetry=spec.telemetry, donate=True)
+        # async dispatch: jax returns un-synchronized arrays; the device
+        # churns through this group while the host dispatches the next
+        # (and harvests the oldest).  A program's FIRST call still blocks
+        # inside the cache's compile timer.
+        out = fn(dp, fp, jnp.uint32(spec.seed))
+        dt = time.perf_counter() - td
+        prof.add("dispatch", dt)
+        gm = {"system": sy.label, "n_points": len(pts),
+              "n_channels": pts[0].n_channels,
+              "n_spec_groups": msys.n_groups,
+              "mapper": fcfg.mapper, "padded": pad,
+              "dispatch_s": round(dt, 3)}
+        group_meta.append(gm)
+        inflight.append({"out": out, "members": members, "idx": idx,
+                         "msys": msys, "cspec": cspec, "ccfg": ccfg,
+                         "fcfg": fcfg, "pad": pad, "meta": gm})
+        while len(inflight) > max(1, int(max_in_flight)):
+            _harvest()
+    while inflight:
+        _harvest()
 
     meta = {
         "n_points": n,
@@ -209,6 +270,12 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         "wall_s": round(time.perf_counter() - t0, 3),
         "groups": group_meta,
         "seed": spec.seed,
+        # batch-padding audit: device-count-aligned repeats of each
+        # group's last point (simulated, then dropped from the results)
+        "padded_points": padded_total,
+        "max_in_flight": max(1, int(max_in_flight)),
+        # dispatch vs collect wall attribution for the streamed pipeline
+        "profile": prof.report(),
         # public RunCache accounting (RunCache.stats()) — cumulative over
         # the cache's lifetime, alongside the per-sweep deltas above
         "cache": cache.stats(),

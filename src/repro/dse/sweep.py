@@ -79,7 +79,18 @@ def main(argv=None) -> SweepResult:
           f"in {m['wall_s']}s on {m['n_devices']} device(s)")
     print(f"run cache: {c['entries']} live programs, {c['hits']} hits / "
           f"{c['misses']} misses, first-call (trace+compile+run) "
-          f"{c['first_call_s']}s")
+          f"{c['first_call_s']}s; topologies: "
+          f"{', '.join(c.get('shard_topologies', ())) or 'none'}")
+    spans = m.get("profile", {}).get("spans", {})
+    if spans:
+        attribution = ", ".join(
+            f"{name} {s['s']}s x{s['calls']}"
+            for name, s in sorted(spans.items(), key=lambda kv: -kv[1]["s"]))
+        print(f"streamed pipeline (max {m['max_in_flight']} in flight): "
+              f"{attribution}")
+    if m.get("padded_points"):
+        print(f"batch padding: {m['padded_points']} repeated point(s) "
+              f"simulated for device alignment and dropped")
     if result.telemetry:
         n_art = len(m.get("telemetry_artifacts", []))
         print(f"telemetry: {len(result.telemetry)} per-point series "

@@ -52,12 +52,32 @@ class Profiler:
             s["s"] += dt
             s["calls"] += 1
 
+    def add(self, name: str, seconds: float) -> None:
+        """Fold an externally-timed interval into span ``name`` — for
+        callers that interleave many short phases (the streaming sweep
+        executor's per-group dispatch/collect attribution) where a
+        context manager per slice would obscure the control flow."""
+        s = self._spans.setdefault(name, {"s": 0.0, "calls": 0})
+        s["s"] += float(seconds)
+        s["calls"] += 1
+
     def cache_stats(self) -> dict:
-        """RunCache accounting since this profiler was constructed."""
+        """RunCache accounting since this profiler was constructed.
+        Numeric fields are deltas against the construction instant;
+        non-numeric fields (device/topology views) pass through as-is."""
+        delta_keys = {"entries", "hits", "misses", "first_call_s"}
         now = self.cache.stats()
-        return {k: (round(now[k] - self._base[k], 3)
-                    if isinstance(now[k], float)
-                    else now[k] - self._base[k]) for k in now}
+        out = {}
+        for k, v in now.items():
+            if k in delta_keys and isinstance(v, (int, float)):
+                base = self._base.get(k, 0)
+                out[k] = round(v - base, 3) if isinstance(v, float) \
+                    else v - base
+            else:
+                # topology views ("devices", "shard_topologies", future
+                # additions) are states, not counters — pass through
+                out[k] = v
+        return out
 
     def report(self) -> dict:
         return {"wall_s": round(time.perf_counter() - self._t0, 3),

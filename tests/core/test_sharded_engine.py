@@ -1,0 +1,179 @@
+"""Sharded channel axis: the shard_map path must be a pure placement
+refactor.  Under ``--xla_force_host_platform_device_count=4`` the
+channel-sharded scan has to reproduce the golden command-stream hashes
+and match the vmap path bit for bit — stats, dense trace, and windowed
+telemetry included.
+
+XLA device-count forcing only takes effect before the backend
+initializes, so every multi-device check runs in a subprocess that sets
+``XLA_FLAGS`` before importing jax (same idiom as
+``tests/launch/test_dryrun_small.py``)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def _run(code: str, timeout: int = 900) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)  # the snippet pins its own device count
+    r = subprocess.run([sys.executable, "-c", code], env=env, cwd=REPO,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    return r.stdout
+
+
+PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import hashlib
+import json
+import numpy as np
+import jax
+from repro.core import ControllerConfig, Simulator, compile_system
+from repro.core import engine as E
+from repro.trace import capture
+from repro.trace.capture import FIELDS
+
+assert jax.device_count() == 4, jax.device_count()
+GOLDEN = json.load(open("tests/trace/golden_hashes.json"))
+
+def sha(tr, extra=()):
+    h = hashlib.sha256()
+    for f in FIELDS + tuple(extra):
+        h.update(np.ascontiguousarray(getattr(tr, f), np.int32).tobytes())
+    return h.hexdigest()
+"""
+
+
+def test_sharded_channels_bit_exact_four_devices():
+    """DDR4@2ch golden hash on the sharded path, DDR4@4ch sharded==vmap
+    (stats + trace + telemetry), hetero DDR5+CXL-DDR4 golden hash, and
+    RunCache key/topology accounting — all under 4 forced host devices."""
+    out = _run(PRELUDE + r"""
+# ---- 2-channel DDR4: auto shard d=2 must reproduce the golden hash
+sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=2,
+                mapper="RoBaRaCoCh",
+                controller=ControllerConfig(refresh_stagger=False))
+assert sim._resolved_shard() == 2, sim._resolved_shard()
+_, dense = sim.run(3000, interval=2.0, read_ratio=0.7, trace=True)
+tr = capture(sim.cspec, dense)
+want = GOLDEN["DDR4@2ch"]
+assert len(tr) == want["n"], (len(tr), want["n"])
+assert sha(tr) == want["sha256"], "DDR4@2ch sharded hash mismatch"
+
+# ---- 4-channel: sharded vs vmap bit-exact incl. refresh stagger and
+# windowed telemetry (the conservation checker must still balance)
+sim4s = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4)
+sim4v = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4,
+                  channel_shard=False)
+assert sim4s._resolved_shard() == 4
+ss, ys_s, tel_s = sim4s.run(3000, interval=1.0, read_ratio=0.7, trace=True,
+                            telemetry=256)
+sv, ys_v, tel_v = sim4v.run(3000, interval=1.0, read_ratio=0.7, trace=True,
+                            telemetry=256)
+for f in ("cmd", "bank", "row", "arrive", "hit_ready"):
+    assert np.array_equal(getattr(ys_s, f), getattr(ys_v, f)), f
+for k in ("reads_done", "writes_done", "probe_lat_sum", "probe_cnt",
+          "data_bus_busy", "deferred"):
+    assert np.array_equal(getattr(ss.per_channel, k),
+                          getattr(sv.per_channel, k)), k
+assert np.array_equal(ss.cmd_counts, sv.cmd_counts)
+assert int(ss.cycles) == int(sv.cycles)
+tel_s.check(ss)
+
+# ---- heterogeneous DDR5x2 + CXL-DDR4x2@80: groups shard in lockstep
+msys = compile_system([
+    dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+         timing_preset="DDR5_4800B", channels=2),
+    dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+         timing_preset="DDR4_2400R", channels=2, link_latency=80),
+])
+simh = Simulator(system=msys, controller=ControllerConfig(scheduler="FRFCFS"))
+assert simh._resolved_shard() == 2, simh._resolved_shard()
+_, dense = simh.run(3000, interval=2.0, read_ratio=0.7, trace=True)
+tr = capture(msys, dense)
+want = GOLDEN["DDR5x2+DDR4x2@80"]
+assert len(tr) == want["n"], (len(tr), want["n"])
+assert sha(tr, ("group",)) == want["sha256"], "hetero sharded hash mismatch"
+
+# ---- RunCache: sharded and vmapped programs must not alias, and the
+# stats view must report the mesh topology
+k_v = E.run_key(sim4v.cspec, sim4v.controller, sim4v.frontend, 3000, True,
+                False)
+k_s = E.run_key(sim4s.cspec, sim4s.controller, sim4s.frontend, 3000, True,
+                False, shard=4)
+assert k_v != k_s
+st = E.RUN_CACHE.stats()
+assert st["devices"] == 4
+assert any(t.startswith("channels:") for t in st["shard_topologies"])
+assert "vmap" in st["shard_topologies"]
+print("SHARDED-OK")
+""")
+    assert "SHARDED-OK" in out
+
+
+def test_single_device_auto_is_vmap_and_explicit_shard_raises():
+    """On the default single-device backend auto-sharding stays on the
+    vmap path, an explicit channel_shard=True raises a clear error, and
+    batched runs refuse to compose with channel sharding."""
+    from repro.core import ControllerConfig, Simulator
+    from repro.core import engine as E
+    import jax
+
+    sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4)
+    if jax.device_count() == 1:
+        assert sim._resolved_shard() is None
+        simr = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", channels=4,
+                         channel_shard=True)
+        with pytest.raises(ValueError, match="device"):
+            simr.run(200)
+    # single-channel systems can never channel-shard, whatever the mesh
+    sim1 = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    assert E.auto_channel_shard(sim1.cspec, n_devices=4) is None
+    # shard= composes with scalar runs only
+    with pytest.raises(ValueError, match="scalar"):
+        E.RUN_CACHE.get(sim.cspec, sim.controller, sim.frontend, 200,
+                        trace=False, batched=True, shard=2)
+
+
+@pytest.mark.slow
+def test_all_standards_sharded_vs_vmap_four_devices():
+    """All registered standards: (a) the 1-channel golden hashes are
+    untouched by multi-device visibility (auto shard stays on vmap),
+    (b) at channels=4 the sharded and vmap paths agree bit for bit."""
+    out = _run(PRELUDE + r"""
+from repro.dse.spec import DEFAULT_SYSTEMS
+
+for standard in sorted(DEFAULT_SYSTEMS):
+    org, tim = DEFAULT_SYSTEMS[standard]
+    # 1ch: auto-shard resolves to None; golden hash must be unchanged
+    sim = Simulator(standard, org, tim,
+                    controller=ControllerConfig(scheduler="FRFCFS"))
+    assert sim._resolved_shard() is None
+    _, dense = sim.run(3000, interval=2.0, read_ratio=0.7, trace=True)
+    tr = capture(sim.cspec, dense)
+    want = GOLDEN[standard]
+    assert len(tr) == want["n"], (standard, len(tr), want["n"])
+    assert sha(tr) == want["sha256"], standard
+
+    # 4ch: sharded (d=4) vs vmap pairwise bit-exactness
+    s4s = Simulator(standard, org, tim, channels=4)
+    s4v = Simulator(standard, org, tim, channels=4, channel_shard=False)
+    assert s4s._resolved_shard() == 4
+    ss, ys_s = s4s.run(1500, interval=2.0, read_ratio=0.7, trace=True)
+    sv, ys_v = s4v.run(1500, interval=2.0, read_ratio=0.7, trace=True)
+    for f in ("cmd", "bank", "row", "arrive", "hit_ready"):
+        assert np.array_equal(getattr(ys_s, f), getattr(ys_v, f)), \
+            (standard, f)
+    for k in ("reads_done", "writes_done", "data_bus_busy", "deferred"):
+        assert np.array_equal(getattr(ss.per_channel, k),
+                              getattr(sv.per_channel, k)), (standard, k)
+    assert np.array_equal(ss.cmd_counts, sv.cmd_counts), standard
+    print(standard, "ok", flush=True)
+print("ALL-STANDARDS-OK")
+""", timeout=3600)
+    assert "ALL-STANDARDS-OK" in out

@@ -9,8 +9,12 @@ from repro.core import engine as E
 
 def test_runcache_stats_public_api():
     s = E.RUN_CACHE.stats()
-    assert set(s) == {"entries", "hits", "misses", "first_call_s"}
+    assert set(s) == {"entries", "hits", "misses", "first_call_s",
+                      "devices", "shard_topologies"}
     assert s["entries"] >= 0 and s["first_call_s"] >= 0.0
+    assert s["devices"] >= 1
+    assert all(t == "vmap" or t.startswith("channels:")
+               for t in s["shard_topologies"])
     sim = Simulator("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
     sim.run(500)
     s2 = E.RUN_CACHE.stats()

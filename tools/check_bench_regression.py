@@ -14,7 +14,12 @@ baseline:
     below the floor recorded at merge time (``hetero_floor_vs_4ch``);
   * windowed-telemetry capture (4-channel engine, window=256) must cost
     at most the committed ceiling (``telemetry_overhead_ceiling``, 5% at
-    merge time) over the telemetry-off run of the same box.
+    merge time) over the telemetry-off run of the same box;
+  * the scale-out ratios — the channel-sharded (shard_map) 4-channel
+    engine and the 64-point device-sharded sweep, each measured at forced
+    host device counts 1 vs 4 in subprocesses — must not drop below the
+    merge-time floors (``sharded_speedup_floor_1_to_4``,
+    ``sweep_speedup_floor_1_to_4``).
 
 Usage: python tools/check_bench_regression.py --baseline BENCH_engine.json \
            --fresh results/bench_fresh.json
@@ -84,6 +89,29 @@ def check(baseline: dict, fresh: dict) -> list:
             f" slowdown at window={tel.get('window')} > ceiling "
             f"{100 * ceiling:.0f}% (baseline measured "
             f"{100 * baseline.get('telemetry', {}).get('overhead', 0):.1f}%)")
+
+    # scale-out: the sharded-channel and sharded-sweep 1->4 device
+    # speedups — both ratios measure the same workload back to back at
+    # forced device counts on one box, so they are stable where raw
+    # rates are not
+    for key, floor_key, label in (
+            ("channel_scaling_sharded", "sharded_speedup_floor_1_to_4",
+             "sharded 1->4 channel aggregate speedup"),
+            ("sweep_scaling", "sweep_speedup_floor_1_to_4",
+             "1->4 device sweep wall-clock speedup")):
+        fresh_e = fresh.get(key)
+        floor = baseline.get(floor_key)
+        if fresh_e is None:
+            errors.append(f"fresh results carry no {key} measurement — "
+                          "re-run benchmarks/run.py --only engine")
+        elif floor is None:
+            errors.append(f"baseline has no {floor_key} "
+                          "(re-run benchmarks/run.py --only engine)")
+        elif fresh_e.get("speedup_1_to_4", 0.0) < floor:
+            errors.append(
+                f"{label} regressed: {fresh_e.get('speedup_1_to_4')} < "
+                f"merge-time floor {floor} (baseline measured "
+                f"{baseline.get(key, {}).get('speedup_1_to_4')})")
     return errors
 
 
@@ -109,7 +137,13 @@ def main() -> int:
           + f";  hetero vs 4ch: {het.get('vs_4ch_homogeneous')} "
           f"(floor {baseline.get('hetero_floor_vs_4ch')});  telemetry "
           f"overhead: {fresh.get('telemetry', {}).get('overhead')} "
-          f"(ceiling {baseline.get('telemetry_overhead_ceiling')})")
+          f"(ceiling {baseline.get('telemetry_overhead_ceiling')});  "
+          f"sharded 1->4: "
+          f"{fresh.get('channel_scaling_sharded', {}).get('speedup_1_to_4')}"
+          f" (floor {baseline.get('sharded_speedup_floor_1_to_4')});  "
+          f"sweep 1->4: "
+          f"{fresh.get('sweep_scaling', {}).get('speedup_1_to_4')} "
+          f"(floor {baseline.get('sweep_speedup_floor_1_to_4')})")
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     return 1 if errors else 0
