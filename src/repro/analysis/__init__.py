@@ -1,0 +1,34 @@
+"""``repro.analysis`` — static analysis for specs and source.
+
+Two passes over two very different artifacts, one reporting currency:
+
+* **Spec lint** (:mod:`repro.analysis.speclint` /
+  :mod:`repro.analysis.rules`): semantic analysis of DRAM standards and
+  compiled constraint tables — derived-timing inequalities with their
+  JEDEC rationale, dominance/shadowing (dead rows), coverage holes
+  (zero-latency issue hazards), refresh schedulability, windowed-ring
+  validation, unknown/unused timing tokens.
+* **Trace-safety lint** (:mod:`repro.analysis.tracecheck`): an AST pass
+  over ``src/repro`` that flags JAX anti-patterns before they reach the
+  jitted hot paths — Python control flow on traced values in scan
+  bodies, host coercions under jit, ``np.*`` on traced arrays,
+  non-hashable closure captures in cache-keyed callables, ``jnp`` use
+  outside the allowlisted hot-path modules.
+
+Both emit :class:`~repro.analysis.report.LintReport` artifacts
+(JSON/npz) and share the CLI: ``python -m repro.analysis``.
+"""
+from repro.analysis.report import (ERROR, INFO, WARN, Finding, LintReport,
+                                   diff, merge, render_diff)
+from repro.analysis.rules import RULES, Rule, RuleCtx, rule
+from repro.analysis.speclint import (SpecLintError, default_presets,
+                                     lint_all, lint_compiled, lint_spec,
+                                     lint_system)
+from repro.analysis.tracecheck import JNP_ALLOWLIST, lint_paths
+
+__all__ = [
+    "ERROR", "WARN", "INFO", "Finding", "LintReport", "diff", "merge",
+    "render_diff", "RULES", "Rule", "RuleCtx", "rule", "default_presets",
+    "SpecLintError", "lint_all", "lint_compiled", "lint_spec",
+    "lint_system", "JNP_ALLOWLIST", "lint_paths",
+]

@@ -14,6 +14,7 @@ Everything here is plain numpy; the engine wraps these in jnp arrays.
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 
 import numpy as np
@@ -23,17 +24,28 @@ from repro.core import spec as S
 _TOKEN = re.compile(r"([+-]?)\s*([A-Za-z_][A-Za-z_0-9]*|\d+)")
 
 
-def resolve_latency(expr, timings: dict) -> int:
-    """Resolve a latency expression ("nCWL+nBL+nWR", "nBL+2", 7) to cycles."""
+def resolve_latency(expr, timings: dict, context: str = "") -> int:
+    """Resolve a latency expression ("nCWL+nBL+nWR", "nBL+2", 7) to cycles.
+
+    ``context`` (e.g. "DDR5 constraint ACT->RD@bank") is prepended to
+    error messages so DSL-authored specs fail legibly."""
     if isinstance(expr, int):
         return expr
+    where = f"{context}: " if context else ""
     total, matched = 0, 0
     for sign, tok in _TOKEN.findall(expr):
         matched += 1
-        val = int(tok) if tok.isdigit() else timings[tok]
+        if tok.isdigit():
+            val = int(tok)
+        elif tok in timings:
+            val = timings[tok]
+        else:
+            raise ValueError(
+                f"{where}latency expression {expr!r} references unknown "
+                f"timing parameter {tok!r} (known: {sorted(timings)})")
         total += -val if sign == "-" else val
     if matched == 0:
-        raise ValueError(f"bad latency expression {expr!r}")
+        raise ValueError(f"{where}bad latency expression {expr!r}")
     return total
 
 
@@ -376,7 +388,15 @@ def as_system(spec) -> MemorySystemSpec:
 
 def compile_spec(standard, org_preset: str, timing_preset: str,
                  timing_overrides: dict | None = None,
-                 channels: int = 1) -> CompiledSpec:
+                 channels: int = 1, lint: str | None = None) -> CompiledSpec:
+    """Lower a standard to its dense-table form.
+
+    ``lint`` gates a compile-time run of the spec linter
+    (``repro.analysis``) over the result: ``"error"`` raises on any
+    error-severity finding, ``"warn"`` prints them, ``"off"`` (the
+    default) skips the pass.  ``None`` reads the ``REPRO_SPEC_LINT``
+    environment variable so CI can arm the gate globally.
+    """
     if isinstance(standard, str):
         standard = S.get_standard(standard)
     if channels < 1:
@@ -384,6 +404,15 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
     org: S.Organization = standard.org_presets[org_preset]
     timings = dict(standard.timing_presets[timing_preset])
     if timing_overrides:
+        unknown = (set(timing_overrides) - set(timings)
+                   - set(standard.timing_params) - {"tCK_ps"})
+        if unknown:
+            valid = sorted(set(timings) | set(standard.timing_params)
+                           | {"tCK_ps"})
+            raise ValueError(
+                f"{standard.name}: unknown timing_overrides key(s) "
+                f"{sorted(unknown)} — overrides must name an existing "
+                f"timing parameter (valid: {valid})")
         timings.update(timing_overrides)
 
     levels = list(standard.levels)
@@ -407,7 +436,11 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
 
     prev, nxt, lvl, lat, win = [], [], [], [], []
     for tc in standard.timing_constraints:
-        latency = resolve_latency(tc.latency, timings)
+        latency = resolve_latency(
+            tc.latency, timings,
+            context=f"{standard.name} constraint "
+                    f"{','.join(tc.preceding)}->{','.join(tc.following)}"
+                    f"@{tc.level}")
         for p in tc.preceding:
             for f in tc.following:
                 prev.append(cmd_names.index(p))
@@ -431,7 +464,7 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
     nBL = timings["nBL"]
     read_latency = timings["nCL"] + nBL
 
-    return CompiledSpec(
+    cspec = CompiledSpec(
         name=standard.name, levels=levels,
         level_counts=np.array(counts, dtype=np.int64),
         level_offsets=offsets, num_nodes=num_nodes, n_banks=n_banks,
@@ -455,3 +488,24 @@ def compile_spec(standard, org_preset: str, timing_preset: str,
         timing_preset=timing_preset, n_channels=int(channels),
         lat_bucket_edges=plan_latency_buckets(read_latency),
     )
+    _lint_compiled(cspec, channels, lint)
+    return cspec
+
+
+def _lint_compiled(cspec: CompiledSpec, channels: int, lint: str | None):
+    """Compile-time spec-lint gate (lazy import: compile must not pay
+    for the analysis subsystem unless the gate is armed)."""
+    mode = lint if lint is not None else os.environ.get(
+        "REPRO_SPEC_LINT", "off")
+    if mode in ("off", "", None):
+        return
+    if mode not in ("warn", "error"):
+        raise ValueError(f"lint mode must be off|warn|error, got {mode!r}")
+    from repro.analysis.speclint import lint_compiled
+    report = lint_compiled(cspec, channels=max(1, channels))
+    if report.ok() and not report.warnings:
+        return
+    if mode == "error" and not report.ok():
+        raise ValueError("spec lint failed at compile time:\n"
+                         + report.summary())
+    print(report.summary())

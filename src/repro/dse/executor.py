@@ -60,6 +60,34 @@ from repro.dse import results as R
 from repro.dse.spec import Composition, SweepSpec
 
 
+def lint_sweep_systems(points) -> None:
+    """Pre-compile spec-lint gate for a sweep: run the spec linter over
+    every distinct override-carrying system (plain or inside a
+    composition) and raise :class:`repro.analysis.SpecLintError` with the
+    merged report if any has error-severity findings.  Systems without
+    overrides are skipped — the registered standards are lint-clean by
+    construction (CI gates that separately)."""
+    from repro.analysis.report import merge
+    from repro.analysis.speclint import SpecLintError, lint_spec
+    seen: set = set()
+    bad = []
+    for pt in points:
+        if isinstance(pt.system, Composition):
+            members = [(g.system, g.channels) for g in pt.system.groups]
+        else:
+            members = [(pt.system, pt.n_channels)]
+        for sy, ch in members:
+            if not sy.timing_overrides or (sy, ch) in seen:
+                continue
+            seen.add((sy, ch))
+            rep = lint_spec(sy.standard, sy.org_preset, sy.timing_preset,
+                            sy.overrides_dict, channels=ch)
+            if not rep.ok():
+                bad.append(rep)
+    if bad:
+        raise SpecLintError(merge(bad, target="sweep-pre-lint"))
+
+
 def _compile_point_system(pt):
     """Compile a RunPoint's memory system: a plain `System` becomes the
     (1-group) CompiledSpec the historical cache key expects; a
@@ -144,6 +172,8 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
                          " or a non-empty device list")
     prof = profiler if profiler is not None else T.Profiler(cache)
     points = spec.expand()
+    if spec.lint_specs:
+        lint_sweep_systems(points)      # fail fast with a LintReport
     groups = group_points(points)
 
     n = len(points)

@@ -223,6 +223,14 @@ class SweepSpec:
     #: (paths land in ``meta["telemetry_artifacts"]``); needs
     #: ``telemetry > 0``.
     telemetry_dir: str | None = None
+    #: Run the spec linter (``repro.analysis``) over every distinct
+    #: override-carrying system before any compile group is built, so an
+    #: invalid design-space corner (``tRC < tRAS + tRP``, an unschedulable
+    #: refresh, a typo'd override key) fails fast with a structured
+    #: ``LintReport`` instead of producing a silently-wrong curve.  Set
+    #: False to opt out (e.g. when deliberately sweeping through
+    #: rule-violating corners to map the cliff).
+    lint_specs: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "systems",

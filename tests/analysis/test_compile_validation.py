@@ -1,0 +1,125 @@
+"""Compiler input validation + optional compile-time lint gate.
+
+Regression coverage for the hardened error paths: unknown
+``timing_overrides`` keys fail loudly at compile_spec, latency
+expressions with undeclared tokens name the standard/constraint they
+came from, and the ``lint=``/``REPRO_SPEC_LINT`` hook wires the spec
+linter into ``compile_spec`` itself."""
+import pytest
+
+import repro.core.standards  # noqa: F401  (register all standards)
+from repro.core import spec as S
+from repro.core.compile import compile_spec, resolve_latency
+
+
+def _timings(std="DDR4", preset="DDR4_2400R"):
+    return dict(S.get_standard(std).timing_presets[preset])
+
+
+# ---------------------------------------------------------------------------
+# satellite: unknown timing_overrides keys
+# ---------------------------------------------------------------------------
+
+def test_unknown_override_key_raises():
+    with pytest.raises(ValueError) as ei:
+        compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     timing_overrides={"tRRD": 4})
+    msg = str(ei.value)
+    assert "tRRD" in msg and "unknown" in msg
+    # the error teaches the valid namespace
+    assert "nRRD_S" in msg
+
+
+def test_multiple_unknown_override_keys_all_named():
+    with pytest.raises(ValueError) as ei:
+        compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     timing_overrides={"tRRD": 4, "nBOGUS": 1, "nCL": 20})
+    msg = str(ei.value)
+    assert "nBOGUS" in msg and "tRRD" in msg
+
+
+def test_valid_overrides_still_accepted():
+    cs = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      timing_overrides={"nCL": 20, "tCK_ps": 1000})
+    assert cs.timings["nCL"] == 20
+
+
+# ---------------------------------------------------------------------------
+# satellite: resolve_latency names its context
+# ---------------------------------------------------------------------------
+
+def test_resolve_latency_unknown_token_named():
+    t = _timings()
+    with pytest.raises(ValueError) as ei:
+        resolve_latency("nCL+nBOGUS", t)
+    msg = str(ei.value)
+    assert "nBOGUS" in msg and "'nCL+nBOGUS'" in msg
+    assert "unknown timing parameter" in msg
+
+
+def test_resolve_latency_error_carries_context():
+    with pytest.raises(ValueError) as ei:
+        resolve_latency("nMISSING", _timings(),
+                        context="DDR4 constraint PRE->ACT@bank")
+    assert str(ei.value).startswith("DDR4 constraint PRE->ACT@bank")
+
+
+def test_compile_error_names_standard_and_constraint():
+    std = S.get_standard("DDR4")
+    bogus = S.TimingConstraint(level="bank", preceding=["PRE"],
+                               following=["PRE"], latency="nBOGUS")
+    mut = type("DDR4_badtok", (std,), {
+        "timing_constraints": tuple(std.timing_constraints) + (bogus,)})
+    with pytest.raises(ValueError) as ei:
+        compile_spec(mut, "DDR4_8Gb_x8", "DDR4_2400R")
+    msg = str(ei.value)
+    assert "DDR4" in msg and "PRE->PRE@bank" in msg and "nBOGUS" in msg
+
+
+# ---------------------------------------------------------------------------
+# compile-time lint hook
+# ---------------------------------------------------------------------------
+
+BAD_TRC = {"nRC": 1}        # valid key, physically broken value
+
+
+def test_lint_off_by_default():
+    cs = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      timing_overrides=dict(BAD_TRC))
+    assert cs.timings["nRC"] == 1
+
+
+def test_lint_error_mode_raises():
+    with pytest.raises(ValueError, match="spec lint failed at compile"):
+        compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     timing_overrides=dict(BAD_TRC), lint="error")
+
+
+def test_lint_warn_mode_prints_and_compiles(capsys):
+    cs = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                      timing_overrides=dict(BAD_TRC), lint="warn")
+    assert cs.timings["nRC"] == 1
+    out = capsys.readouterr().out
+    assert "trc-decomposition" in out
+
+
+def test_lint_error_mode_clean_spec_passes():
+    cs = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", lint="error")
+    assert cs.timings["nRC"] > 1
+
+
+def test_lint_mode_from_environment(monkeypatch):
+    monkeypatch.setenv("REPRO_SPEC_LINT", "error")
+    with pytest.raises(ValueError, match="spec lint failed at compile"):
+        compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     timing_overrides=dict(BAD_TRC))
+    # an explicit argument beats the environment
+    monkeypatch.setenv("REPRO_SPEC_LINT", "off")
+    with pytest.raises(ValueError, match="spec lint failed at compile"):
+        compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R",
+                     timing_overrides=dict(BAD_TRC), lint="error")
+
+
+def test_lint_mode_validated():
+    with pytest.raises(ValueError, match="lint mode"):
+        compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", lint="loud")

@@ -1,0 +1,55 @@
+"""Sweep pre-lint gate: override-carrying design-space corners are spec-
+linted before any compile group is built (``SweepSpec.lint_specs``)."""
+import pytest
+
+from repro.analysis.speclint import SpecLintError
+from repro.core import engine as E
+from repro.dse import Composition, SweepSpec, execute
+from repro.dse.executor import lint_sweep_systems
+
+BAD_DDR4 = ("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", {"nRC": 1})
+OK_DDR4 = ("DDR4", "DDR4_8Gb_x8", "DDR4_2400R", {"nCL": 20})
+
+
+def test_bad_override_corner_fails_fast():
+    spec = SweepSpec(systems=("DDR5", BAD_DDR4), intervals=(8.0,),
+                     n_cycles=400)
+    with pytest.raises(SpecLintError) as ei:
+        lint_sweep_systems(spec.expand())
+    rep = ei.value.report
+    assert rep.target == "sweep-pre-lint"
+    assert "trc-decomposition" in rep.rules_fired()
+
+
+def test_execute_gates_before_compiling():
+    spec = SweepSpec(systems=(BAD_DDR4,), intervals=(8.0,), n_cycles=400)
+    with pytest.raises(SpecLintError):
+        execute(spec, cache=E.RunCache())
+
+
+def test_clean_overrides_pass_the_gate():
+    spec = SweepSpec(systems=(OK_DDR4,), intervals=(8.0,), n_cycles=400)
+    lint_sweep_systems(spec.expand())       # must not raise
+
+
+def test_no_override_systems_are_skipped():
+    # registered standards are gated elsewhere; the sweep lint only pays
+    # for override-carrying corners
+    spec = SweepSpec(systems=("DDR4", "DDR5"), intervals=(8.0,),
+                     n_cycles=400)
+    lint_sweep_systems(spec.expand())       # must not raise
+
+
+def test_composition_member_overrides_are_linted():
+    comp = Composition(((BAD_DDR4, 2), ("DDR5", 2)))
+    spec = SweepSpec(systems=(comp,), intervals=(8.0,), n_cycles=400)
+    with pytest.raises(SpecLintError) as ei:
+        lint_sweep_systems(spec.expand())
+    assert "trc-decomposition" in ei.value.report.rules_fired()
+
+
+def test_opt_out_runs_the_violating_corner():
+    spec = SweepSpec(systems=(BAD_DDR4,), intervals=(8.0,),
+                     read_ratios=(1.0,), n_cycles=400, lint_specs=False)
+    res = execute(spec, cache=E.RunCache())
+    assert len(res.points) == 1

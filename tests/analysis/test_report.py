@@ -1,0 +1,80 @@
+"""LintReport / Finding currency: ordering, gating, artifacts, diffing."""
+import pytest
+
+from repro.analysis.report import (ERROR, INFO, WARN, Finding, LintReport,
+                                   diff, merge, render_diff)
+
+
+def _f(rule="r1", severity=ERROR, message="m", target="T", **kw):
+    return Finding(rule=rule, severity=severity, message=message,
+                   target=target, **kw)
+
+
+def test_finding_normalizes_and_keys():
+    a = _f(rows=[3, 1], data={"b": 2, "a": 1})
+    assert a.rows == (3, 1)
+    assert a.data == (("a", 1), ("b", 2))
+    # key excludes the message: rewording a rule must not churn diffs
+    b = _f(rows=[3, 1], message="different words")
+    assert a.key == b.key
+    with pytest.raises(ValueError):
+        _f(severity="fatal")
+
+
+def test_report_gating_and_sorting():
+    r = LintReport(target="t")
+    r.add(_f(rule="info-rule", severity=INFO))
+    assert r.ok() and r.ok(strict=True)
+    r.add(_f(rule="warn-rule", severity=WARN))
+    assert r.ok() and not r.ok(strict=True)
+    r.add(_f(rule="err-rule", severity=ERROR))
+    assert not r.ok()
+    assert [f.severity for f in r.sorted()] == [ERROR, WARN, INFO]
+    assert r.counts() == {ERROR: 1, WARN: 1, INFO: 1}
+    assert r.rules_fired() == {"info-rule": 1, "warn-rule": 1,
+                               "err-rule": 1}
+    assert "err-rule" in r.summary()
+    # infos hidden by default, shown on request
+    assert "info-rule" not in r.summary()
+    assert "info-rule" in r.summary(show_info=True)
+
+
+def test_json_and_npz_roundtrip(tmp_path):
+    r = LintReport(target="DDR4", meta={"channels": 2})
+    r.add(_f(rows=(1, 2), data={"x": 1}))
+    r.add(_f(rule="r2", severity=WARN, path="a/b.py", line=7))
+
+    loaded = LintReport.from_json(r.to_json())
+    assert loaded.target == "DDR4"
+    assert {f.key for f in loaded.findings} == {f.key for f in r.findings}
+
+    p = r.save_json(str(tmp_path / "rep.json"))
+    assert LintReport.load_json(p).counts() == r.counts()
+
+    p2 = r.save_npz(str(tmp_path / "rep.npz"))
+    again = LintReport.load_npz(p2)
+    assert again.counts() == r.counts()
+    assert again.meta == {"channels": 2}
+
+
+def test_json_rejects_foreign_format():
+    with pytest.raises(ValueError):
+        LintReport.from_json('{"format": "something-else", "findings": []}')
+
+
+def test_diff_and_merge():
+    a = LintReport(target="A")
+    a.add(_f(rule="both"))
+    a.add(_f(rule="only-a"))
+    b = LintReport(target="B")
+    b.add(_f(rule="both"))
+    b.add(_f(rule="only-b"))
+    d = diff(a, b)
+    assert [f.rule for f in d["added"]] == ["only-b"]
+    assert [f.rule for f in d["removed"]] == ["only-a"]
+    assert d["common"] == 1
+    out = render_diff(a, b)
+    assert "+1 -1" in out and "only-b" in out
+
+    m = merge([a, b], target="all")
+    assert len(m.findings) == 4 and m.target == "all"

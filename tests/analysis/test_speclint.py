@@ -1,0 +1,167 @@
+"""Spec linter: clean standards stay clean, seeded defects are caught.
+
+The two acceptance halves of the spec-lint pass:
+
+* zero false positives — every registered standard (and the reference
+  heterogeneous composition) lints with no error- or warn-severity
+  findings;
+* 100% detection — each mutation-seeded defect class fires its rule
+  exactly once with the right rule id (``repro.verify.spec_mutation``).
+"""
+import dataclasses
+
+import pytest
+
+import repro.core.standards  # noqa: F401  (register all standards)
+from repro.analysis import (ERROR, RULES, lint_all, lint_compiled,
+                            lint_spec, lint_system)
+from repro.core.compile import compile_spec, compile_system
+from repro.core.spec import all_standards
+from repro.verify import spec_mutation as M
+
+ALL_STANDARDS = sorted(all_standards())
+
+
+# ---------------------------------------------------------------------------
+# zero false positives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("std", ALL_STANDARDS)
+def test_registered_standard_lints_clean(std):
+    rep = lint_spec(std)
+    assert rep.ok(strict=True), rep.summary()
+    assert rep.meta["compiled"] is True
+
+
+def test_lint_all_covers_every_registered_standard():
+    reps = lint_all()
+    assert sorted(reps) == ALL_STANDARDS
+    assert all(r.ok(strict=True) for r in reps.values())
+
+
+def test_hetero_composition_lints_clean():
+    msys = compile_system([
+        dict(standard="DDR5", org_preset="DDR5_16Gb_x8",
+             timing_preset="DDR5_4800B", channels=2),
+        dict(standard="DDR4", org_preset="DDR4_8Gb_x8",
+             timing_preset="DDR4_2400R", channels=2, link_latency=80),
+    ])
+    rep = lint_system(msys)
+    assert rep.ok(strict=True), rep.summary()
+    assert len(rep.meta["groups"]) == 2
+
+
+def test_multichannel_refresh_stagger_stays_clean():
+    # 4-channel DDR5: staggered refresh windows must not overlap
+    rep = lint_spec("DDR5", channels=4)
+    assert rep.ok(strict=True), rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# 100% detection of seeded defects
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mutator", sorted(M.MUTATORS))
+def test_mutator_fires_expected_rule_exactly_once(mutator):
+    inj = M.inject("DDR4", mutator)
+    assert inj is not None
+    hits = inj.hits()
+    assert len(hits) == 1, (inj.rule, inj.report.summary())
+    assert hits[0].rule == inj.rule
+    assert hits[0].severity == ERROR
+
+
+def test_mutation_matrix_full_detection():
+    m = M.spec_mutation_matrix(ALL_STANDARDS)
+    missed = {k: v for k, v in m.items() if v.startswith("MISSED")}
+    assert not missed, missed
+    # every mutator must be exercised (not skipped) on at least one std
+    for mut in M.MUTATORS:
+        assert any(v == "detected" for (s, mm), v in m.items()
+                   if mm == mut), mut
+
+
+def test_trc_violation_names_rationale_and_values():
+    inj = M.inject("DDR5", "trc-shrink")
+    (f,) = inj.hits()
+    assert f.rule == "trc-decomposition"
+    d = dict(f.data)
+    assert d["lhs_value"] == d["rhs_value"] - 1
+    assert "JEDEC" in f.message
+
+
+def test_coverage_hole_names_the_missing_pair():
+    inj = M.inject("DDR4", "coverage-delete")
+    (f,) = inj.hits()
+    assert dict(f.data)["prev"] == "PRE"
+    assert "zero cycles apart" in f.message
+
+
+def test_dominated_row_reports_both_rows():
+    inj = M.inject("DDR4", "dominated-inject")
+    (f,) = inj.hits()
+    assert len(f.rows) == 2
+    assert dict(f.data)["dominated"] != dict(f.data)["dominator"]
+
+
+def test_unknown_token_skips_compile():
+    inj = M.inject("DDR4", "unknown-token")
+    assert inj.report.meta["compiled"] is False
+    assert "nBOGUS" in inj.hits()[0].message
+
+
+def test_ring_corruption_detected_on_compiled_spec():
+    cspec = compile_spec("DDR4", "DDR4_8Gb_x8", "DDR4_2400R")
+    bad = dataclasses.replace(cspec, ring_depth=cspec.ring_depth - 1)
+    rep = lint_compiled(bad)
+    assert [f.rule for f in rep.errors] == ["ring-capacity"]
+    # the pristine table is clean
+    assert lint_compiled(cspec).ok(strict=True)
+
+
+def test_refresh_stagger_overlap_warns():
+    # squeeze nREFI so per-channel stagger spacing < nRFC but refresh
+    # itself stays schedulable: warn, not error
+    import repro.core.spec as S
+    std = S.get_standard("DDR4")
+    t = dict(std.timing_presets["DDR4_2400R"])
+    rep = lint_spec("DDR4", timing_overrides={"nREFI": t["nRFC"] * 3},
+                    channels=4)
+    assert rep.ok() and not rep.ok(strict=True)
+    assert any(f.rule == "refresh-headroom" for f in rep.warnings)
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_registry_rule_ids_unique_and_scoped():
+    assert len(RULES) >= 12
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.scope in ("standard", "table")
+        assert rule.rationale, rid
+
+
+def test_family_gated_rule_only_applies_to_family():
+    from repro.analysis.rules import applicable
+    vrr = RULES["vrr-covers-row-cycle"]
+    assert applicable(vrr, "DDR5_VRR")
+    assert not applicable(vrr, "DDR5")
+    # and the rule actually fires on a family member when violated
+    rep = lint_spec("DDR5_VRR", timing_overrides={"nVRR": 1})
+    assert any(f.rule == "vrr-covers-row-cycle" for f in rep.errors)
+    # the same override key does not exist on plain DDR5
+    assert "nVRR" not in dict(
+        __import__("repro.core.spec", fromlist=["get_standard"])
+        .get_standard("DDR5").timing_presets["DDR5_4800B"])
+
+
+def test_unused_param_warns():
+    import repro.core.spec as S
+    std = S.get_standard("DDR4")
+    mut = type("DDR4_unused", (std,), {
+        "timing_params": tuple(std.timing_params) + ("nNEVER",)})
+    rep = lint_spec(mut)
+    hits = [f for f in rep.warnings if f.rule == "unused-param"]
+    assert len(hits) == 1 and "nNEVER" in hits[0].message
