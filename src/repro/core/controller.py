@@ -451,6 +451,81 @@ def _select_and_issue(cspec, dp, cs, clk, cfg, preds, kind_ok, sched_fn,
     return cs, ev
 
 
+# --------------------------------------------------------------------------
+# Event horizon (the engine's fast-forward path)
+# --------------------------------------------------------------------------
+
+#: see ``repro.core.frontend.HORIZON_MAX`` — shared sentinel value
+HORIZON_MAX = jnp.int32(1 << 30)
+
+
+def channel_horizon(cspec: CompiledSpec, dp: D.DynParams,
+                    cfg: ControllerConfig, cs: CtrlState, clk,
+                    link_latency: int = 0):
+    """Earliest cycle ``>= clk`` at which THIS channel could issue any
+    command — queue candidate or refresh engine — evaluated on the
+    current (post-cycle) state.
+
+    CONSERVATIVE by construction: predicate, bus-kind, and scheduler
+    masks are ignored (they only *shrink* the issue set, so ignoring
+    them can only move the horizon earlier), and an early horizon merely
+    executes an idle cycle.  What it must never do is overshoot, and it
+    can't: every issue requires ``pre_pred`` (valid & timing-ready [&
+    link-visible]) or a due+ready refresh unit, and both bounds below
+    are exact lower bounds on those events.  Between ``clk`` and the
+    horizon the channel state is frozen (every controller/device update
+    is gated on an issue), so the bound needs no re-evaluation until the
+    next executed cycle.  Components:
+
+    * queue: per valid slot, the dense last-issue/ring earliest-ready
+      table at the slot's prerequisite command (the same
+      ``table[cand_cmd, bank]`` lookup the selection pipeline performs);
+      candidates cannot flip while idle except via WCK/RCK clock expiry
+      — bounded separately below;
+    * refresh: per unit, ``max(due clock, earliest-ready of its
+      PREab/REFab candidate)``; a PRAC alert makes the unit due NOW;
+    * clock expiry (``data_clock_sync`` standards): the first
+      ``clock_until`` still in the future, where a column candidate
+      flips between RD/WR and its CAS/RCKSTRT sync prerequisite;
+    * BlockHammer sketch decay: the next ``nREFI`` multiple (the sketch
+      halves on those cycles, so they must be executed, not skipped).
+    """
+    q = cs.queue
+    bank = jax.vmap(partial(D.flat_bank, cspec))(q.sub)
+    pre = jax.vmap(partial(D.prereq, cspec, dp, cs.dev),
+                   in_axes=(0, 0, 0, None))
+    cand_cmd, _, _ = pre(q.is_write, q.sub, q.row, clk)
+    table = D.earliest_ready_table(cspec, dp, cs.dev)
+    t_slot = table[cand_cmd, bank]
+    if link_latency:
+        t_slot = jnp.maximum(t_slot, q.arrive + jnp.int32(link_latency))
+    h = jnp.min(jnp.where(q.valid, t_slot, HORIZON_MAX),
+                initial=HORIZON_MAX)
+    if cfg.refresh_enabled:
+        banks_per_ru = cspec.n_banks // cspec.n_refresh_units
+        due_t = cs.dev.last_ref + dp.nREFI
+        if cfg.prac_threshold:
+            alert = jnp.max(
+                (cs.prac_count >= cfg.prac_threshold).reshape(
+                    cspec.n_refresh_units, banks_per_ru), axis=1)
+            due_t = jnp.where(alert, clk, due_t)
+        any_open = jnp.any(
+            cs.dev.row_state.reshape(cspec.n_refresh_units, banks_per_ru)
+            != D.ROW_CLOSED, axis=1)
+        ref_cmd = jnp.where(any_open, jnp.int32(cspec.id_PREab),
+                            jnp.int32(cspec.id_REFab))
+        rep = jnp.arange(cspec.n_refresh_units, dtype=jnp.int32) \
+            * jnp.int32(banks_per_ru)
+        h = jnp.minimum(h, jnp.min(jnp.maximum(due_t, table[ref_cmd, rep])))
+    if cspec.data_clock_sync:
+        cu = cs.dev.clock_until
+        h = jnp.minimum(h, jnp.min(jnp.where(cu > clk, cu, HORIZON_MAX)))
+    if cfg.blockhammer_threshold:
+        h = jnp.minimum(h, ((clk + dp.nREFI - jnp.int32(1)) // dp.nREFI)
+                        * dp.nREFI)
+    return jnp.maximum(h, clk)
+
+
 _IDLE_SLOT = dict(cmd=jnp.int32(-1), bank=jnp.int32(-1), row=jnp.int32(-1),
                   arrive=jnp.int32(-1), hit_ready=False)
 

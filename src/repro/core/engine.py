@@ -68,6 +68,12 @@ class Stats(NamedTuple):
     deferred: jnp.ndarray           # predicate-masked candidate count
     per_channel: ChannelStats
     per_group: tuple                # per-group native ChannelStats
+    #: scan-body executions this run — with fast-forward, the number of
+    #: cycles actually stepped; ``cycles`` otherwise
+    scan_steps: jnp.ndarray = 0
+    #: cycles the fast-forward horizon skipped (``cycles - scan_steps``);
+    #: 0 on the classic per-cycle path
+    skipped_cycles: jnp.ndarray = 0
 
     # -- human-readable views ---------------------------------------------
     def to_dict(self) -> dict:
@@ -77,7 +83,7 @@ class Stats(NamedTuple):
         d = {k: int(getattr(self, k))
              for k in ("cycles", "reads_done", "writes_done",
                        "probe_lat_sum", "probe_cnt", "data_bus_busy",
-                       "deferred")}
+                       "deferred", "scan_steps", "skipped_cycles")}
         d["cmd_counts"] = [int(c) for c in np.asarray(self.cmd_counts)]
         ch = self.per_channel
         d["per_channel"] = {
@@ -308,7 +314,7 @@ def run_key(spec, ccfg: C.ControllerConfig,
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
             batched: bool, replay: F.ReplayStream | None = None,
             telemetry: int = 0, shard: int | None = None,
-            donate: bool = False):
+            donate: bool = False, fast_forward: bool = True):
     # interval/read_ratio reach the traced program only through FrontParams
     # (a traced argument) in both scalar and batched mode; the fcfg copies
     # are dead at trace time, so drop them from the key — sweeping the load
@@ -322,11 +328,13 @@ def run_key(spec, ccfg: C.ControllerConfig,
     fkey = tuple(kv for kv in _freeze(fcfg)
                  if not (isinstance(kv, tuple)
                          and kv[0] in ("interval", "read_ratio")))
+    # fast_forward restructures the scan into event-horizon macro-steps
+    # (a different traced program), so it keys the cache too
     return (system_fingerprint(spec), _freeze(ccfg), fkey,
             int(n_cycles), bool(trace), bool(batched),
             None if replay is None else replay.fingerprint,
             int(telemetry), int(jax.device_count()), _shard_desc(shard),
-            bool(donate))
+            bool(donate), bool(fast_forward))
 
 
 class _TimedRun:
@@ -403,7 +411,7 @@ class RunCache:
             fcfg: F.FrontendConfig, n_cycles: int, trace: bool = False,
             batched: bool = False, replay: F.ReplayStream | None = None,
             telemetry: int = 0, shard: int | None = None,
-            donate: bool = False):
+            donate: bool = False, fast_forward: bool = True):
         """``spec`` may be a :class:`CompiledSpec` (homogeneous system) or
         a :class:`MemorySystemSpec` (heterogeneous composition).
         ``telemetry`` is the windowed-telemetry window in cycles (0 =
@@ -419,7 +427,7 @@ class RunCache:
                 "— batched DSE points shard across devices in repro.dse "
                 "instead")
         key = run_key(spec, ccfg, fcfg, n_cycles, trace, batched, replay,
-                      telemetry, shard, donate)
+                      telemetry, shard, donate, fast_forward)
         fn = self._runs.get(key)
         if fn is not None:
             self.hits += 1
@@ -436,7 +444,8 @@ class RunCache:
                 SpecGroup(dataclasses.replace(g.cspec), g.channels,
                           g.link_latency) for g in as_system(spec).groups))
         fn = make_run(spec, ccfg, fcfg, n_cycles, trace, replay,
-                      telemetry_window=telemetry, shard=shard)
+                      telemetry_window=telemetry, shard=shard,
+                      fast_forward=fast_forward)
         if batched:
             fn = jax.vmap(fn, in_axes=(None, 0, None))
         fn = _TimedRun(
@@ -498,6 +507,12 @@ class Simulator:
     #: = exact mesh size.  Sharded and vmapped runs are bit-exact twins
     #: (pinned by the golden command-stream hashes).
     channel_shard: object = None
+    #: event-horizon fast-forward: skip provably idle cycle runs in one
+    #: variable-stride step (docs/architecture.md "Performance model").
+    #: Bit-exact by construction — stats, command streams, and telemetry
+    #: are identical with it on or off (pinned by the golden hashes) —
+    #: so it defaults on; False forces the classic per-cycle scan.
+    fast_forward: bool = True
 
     def __post_init__(self):
         if self.system is not None:
@@ -561,7 +576,8 @@ class Simulator:
     # -- single-config run ------------------------------------------------
     def run(self, n_cycles: int, interval: float | None = None,
             read_ratio: float | None = None, trace: bool = False,
-            seed: int = 0x1234, telemetry: int = 0):
+            seed: int = 0x1234, telemetry: int = 0,
+            fast_forward: bool | None = None):
         """Run ``n_cycles``.  Returns ``stats`` — plus the raw trace
         arrays when ``trace=True``, plus a :class:`repro.telemetry.
         Telemetry` time series when ``telemetry=W > 0`` (windowed
@@ -575,10 +591,12 @@ class Simulator:
                 read_ratio=(read_ratio if read_ratio is not None
                             else fcfg.read_ratio))
         fp = fcfg.params()
+        ff = self.fast_forward if fast_forward is None else fast_forward
         run_fn = RUN_CACHE.get(self._cache_spec, self.controller, fcfg,
                                n_cycles, trace=trace, replay=self.replay,
                                telemetry=telemetry,
-                               shard=self._resolved_shard())
+                               shard=self._resolved_shard(),
+                               fast_forward=ff)
         out = run_fn(self._dyn_params(), fp, jnp.uint32(seed))
         out = jax.tree.map(np.asarray, out)
         if telemetry:
@@ -598,7 +616,8 @@ class Simulator:
         fp = F.stack_params(pts, self.frontend.probe_gap)
         batched = RUN_CACHE.get(self._cache_spec, self.controller,
                                 self.frontend, n_cycles, batched=True,
-                                replay=self.replay)
+                                replay=self.replay,
+                                fast_forward=self.fast_forward)
         out = batched(self._dyn_params(), fp, jnp.uint32(seed))
         return pts, jax.tree.map(np.asarray, out)
 
@@ -661,7 +680,8 @@ def _accum_channel_stats(cspec: CompiledSpec, ch: ChannelStats,
     )
 
 
-def _aggregate_stats(msys: MemorySystemSpec, chs: list, clk) -> Stats:
+def _aggregate_stats(msys: MemorySystemSpec, chs: list, clk,
+                     scan_steps=None) -> Stats:
     """Fold the per-group running stats into the uniform :class:`Stats`.
 
     The 1-group path is bit-identical to the historical aggregation; for
@@ -699,13 +719,18 @@ def _aggregate_stats(msys: MemorySystemSpec, chs: list, clk) -> Stats:
         deferred=jnp.sum(per_channel.deferred),
         per_channel=per_channel,
         per_group=tuple(chs),
+        # classic per-cycle path: every cycle is one scan step
+        scan_steps=clk if scan_steps is None else scan_steps,
+        skipped_cycles=(jnp.zeros_like(clk) if scan_steps is None
+                        else clk - scan_steps),
     )
 
 
 def make_run(spec, ccfg: C.ControllerConfig,
              fcfg: F.FrontendConfig, n_cycles: int, trace: bool,
              replay: F.ReplayStream | None = None,
-             telemetry_window: int = 0, shard: int | None = None):
+             telemetry_window: int = 0, shard: int | None = None,
+             fast_forward: bool = True):
     """Build the pure run function (dps, fp, seed) -> Stats [, trace]
     [, telemetry snapshots].
 
@@ -731,6 +756,22 @@ def make_run(spec, ccfg: C.ControllerConfig,
     CXL-attached groups (``link_latency > 0``) see requests
     ``link_latency`` cycles after arrival and return read data
     ``link_latency`` cycles late.
+
+    ``fast_forward`` (default on) replaces the fixed-stride cycle scan
+    with event-horizon macro-stepping: a ``lax.while_loop`` executes one
+    full cycle, then computes a safe skip distance — the minimum of the
+    frontend's next arrival/probe attempt, every channel's next
+    timing-ready/refresh/clock-expiry event, the BlockHammer decay
+    boundary, and the current segment end — and advances the state
+    across the provably idle run in closed form (clamped accumulator
+    refill + LCG jump; all other state is frozen on idle cycles).  The
+    result is O(events) instead of O(cycles) on idle-heavy workloads and
+    bit-exact by construction: stats, command streams, and telemetry
+    snapshots are identical with it on or off (pinned by the golden-hash
+    suite).  With ``trace=True`` the dense per-cycle ys become an
+    idle-initialized ``(T, C, 2)`` buffer written at the TRUE cycle
+    index of each executed cycle, so skipped cycles hold exactly the
+    idle values the per-cycle scan would have emitted.
 
     ``telemetry_window = W > 0`` restructures the cycle scan into windows
     of W cycles (an outer scan over full windows around an inner W-cycle
@@ -793,7 +834,11 @@ def make_run(spec, ccfg: C.ControllerConfig,
         # sharded path ``axis_name``/``bases`` are set: the frontend
         # decode runs replicated, inserts hit the local channel slice
         # only, and the 5-wide int32 vector below is the cycle's entire
-        # cross-shard traffic (a single psum).
+        # cross-shard traffic (a single psum).  The fast-forward path
+        # widens it to 6 with the cycle's issued command count and
+        # returns it, so the macro-stepper can gate its horizon
+        # computation on a busy/idle verdict that is uniform across
+        # shards by construction (it rides the psum).
         queues, draft = F.system_frontend_insert(
             msys, fcfg, fp, sim.fs, tuple(g.cs.queue for g in sim.gs),
             sim.clk, sys_layout, rp, bases)
@@ -814,6 +859,10 @@ def make_run(spec, ccfg: C.ControllerConfig,
             absorb = absorb + F.absorb_locals(ev)
         # [probe-accept, stream-accept, probes-done, served, completion]
         loc = jnp.concatenate([jnp.stack([draft.okp, draft.ok]), absorb])
+        if fast_forward:
+            issued = sum(jnp.sum((ev.cmd >= 0).astype(jnp.int32))
+                         for ev in evs)
+            loc = jnp.concatenate([loc, issued[None]])
         if axis_name is not None:
             loc = jax.lax.psum(loc, axis_name)
         fs = F.frontend_commit(fcfg, fp, sim.fs, draft, loc[0], loc[1],
@@ -825,6 +874,8 @@ def make_run(spec, ccfg: C.ControllerConfig,
         # the group tuples, so the concat order is shard-independent
         ys = tuple(TraceArrays(e.cmd, e.bank, e.row, e.arrive,
                                e.hit_ready) for e in evs) if trace else None
+        if fast_forward:
+            return out, ys, loc
         return out, ys
 
     def _finalize_trace(ys_groups):
@@ -928,6 +979,134 @@ def make_run(spec, ccfg: C.ControllerConfig,
             else None
         return sim, ys, snaps
 
+    # -- event-horizon fast-forward machinery --------------------------
+    # Static per-cycle rng advance: the frontend draws a FIXED number of
+    # LCG values per cycle (independent of accepts), so a run of skipped
+    # cycles is one affine jump.  Computed host-side at build time.
+    _k_draws = F.rng_draws_per_cycle(fcfg, sys_layout)
+    _a_cyc, _c_cyc = F.lcg_affine(_k_draws)
+    _paced = F.paced_by_arrive(fcfg, rp)
+
+    def _horizon(sim, dps, fp):
+        """min over all event sources of the next cycle >= sim.clk at
+        which anything could happen: frontend arrival/probe attempts
+        plus every channel's controller horizon.  Conservative — an
+        early horizon just executes an idle cycle (see
+        ``C.channel_horizon``)."""
+        h = F.arrival_horizon(fcfg, fp, sim.fs, sim.clk, rp, _paced)
+        for gi, (grp, dp) in enumerate(zip(groups, dps)):
+            hc = jax.vmap(
+                lambda s: C.channel_horizon(grp.cspec, dp, ccfg, s,
+                                            sim.clk, grp.link_latency)
+            )(sim.gs[gi].cs)
+            h = jnp.minimum(h, jnp.min(hc))
+        return h
+
+    def _idle_jump(sim, target):
+        """Advance the state across the idle run [sim.clk, target) in
+        one step: only the frontend accumulator and rng move on idle
+        cycles (closed forms); everything else is provably frozen."""
+        fs = F.idle_advance(fcfg, sim.fs, target - sim.clk,
+                            _a_cyc, _c_cyc, _k_draws)
+        return sim._replace(fs=fs, clk=target)
+
+    def _init_trace_bufs(local_counts):
+        """Idle-initialized dense per-cycle trace buffers, one per spec
+        group: the fast-forward path writes each EXECUTED cycle's events
+        at its true cycle index, and skipped cycles keep these fill
+        values — exactly what the per-cycle scan emits on an idle cycle
+        (no candidate is ready, so cmd/bank/row/arrive are -1 and no
+        post-predicate row hit exists), making the dense trace — and its
+        golden sha256 — bit-identical to the fixed-stride path's."""
+        bufs = []
+        for nch in local_counts:
+            i32 = lambda: jnp.full((n_cycles, nch, 2), -1, jnp.int32)
+            bufs.append(TraceArrays(
+                cmd=i32(), bank=i32(), row=i32(), arrive=i32(),
+                hit_ready=jnp.zeros((n_cycles, nch, 2), bool)))
+        return tuple(bufs)
+
+    def _ff_cycles(init, body, dps, fp, local_counts, axis_name=None):
+        """Fast-forward twin of ``_scan_cycles``: ONE ``lax.while_loop``
+        over the whole run, each iteration executing ONE real cycle and
+        then jumping to ``min(horizon, next window boundary)``.  Returns
+        ``(final SimState, per-group trace buffers | None, window snaps
+        | None, scan-step count)``.  The horizon computation is gated on
+        the cycle's busy verdict (any accept or issue => next cycle runs
+        anyway), which rides the fused reduction — on the sharded path
+        the verdict is therefore uniform across shards and the
+        cross-device ``pmin`` of the per-shard horizons sits OUTSIDE the
+        gate, so every shard takes the same trip count.
+
+        Windowed telemetry rides the SAME loop: jump targets are capped
+        at the next ``W``-boundary, so the clock lands on every boundary
+        exactly once (it advances by >= 1 per iteration and never jumps
+        across a cap), and that iteration writes one snapshot row into a
+        dense ``(n_full, ...)`` buffer carried through the loop.  An
+        earlier revision nested the while loop inside a ``lax.scan``
+        over windows instead; XLA:CPU would not keep the loop carry
+        in-place across the scan->while boundary and the resulting
+        per-iteration state copies cost ~20% wall clock regardless of
+        window count."""
+        bufs0 = _init_trace_bufs(local_counts) if trace else None
+        W = telemetry_window
+        n_full = n_cycles // W if W else 0
+
+        def snapshot(sim):
+            return tuple(_snap_telemetry(grp.cspec, g, sim.clk)
+                         for grp, g in zip(groups, sim.gs))
+
+        snaps0 = jax.tree.map(
+            lambda s: jnp.zeros((n_full,) + s.shape, s.dtype),
+            jax.eval_shape(snapshot, init)) if W else None
+
+        def cond(c):
+            return c[0].clk < jnp.int32(n_cycles)
+
+        def step(c):
+            sim, steps, bufs, snaps = c
+            t0 = sim.clk
+            out, ys, loc = body(sim)
+            if trace:
+                z = jnp.int32(0)
+                bufs = tuple(
+                    jax.tree.map(
+                        lambda b, y: jax.lax.dynamic_update_slice(
+                            b, y[None].astype(b.dtype), (t0, z, z)),
+                        bufs[g], ys[g])
+                    for g in range(n_groups))
+            busy = (loc[0] + loc[1] + loc[5]) > 0
+            h = jax.lax.cond(busy, lambda _: out.clk,
+                             lambda _: _horizon(out, dps, fp), None)
+            if axis_name is not None:
+                h = jax.lax.pmin(h, axis_name)
+            cap = jnp.int32(n_cycles)
+            if W:
+                cap = jnp.minimum(cap, (t0 // W + 1) * W)
+            target = jnp.minimum(jnp.maximum(h, out.clk), cap)
+            nxt = _idle_jump(out, target)
+            if W and n_full:        # n_cycles < W: tail snapshot only
+                snaps = jax.lax.cond(
+                    target % W == 0,
+                    lambda s: jax.tree.map(
+                        lambda b, v: jax.lax.dynamic_update_index_in_dim(
+                            b, v.astype(b.dtype), target // W - 1, 0),
+                        s, snapshot(nxt)),
+                    lambda s: s, snaps)
+            return nxt, steps + jnp.int32(1), bufs, snaps
+
+        sim, steps, bufs, snaps = jax.lax.while_loop(
+            cond, step, (init, jnp.int32(0), bufs0, snaps0))
+        if not W:
+            return sim, bufs, None, steps
+        snap_parts = [snaps] if n_full else []
+        if n_cycles % W or not n_full:   # ragged tail / n_cycles < W
+            snap_parts.append(jax.tree.map(lambda a: a[None],
+                                           snapshot(sim)))
+        cat = (lambda *xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
+        snaps = jax.tree.map(lambda *xs: cat(*xs), *snap_parts)
+        return sim, bufs, snaps, steps
+
     def _final_chs(final_gs):
         """The groups' end-of-run ChannelStats, telemetry gauge columns
         stripped before the uniform aggregation."""
@@ -949,9 +1128,17 @@ def make_run(spec, ccfg: C.ControllerConfig,
         global TRACE_COUNT
         TRACE_COUNT += 1            # runs once per jax trace, not per call
         dps = _check_dps(dps)
-        body = partial(cycle, dps=dps, fp=fp)
-        final, ys, snaps = _scan_cycles(_init_state(seed), body)
-        stats = _aggregate_stats(msys, _final_chs(final.gs), final.clk)
+        if fast_forward:
+            body = lambda sim: cycle(sim, None, dps=dps, fp=fp)
+            final, ys, snaps, steps = _ff_cycles(
+                _init_state(seed), body, dps, fp,
+                tuple(g.channels for g in groups))
+        else:
+            body = partial(cycle, dps=dps, fp=fp)
+            final, ys, snaps = _scan_cycles(_init_state(seed), body)
+            steps = None
+        stats = _aggregate_stats(msys, _final_chs(final.gs), final.clk,
+                                 steps)
         out = (stats,)
         if trace:
             out += (_finalize_trace(ys),)
@@ -998,16 +1185,32 @@ def make_run(spec, ccfg: C.ControllerConfig,
             bases = tuple(
                 jnp.int32(b) + si * jnp.int32(grp.channels // shard)
                 for b, grp in zip(static_bases, groups))
-            body = partial(cycle, dps=dps, fp=fp,
-                           axis_name=CHANNEL_AXIS, bases=bases)
-            final, ys, snaps = _scan_cycles(_init_state(seed, si), body)
-            return tuple(_final_chs(final.gs)), ys, snaps
+            if fast_forward:
+                body = lambda sim: cycle(sim, None, dps=dps, fp=fp,
+                                         axis_name=CHANNEL_AXIS,
+                                         bases=bases)
+                final, ys, snaps, steps = _ff_cycles(
+                    _init_state(seed, si), body, dps, fp,
+                    tuple(g.channels // shard for g in groups),
+                    axis_name=CHANNEL_AXIS)
+            else:
+                body = partial(cycle, dps=dps, fp=fp,
+                               axis_name=CHANNEL_AXIS, bases=bases)
+                final, ys, snaps = _scan_cycles(_init_state(seed, si),
+                                                body)
+                steps = jnp.int32(n_cycles)
+            # steps is uniform across shards (the busy verdict rides the
+            # psum and the horizon is pmin-reduced) — emit a (1,) slice
+            # per shard and read any one back after the gather
+            return tuple(_final_chs(final.gs)), ys, snaps, steps[None]
 
-        chs, ys, snaps = jax.shard_map(
+        chs, ys, snaps, steps = jax.shard_map(
             shard_body, mesh=mesh, in_specs=(P(), P(), P()),
             out_specs=(P(CHANNEL_AXIS), P(None, CHANNEL_AXIS),
-                       P(None, CHANNEL_AXIS)))(dps, fp, seed)
-        stats = _aggregate_stats(msys, list(chs), jnp.int32(n_cycles))
+                       P(None, CHANNEL_AXIS),
+                       P(CHANNEL_AXIS)))(dps, fp, seed)
+        stats = _aggregate_stats(msys, list(chs), jnp.int32(n_cycles),
+                                 steps[0] if fast_forward else None)
         out = (stats,)
         if trace:
             out += (_finalize_trace(ys),)
@@ -1133,6 +1336,12 @@ def format_stats(stats, spec=None) -> str:
              f"reads done        {int(stats.reads_done):>14,}",
              f"writes done       {int(stats.writes_done):>14,}",
              f"deferred          {int(stats.deferred):>14,}"]
+    skipped = int(stats.skipped_cycles)
+    if cyc:
+        # what fast-forward bought on this workload: the fraction of
+        # cycles the engine never had to execute
+        lines.append(f"idle fast-forward {skipped / cyc:>14.1%}  "
+                     f"({int(stats.scan_steps):,} scan steps)")
     if spec is None:
         if cyc:
             lines.append(f"bus busy          "

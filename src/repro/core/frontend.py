@@ -564,6 +564,139 @@ def system_frontend_step(msys, cfg: FrontendConfig, fp: FrontParams,
                                    paced_by_arrive(cfg, replay))
 
 
+# --------------------------------------------------------------------------
+# Event-horizon helpers (the engine's fast-forward path)
+# --------------------------------------------------------------------------
+#
+# The fast-forward engine advances the whole simulation state across runs
+# of provably idle cycles in one step (docs/architecture.md "Performance
+# model").  The frontend's contributions: the earliest cycle at which it
+# could next *attempt* an insert (`arrival_horizon`), and the closed forms
+# of the only two pieces of frontend state that change on an idle cycle —
+# the arrival accumulator's clamped refill and the LCG's fixed number of
+# draws per cycle (`rng_draws_per_cycle` + `lcg_jump`).
+
+#: Horizon sentinel — far beyond any reachable cycle count, small enough
+#: that int32 comparisons never overflow.
+HORIZON_MAX = jnp.int32(1 << 30)
+
+
+def rng_draws_per_cycle(cfg: FrontendConfig, sys_layout) -> int:
+    """STATIC number of LCG draws :func:`frontend_insert` /
+    :func:`system_frontend_insert` performs per cycle.
+
+    The draws are unconditional (they happen whether or not the decoded
+    request is wanted or accepted), so an idle cycle advances the rng by
+    exactly this count — which is what lets :func:`lcg_jump` replay a run
+    of skipped cycles in closed form, bit-exactly."""
+    if sys_layout[0] == "single":
+        n_fields = len(sys_layout[1])
+        probe_draws = n_fields
+        stream_draws = {"sequential": 1, "random": n_fields + 1,
+                        "trace": 0}[cfg.pattern]
+    else:
+        sublayouts = sys_layout[3]
+        n_slots = max(len(lay) for lay in sublayouts)
+        probe_draws = 1 + n_slots
+        stream_draws = {"sequential": 1, "random": 1 + n_slots + 1,
+                        "trace": 0}[cfg.pattern]
+    draws = 0
+    if cfg.probes:
+        draws += probe_draws
+    if cfg.stream:
+        draws += stream_draws
+    return draws
+
+
+def lcg_affine(k: int) -> tuple:
+    """Host-side ``(a, c)`` of :func:`_lcg` composed ``k`` times
+    (mod 2**32): one cycle's worth of rng advance as a single affine
+    map ``x -> a*x + c``."""
+    a, c = 1, 0
+    for _ in range(k):
+        a, c = (1664525 * a) % (1 << 32), \
+               (1664525 * c + 1013904223) % (1 << 32)
+    return a, c
+
+
+def lcg_jump(rng, d, a_cycle: int, c_cycle: int):
+    """Advance ``rng`` by ``d`` cycles (traced, ``d >= 0``) of the
+    per-cycle affine ``x -> a_cycle*x + c_cycle`` via binary
+    exponentiation over the 32 bits of ``d`` — the closed form of ``d``
+    consecutive idle-cycle rng advances (powers of one affine map
+    commute, so the fold order is immaterial)."""
+    ra, rc = jnp.uint32(1), jnp.uint32(0)
+    pa, pc = jnp.uint32(a_cycle), jnp.uint32(c_cycle)
+    du = d.astype(jnp.uint32)
+    for i in range(32):
+        take = ((du >> jnp.uint32(i)) & jnp.uint32(1)) != jnp.uint32(0)
+        ra = jnp.where(take, pa * ra, ra)
+        rc = jnp.where(take, pa * rc + pc, rc)
+        pa, pc = pa * pa, pa * pc + pc
+    return ra * rng + rc
+
+
+def idle_advance(cfg: FrontendConfig, fs: FrontState, d, a_cycle: int,
+                 c_cycle: int, k_draws: int) -> FrontState:
+    """Apply ``d`` idle cycles' worth of frontend state change in one
+    step.  On a cycle with no insert attempt and no completion, the ONLY
+    frontend state that moves is the clamped accumulator refill and the
+    rng's ``k_draws`` unconditional draws — both closed-formable:
+    iterating ``a' = min(a + 256, cap)`` ``d`` times equals one clamped
+    add of ``256*d`` (the clamp commutes with a constant positive
+    addend), and the rng jump is :func:`lcg_jump`."""
+    if cfg.stream:
+        fs = fs._replace(accum_fp=jnp.minimum(
+            fs.accum_fp + jnp.int32(256) * d,
+            jnp.int32(cfg.max_backlog_fp)))
+    if k_draws:
+        fs = fs._replace(rng=lcg_jump(fs.rng, d, a_cycle, c_cycle))
+    return fs
+
+
+def arrival_horizon(cfg: FrontendConfig, fp: FrontParams, fs: FrontState,
+                    cur, replay=None, paced: bool = False):
+    """Earliest cycle ``>= cur`` at which the frontend could next attempt
+    an insert, assuming no intervening completions.  CONSERVATIVE — never
+    later than the true next attempt (undershooting merely executes an
+    idle cycle, which is always correct):
+
+    * probe: the serialized prober attempts at ``max(probe_next, cur)``
+      once not busy; while busy it can only unblock via a command issue,
+      which the controller horizon accounts for;
+    * stream (interval-accumulator gate, replay dep-holds ignored):
+      ``want`` first fires at the ``j``-th cycle from ``cur`` with
+      ``min(accum + 256*(j+1), cap) >= interval`` — never, if the cap
+      can't reach the interval;
+    * paced replay (captured ``arrive`` clocks): request ``seq`` is due
+      at its rebased arrival clock plus the wrap-lap offset — the exact
+      :func:`_replay_want` gate."""
+    h = HORIZON_MAX
+    if cfg.probes:
+        h = jnp.minimum(h, jnp.where(fs.probe_busy, HORIZON_MAX,
+                                     jnp.maximum(fs.probe_next, cur)))
+    if cfg.stream:
+        if paced:
+            arr_np = np.asarray(replay.arrive)
+            n = int(replay.chan.shape[0])
+            base = int(arr_np[0])
+            span = int(arr_np[-1]) - base
+            gap = max(span // max(n - 1, 1), 1)
+            arr = jnp.asarray(arr_np - base, jnp.int32)
+            idx = fs.seq % jnp.int32(n)
+            lap = fs.seq // jnp.int32(n)
+            hs = jnp.maximum(arr[idx] + lap * jnp.int32(span + gap), cur)
+        else:
+            need = fp.interval_fp - fs.accum_fp
+            j = jnp.maximum(
+                (need + jnp.int32(255)) // jnp.int32(256) - jnp.int32(1),
+                jnp.int32(0))
+            hs = jnp.where(fp.interval_fp > jnp.int32(cfg.max_backlog_fp),
+                           HORIZON_MAX, cur + j)
+        h = jnp.minimum(h, hs)
+    return h
+
+
 def absorb_locals(events: C.StepEvents) -> jnp.ndarray:
     """Reduce one group's completion events over its (local) channels to
     the ``(3,) int32`` vector ``[probes_done, requests_served,

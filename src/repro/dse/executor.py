@@ -181,7 +181,7 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
             for k in ("throughput_gbps", "latency_ns", "peak_gbps")}
     ints = {k: np.zeros((n,), np.int64)
             for k in ("reads_done", "writes_done", "probe_cnt", "deferred",
-                      "cycles")}
+                      "cycles", "scan_steps", "skipped_cycles")}
     cmd_counts: list = [None] * n
     cmd_names: list = [None] * n
     capture = spec.capture_traces
@@ -304,8 +304,18 @@ def execute(spec: SweepSpec, cache: E.RunCache | None = None,
         # group's last point (simulated, then dropped from the results)
         "padded_points": padded_total,
         "max_in_flight": max(1, int(max_in_flight)),
-        # dispatch vs collect wall attribution for the streamed pipeline
-        "profile": prof.report(),
+        # dispatch vs collect wall attribution for the streamed pipeline,
+        # plus what event-horizon fast-forward bought across the sweep
+        "profile": {
+            **prof.report(),
+            "fast_forward": {
+                "scan_steps": int(ints["scan_steps"].sum()),
+                "skipped_cycles": int(ints["skipped_cycles"].sum()),
+                "idle_fraction": round(
+                    float(ints["skipped_cycles"].sum())
+                    / max(float(ints["cycles"].sum()), 1.0), 4),
+            },
+        },
         # public RunCache accounting (RunCache.stats()) — cumulative over
         # the cache's lifetime, alongside the per-sweep deltas above
         "cache": cache.stats(),

@@ -105,6 +105,8 @@ class SweepResult:
     probe_cnt: np.ndarray               # (N,)
     deferred: np.ndarray                # (N,)
     cycles: np.ndarray                  # (N,)
+    scan_steps: np.ndarray              # (N,) scan-body executions
+    skipped_cycles: np.ndarray          # (N,) fast-forwarded idle cycles
     cmd_counts: list                    # per-point (n_cmds,) arrays (ragged)
     cmd_names: list                     # per-point command-name lists
     meta: dict = dataclasses.field(default_factory=dict)
@@ -175,7 +177,8 @@ class SweepResult:
 
     # -- persistence ------------------------------------------------------
     _COLUMNS = ("throughput_gbps", "latency_ns", "peak_gbps", "reads_done",
-                "writes_done", "probe_cnt", "deferred", "cycles")
+                "writes_done", "probe_cnt", "deferred", "cycles",
+                "scan_steps", "skipped_cycles")
 
     def save(self, path: str) -> str:
         """Persist to `<path>.npz` (columnar arrays) + `<path>.json`
@@ -203,8 +206,12 @@ class SweepResult:
     def load(cls, path: str) -> "SweepResult":
         base = path[:-4] if path.endswith(".npz") else path
         with np.load(base + ".npz") as z:
-            arrays = {k: z[k] for k in cls._COLUMNS}
+            arrays = {k: z[k] for k in cls._COLUMNS if k in z}
             padded = z["cmd_counts"]
+        # artifacts predating fast-forward: every cycle was a scan step
+        arrays.setdefault("scan_steps", np.array(arrays["cycles"]))
+        arrays.setdefault("skipped_cycles",
+                          np.zeros_like(np.asarray(arrays["cycles"])))
         with open(base + ".json") as f:
             doc = json.load(f)
         points = [_point_from_doc(p) for p in doc["points"]]

@@ -104,6 +104,8 @@ def profile_run(sim, n_cycles: int, repeats: int = 3, **run_kw) -> dict:
 
         {"first_call_s", "warm_s", "compile_s",       # first - warm
          "cycles_per_sec",                            # warm throughput
+         "scan_steps", "skipped_cycles",              # fast-forward
+         "idle_fraction",                             #   accounting
          "cache": {...}}                              # RunCache delta
 
     ``run_kw`` is forwarded to ``sim.run`` (interval/read_ratio/telemetry
@@ -111,16 +113,24 @@ def profile_run(sim, n_cycles: int, repeats: int = 3, **run_kw) -> dict:
     """
     prof = Profiler()
     with prof.span("first_call"):
-        jax.block_until_ready(sim.run(n_cycles, **run_kw))
+        out = jax.block_until_ready(sim.run(n_cycles, **run_kw))
     warm = []
     for _ in range(max(1, repeats)):
         t0 = time.perf_counter()
-        jax.block_until_ready(sim.run(n_cycles, **run_kw))
+        out = jax.block_until_ready(sim.run(n_cycles, **run_kw))
         warm.append(time.perf_counter() - t0)
     r = prof.report()
     first = r["spans"]["first_call"]["s"]
     best = min(warm)
+    stats = out[0] if isinstance(out, tuple) and not hasattr(
+        out, "to_dict") else out
+    skipped = int(stats.skipped_cycles)
     return {"first_call_s": round(first, 4), "warm_s": round(best, 4),
             "compile_s": round(max(first - best, 0.0), 4),
             "cycles_per_sec": round(n_cycles / best, 1) if best else None,
+            # event-horizon fast-forward accounting (0 skipped when off)
+            "scan_steps": int(stats.scan_steps),
+            "skipped_cycles": skipped,
+            "idle_fraction": round(skipped / n_cycles, 4) if n_cycles
+            else 0.0,
             "cache": r["cache"]}
